@@ -1,0 +1,50 @@
+"""Ablation (paper §5.4): merging-aware round-robin ordering — instances
+sharing the most bytes placed adjacently — vs plain ordering, at equal
+merging level.  The claim: ordering alone reduces per-cycle swap bytes
+because each swap only loads layers not already resident."""
+from repro.configs.vision_workloads import WORKLOADS
+from repro.serving.scheduler import Scheduler
+from repro.serving.simulator import simulate
+from repro.serving.workload import build_instances, memory_settings, workload_costs
+
+from benchmarks.common import emit
+
+
+def run():
+    from benchmarks.gemel_scale import surrogate_merge
+
+    rows = []
+    for name in WORKLOADS:
+        cap = memory_settings(name)["min"]
+        costs = workload_costs(name)
+        groups = surrogate_merge(name).committed_groups  # GEMEL-level sharing
+        out = {}
+        for ordered in [False, True]:
+            insts = build_instances(name, merged="groups", shared_groups=groups)
+            sched = Scheduler(insts, cap, costs, merged=ordered)
+            res = simulate(sched, {i.instance_id: 1 for i in insts},
+                           horizon_ms=15_000)
+            out[ordered] = res
+        rows.append({
+            "workload": name,
+            "swap_ms_plain": out[False].swap_ms_total,
+            "swap_ms_ordered": out[True].swap_ms_total,
+            "swap_reduction": 1 - out[True].swap_ms_total
+            / max(out[False].swap_ms_total, 1e-9),
+            "acc_plain": out[False].overall_accuracy,
+            "acc_ordered": out[True].overall_accuracy,
+        })
+    reds = [r["swap_reduction"] for r in rows]
+    acc_delta = [r["acc_ordered"] - r["acc_plain"] for r in rows]
+    return emit("ablation_ordering", rows, {
+        "swap_reduction_range": f"{100*min(reds):.0f}-{100*max(reds):.0f}%",
+        "accuracy_delta_range": f"{min(acc_delta):+.4f}..{max(acc_delta):+.4f}",
+        "finding": "under MRU eviction the adjacency chain can RAISE total "
+                   "swap ms while still improving effective accuracy (swaps "
+                   "land where frames are fresher) — the §5.4 benefit shows "
+                   "up in accuracy, not raw swap bytes, at GEMEL-level sharing",
+    })
+
+
+if __name__ == "__main__":
+    run()

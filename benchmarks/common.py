@@ -1,0 +1,41 @@
+"""Shared benchmark utilities: result table formatting + artifact dump."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Optional
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts", "benchmarks")
+
+
+def emit(name: str, rows: list, derived: Optional[dict] = None) -> dict:
+    """Print a compact CSV block and persist JSON."""
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    out = {"name": name, "rows": rows, "derived": derived or {}}
+    with open(os.path.join(ARTIFACTS, f"{name}.json"), "w") as f:
+        json.dump(out, f, indent=2, default=str)
+    print(f"\n== {name} ==")
+    if rows:
+        cols = list(rows[0].keys())
+        print(",".join(cols))
+        for r in rows:
+            print(",".join(_fmt(r[c]) for c in cols))
+    for k, v in (derived or {}).items():
+        print(f"# {k}: {_fmt(v)}")
+    return out
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.monotonic()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.monotonic() - self.t0

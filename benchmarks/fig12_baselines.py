@@ -1,0 +1,34 @@
+"""Paper Fig 12: GEMEL vs Optimal (accuracy-ignoring upper bound) vs
+Mainstream (stem sharing).  Paper: GEMEL within 9.3-29.0% of Optimal and
+5.9-52.3% larger than Mainstream."""
+from repro.configs.vision_workloads import WORKLOADS, workload_records
+from repro.core.groups import potential_savings
+
+from benchmarks.common import emit
+from benchmarks.gemel_scale import mainstream_savings, surrogate_merge
+
+
+def run():
+    rows = []
+    for name in WORKLOADS:
+        opt = potential_savings(workload_records(name))["fraction_saved"]
+        gem = surrogate_merge(name).fraction_saved
+        ms = mainstream_savings(name)["fraction_saved"]
+        rows.append({
+            "workload": name,
+            "optimal_pct": 100 * opt,
+            "gemel_pct": 100 * gem,
+            "mainstream_pct": 100 * ms,
+            "gap_to_optimal_pct": 100 * (opt - gem),
+            "gemel_minus_mainstream_pct": 100 * (gem - ms),
+        })
+    gaps = [r["gap_to_optimal_pct"] for r in rows]
+    deltas = [r["gemel_minus_mainstream_pct"] for r in rows]
+    return emit("fig12_baselines", rows, {
+        "gap_to_optimal_range": f"{min(gaps):.1f}-{max(gaps):.1f}% (paper 9.3-29.0%)",
+        "vs_mainstream_range": f"{min(deltas):.1f}-{max(deltas):.1f}% (paper 5.9-52.3%)",
+    })
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,152 @@
+"""§Roofline: three-term analysis per (arch x shape x mesh) from the dry-run
+artifacts (artifacts/dryrun/*.json).
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs           (197 TFLOP/s bf16)
+    memory     = HLO_bytes_per_device / HBM_bw               (819 GB/s)
+    collective = wire_bytes_per_device / ICI_link_bw         (50 GB/s)
+
+cost_analysis() is per-partition post-SPMD, so all three terms are already
+per-chip.  MODEL_FLOPS uses 6·N·D (train), 2·N·D (prefill) or 2·N·B (decode),
+with N_active for MoE; the ratio MODEL_FLOPS / (HLO_FLOPs x chips) exposes
+remat/redundancy waste (remat="full" implies a ~4/3 recompute factor on the
+forward, so ratios near 0.75 of the no-remat ideal are expected for train).
+"""
+import glob
+import json
+import os
+
+import jax
+import numpy as np
+
+from repro.configs.registry import load_arch
+from repro.models.registry import get_family
+
+from benchmarks.common import emit
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s
+LINK_BW = 50e9  # B/s per ICI link
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+_PARAM_CACHE: dict = {}
+
+
+def _param_counts(arch: str):
+    """(N_total, N_active) parameters."""
+    if arch in _PARAM_CACHE:
+        return _PARAM_CACHE[arch]
+    mod = load_arch(arch)
+    cfg = mod.full_config()
+    fam = get_family(mod.FAMILY)
+    shapes = jax.eval_shape(lambda: fam.init(cfg, jax.random.PRNGKey(0)))
+    n = sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(shapes))
+    n_active = n
+    if mod.FAMILY == "moe":
+        # subtract the inactive routed experts
+        expert_params = 0
+        for path, leaf in _flat(shapes):
+            if "/experts/" in path:
+                expert_params += int(np.prod(leaf.shape))
+        frac_active = cfg.top_k / cfg.n_experts
+        n_active = n - expert_params + int(expert_params * frac_active)
+    _PARAM_CACHE[arch] = (n, n_active)
+    return n, n_active
+
+
+def _flat(tree):
+    from repro.utils.tree import flatten_paths
+
+    return flatten_paths(tree).items()
+
+
+def model_flops(arch: str, shape_name: str, kind: str) -> float:
+    mod = load_arch(arch)
+    shape = mod.SHAPES[shape_name]
+    n, n_active = _param_counts(arch)
+    tokens = shape.global_batch * shape.seq_len
+    if kind == "train":
+        return 6.0 * n_active * tokens
+    if kind == "prefill":
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch  # decode: 1 new token/row
+
+
+def load_cells(tag: str = "") -> list:
+    """Scanned artifacts overlaid with cost probes when available.
+
+    Probes (``probe-<cell>.json``) carry loop-corrected flops/bytes/wire
+    (XLA counts while bodies once); memory_analysis comes from the scanned
+    run.  Cells without a probe are flagged ``source: scanned`` (their
+    compute/memory terms under-count loop bodies)."""
+    cells = {}
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        base = os.path.basename(f)
+        if base.startswith("probe-"):
+            continue
+        d = json.load(open(f))
+        d["source"] = "scanned"
+        cells[(d["arch"], d["shape"], d["mesh"])] = d
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, "probe-*.json"))):
+        p = json.load(open(f))
+        if not p.get("ok") or p.get("kind") == "skip":
+            continue
+        key = (p["arch"], p["shape"], p["mesh"])
+        if key in cells:
+            cells[key] = dict(
+                cells[key],
+                flops_per_device=p["flops_per_device"],
+                bytes_per_device=p["bytes_per_device"],
+                collective_wire_bytes=p["collective_wire_bytes"],
+                source="probe",
+            )
+    return list(cells.values())
+
+
+def analyse(cell: dict) -> dict:
+    arch, shape, mesh = cell["arch"], cell["shape"], cell["mesh"]
+    compute_s = cell["flops_per_device"] / PEAK_FLOPS
+    memory_s = cell["bytes_per_device"] / HBM_BW
+    collective_s = cell["collective_wire_bytes"] / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    bound = max(compute_s, memory_s, collective_s)
+    mf = model_flops(arch, shape, cell["kind"])
+    total_hlo = cell["flops_per_device"] * max(cell["n_devices"], 1)
+    useful = mf / total_hlo if total_hlo else 0.0
+    # roofline fraction: useful-compute time over the bound (how close the
+    # dominant term is to pure model compute at peak)
+    ideal_s = (mf / max(cell["n_devices"], 1)) / PEAK_FLOPS
+    frac = ideal_s / bound if bound > 0 else 0.0
+    return {
+        "arch": arch, "shape": shape, "mesh": mesh, "kind": cell["kind"],
+        "source": cell.get("source", "scanned"),
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s, "dominant": dominant,
+        "model_flops_ratio": useful, "roofline_fraction": frac,
+        "peak_gb": cell["peak_bytes_estimate"] / 1e9,
+        "fits_hbm": cell["peak_bytes_estimate"] <= 16e9,
+    }
+
+
+def run(tag: str = ""):
+    cells = [c for c in load_cells(tag) if c.get("ok") and c.get("kind") != "skip"]
+    rows = [analyse(c) for c in cells]
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    skipped = [c for c in load_cells(tag) if c.get("kind") == "skip"]
+    n_oom = sum(1 for r in rows if not r["fits_hbm"])
+    dom = {}
+    for r in rows:
+        dom[r["dominant"]] = dom.get(r["dominant"], 0) + 1
+    return emit("roofline" + (f"_{tag}" if tag else ""), rows, {
+        "cells_analysed": len(rows),
+        "cells_skipped_by_design": len(skipped),
+        "cells_over_16GB_hbm": n_oom,
+        "dominant_term_histogram": dom,
+    })
+
+
+if __name__ == "__main__":
+    import sys
+
+    run(sys.argv[1] if len(sys.argv) > 1 else "")

@@ -1,0 +1,68 @@
+"""Benchmark driver: one module per paper table/figure + the roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+--fast skips the retraining-based fig7 (minutes of CPU training).
+"""
+import argparse
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+
+    from benchmarks import (
+        ablation_ordering, fig3_nexus, fig4_commonality, fig5_potential,
+        fig9_powerlaw, fig10_e2e, fig11_savings, fig12_baselines,
+        fig13_incremental, fig14_bandwidth, lm_merging, roofline,
+        table1_memory, table2_times, table3_sweeps,
+    )
+
+    modules = [
+        ("table1_memory", table1_memory),
+        ("table2_times", table2_times),
+        ("fig3_nexus", fig3_nexus),
+        ("fig4_commonality", fig4_commonality),
+        ("fig5_potential", fig5_potential),
+        ("fig9_powerlaw", fig9_powerlaw),
+        ("fig10_e2e", fig10_e2e),
+        ("fig11_savings", fig11_savings),
+        ("fig12_baselines", fig12_baselines),
+        ("fig13_incremental", fig13_incremental),
+        ("fig14_bandwidth", fig14_bandwidth),
+        ("table3_sweeps", table3_sweeps),
+        ("lm_merging", lm_merging),
+        ("ablation_ordering", ablation_ordering),
+        ("roofline", roofline),
+    ]
+    if not args.fast:
+        from benchmarks import fig7_sharing_accuracy
+
+        modules.insert(6, ("fig7_sharing_accuracy", fig7_sharing_accuracy))
+
+    failures = []
+    for name, mod in modules:
+        if args.only and name != args.only:
+            continue
+        t0 = time.monotonic()
+        try:
+            mod.run()
+            print(f"# [{name}] ok in {time.monotonic() - t0:.1f}s")
+        except Exception as e:  # noqa: BLE001
+            import traceback
+
+            failures.append(name)
+            print(f"# [{name}] FAILED: {e}")
+            traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} benchmark(s) failed: {failures}")
+        sys.exit(1)
+    print("\nall benchmarks ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Paper Table 3: GEMEL's accuracy win vs time/space sharing under varied
+accuracy targets (95%->80% grows savings), FPS (30->10 shrinks wins), and
+SLA (100ms is more swap-sensitive than 400ms)."""
+from repro.serving.workload import build_instances, memory_settings, workload_costs
+from repro.serving.scheduler import Scheduler
+from repro.serving.simulator import simulate
+from repro.serving.profiler import profile_workload
+
+from benchmarks.common import emit
+from benchmarks.fig3_nexus import _run
+from benchmarks.gemel_scale import surrogate_merge
+
+REP = {"LP": "LP3", "MP": "MP2", "HP": "HP4"}
+
+
+def _gemel(name, cap, groups, sla_ms=100.0, fps=30.0):
+    costs = workload_costs(name)
+    insts = build_instances(name, merged="groups", shared_groups=groups)
+    sched = Scheduler(insts, cap, costs)
+    order = [i.instance_id for i in sched.order]
+    cbi = {i.instance_id: costs[i.model_id] for i in sched.order}
+    swap = sched.cycle_swap_bytes({i: 1 for i in order})
+    prof = profile_workload(order, cbi, swap, sla_ms=sla_ms, fps=fps)
+    sched = Scheduler(insts, cap, costs)
+    return simulate(sched, prof.batch_sizes, horizon_ms=20_000.0, fps=fps,
+                    sla_ms=sla_ms)
+
+
+def run():
+    rows = []
+    for cls, name in REP.items():
+        cap = memory_settings(name)["min"]
+        for variant, (target, fps, sla) in {
+            "default": (0.95, 30.0, 100.0),
+            "80pct_accuracy": (0.80, 30.0, 100.0),
+            "10fps": (0.95, 10.0, 100.0),
+            "400ms_sla": (0.95, 30.0, 400.0),
+        }.items():
+            groups = surrogate_merge(name, accuracy_target=target).committed_groups
+            nexus = _run(name, cap, merged="none", sla_ms=sla, fps=fps)
+            gem = _gemel(name, cap, groups, sla_ms=sla, fps=fps)
+            rows.append({
+                "class": cls, "workload": name, "variant": variant,
+                "nexus_acc": nexus.overall_accuracy,
+                "gemel_acc": gem.overall_accuracy,
+                "win": gem.overall_accuracy - nexus.overall_accuracy,
+            })
+    return emit("table3_sweeps", rows, {
+        "paper": "wins grow at 80% target and tighter SLA; shrink at 10 FPS",
+    })
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Drift detection + revert (paper §5.1 steps 4-5).
+
+    PYTHONPATH=src python examples/drift_and_revert.py
+
+Deploys a merged pair, simulates content drift on one feed (label function
+changes), shows the DriftMonitor catching the breach and reverting that
+query to its original weights while the other keeps its merged (cheap)
+configuration.
+"""
+import jax
+
+from repro.core import ParamStore, RegisteredModel, enumerate_groups, records_from_params
+from repro.core.drift import DriftMonitor
+from repro.data.synthetic import VisionStream
+from repro.models import vision as VI
+
+
+def main():
+    cfg = VI.SmallCNNConfig(task="classification", n_classes=4, depth=1,
+                            width=8, n_stages=2)
+    pa = VI.init_small_cnn(cfg, jax.random.PRNGKey(0))
+    pb = VI.init_small_cnn(cfg, jax.random.PRNGKey(1))
+    originals = {"A": pa, "B": pb}
+    store = ParamStore.from_models(dict(originals))
+    recs = records_from_params(pa, "A") + records_from_params(pb, "B")
+    for g in enumerate_groups(recs)[:3]:
+        store.merge_group(g)
+    print(f"deployed merged config: {len(store.shared_keys())} shared buffers")
+
+    regs = [
+        RegisteredModel(
+            m, lambda p, b: VI.small_cnn_loss(cfg, p, b),
+            lambda p, b: VI.small_cnn_accuracy(cfg, p, b),
+            lambda e: [], None, accuracy_target=0.4,
+            original_accuracy=0.5,
+        )
+        for m in ("A", "B")
+    ]
+    mon = DriftMonitor(store, originals, regs)
+
+    # periodic sampled frames from the edge: B's content drifted (new seed)
+    frames = {
+        "A": VisionStream(4, 64, seed=0).batch_at(0),
+        "B": VisionStream(4, 64, seed=999).batch_at(0),  # drifted
+    }
+    report = mon.check(frames)
+    print(f"sampled-frame accuracies: { {k: round(v, 3) for k, v in report.checked.items()} }")
+    print(f"breached: {report.breached or 'none'}")
+    if report.breached:
+        mon.revert(report)
+        print(f"reverted to original weights: {report.reverted}")
+        print(f"shared buffers remaining: {len(store.shared_keys())}")
+
+
+if __name__ == "__main__":
+    main()

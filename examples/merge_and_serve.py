@@ -1,0 +1,83 @@
+"""End-to-end driver: GEMEL vs time/space sharing on a paper workload.
+
+    PYTHONPATH=src python examples/merge_and_serve.py [--workload MP2]
+
+Reproduces the paper's core claim at workload scale via the discrete-event
+simulator (Table 1/2 cost model): the merged workload swaps less, processes
+more frames inside the SLA, and lands a higher effective accuracy — then
+serves a REAL reduced-scale merged pair through the jitted executor.
+"""
+import argparse
+import time
+
+import jax
+
+from repro.serving.executor import EdgeExecutor, Request
+from repro.serving.profiler import profile_workload
+from repro.serving.scheduler import Instance, Scheduler
+from repro.serving.simulator import simulate
+from repro.serving.workload import build_instances, memory_settings, workload_costs
+
+
+def simulated(workload: str):
+    print(f"== workload {workload}: simulator (paper Table 1/2 cost model) ==")
+    cap = memory_settings(workload)["min"]
+    costs = workload_costs(workload)
+    for merged in ["none", "optimal"]:
+        insts = build_instances(workload, merged=merged)
+        sched = Scheduler(insts, cap, costs, merged=(merged != "none"))
+        order = [i.instance_id for i in sched.order]
+        cbi = {i.instance_id: costs[i.model_id] for i in sched.order}
+        swap = sched.cycle_swap_bytes({i: 1 for i in order})
+        prof = profile_workload(order, cbi, swap, sla_ms=100.0)
+        sched = Scheduler(insts, cap, costs, merged=(merged != "none"))
+        res = simulate(sched, prof.batch_sizes, horizon_ms=20_000)
+        print(f"   {merged:8s} acc={res.overall_accuracy:.3f} "
+              f"processed={res.processed_fraction:.3f} "
+              f"swap={res.swap_ms_total:.0f}ms")
+
+
+def real_executor():
+    print("\n== real executor: merged pair of small models ==")
+    from repro.core import ParamStore, enumerate_groups, records_from_params
+    from repro.models import vision as VI
+    from repro.serving.costs import costs_for
+
+    cfg = VI.SmallCNNConfig(task="classification", n_classes=4, depth=1,
+                            width=8, n_stages=2)
+    pa = VI.init_small_cnn(cfg, jax.random.PRNGKey(0))
+    pb = VI.init_small_cnn(cfg, jax.random.PRNGKey(1))
+    store = ParamStore.from_models({"A": pa, "B": pb})
+    recs = records_from_params(pa, "A") + records_from_params(pb, "B")
+    for g in enumerate_groups(recs):
+        store.merge_group(g)  # Optimal merge (demo)
+
+    insts = []
+    for mid in ("A", "B"):
+        keys = store.keys_for(mid)
+        insts.append(Instance(mid, "tiny-yolo", frozenset(keys),
+                              {k: 1000 for k in keys}))
+    ex = EdgeExecutor(
+        store, insts,
+        {m: (lambda p, x, c=cfg: VI.small_cnn_forward(c, p, x)) for m in ("A", "B")},
+        capacity_bytes=10**9, costs={"tiny-yolo": costs_for("tiny-yolo")},
+    )
+    imgs = jax.random.normal(jax.random.PRNGKey(2), (1, 32, 32, 3))
+    t0 = time.monotonic()
+    for i in range(40):
+        now = time.monotonic() - t0
+        ex.submit(Request("A" if i % 2 == 0 else "B", imgs, now, now + 0.5))
+    stats = ex.serve(horizon_s=3.0, warmup=imgs)
+    print(f"   {stats}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", default="MP2")
+    args = ap.parse_args()
+    simulated(args.workload)
+    real_executor()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Reshard-on-load: restore a checkpoint into a *different* mesh.
+
+The checkpoint holds host numpy (manager.py), so resharding is sharding
+metadata only: compute the new PartitionSpecs from the partitioning rules on
+the new mesh and ``device_put`` each leaf.  Used by the elastic-scaling path
+(runtime/failures.py) and tested by round-tripping a train state across
+mesh shapes in tests/test_ckpt.py.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed.partitioning import param_shardings
+from repro.distributed.sharding import LogicalRules
+from repro.train.optimizer import OptState
+
+
+def train_state_shardings(state: Any, rules: LogicalRules):
+    from repro.train.trainer import state_shardings
+
+    return state_shardings(state, rules)
+
+
+def reshard_state(state: Any, rules: LogicalRules):
+    """Place a host train state onto the mesh in ``rules``."""
+    sh = train_state_shardings(state, rules)
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(np.asarray(x), s), state, sh
+    )
+
+
+def reshard_params(params: Any, rules: LogicalRules):
+    sh = param_shardings(params, rules)
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(np.asarray(x), s), params, sh
+    )

@@ -1,0 +1,157 @@
+"""Shared architecture-config machinery.
+
+Every ``configs/<arch_id>.py`` exposes:
+
+    ARCH_ID, FAMILY            identifiers ("dense" | "moe" | "ssm" | ...)
+    full_config()              the exact published config (dry-run only)
+    smoke_config()             reduced same-family config (CPU-runnable)
+    SHAPES                     {shape_name: ShapeSpec}
+    SKIP                       {shape_name: reason} for inapplicable cells
+
+``input_specs(cfg, family, shape)`` builds the ShapeDtypeStruct stand-ins the
+dry-run lowers against — weak-type-correct, shardable, zero allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+# The assigned LM shape set (identical across the 10 archs).
+LM_SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+FULL_ATTENTION_SKIP = (
+    "long_500k needs sub-quadratic attention; this arch is pure full "
+    "attention (O(S^2) prefill, O(S) KV per decode step) — skipped per the "
+    "assignment; see DESIGN.md §4."
+)
+
+
+def token_specs(batch: int, seq: int) -> dict:
+    return {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+    }
+
+
+def input_specs(cfg: Any, family: str, shape: ShapeSpec, extras: Optional[dict] = None) -> dict:
+    """ShapeDtypeStruct inputs for the step lowered for this (cfg, shape).
+
+    train  -> loss_fn(params, batch) inputs: the batch dict
+    prefill-> prefill(params, tokens, ...) inputs
+    decode -> decode_step(params, cache, tokens) inputs: cache built by the
+              launcher from cache_specs().
+    """
+    B, S = shape.global_batch, shape.seq_len
+    if family == "encdec":
+        if shape.kind == "train":
+            half = S // 2
+            return {
+                "src_embeds": jax.ShapeDtypeStruct((B, half, cfg.d_model), cfg.dtype),
+                "tokens": jax.ShapeDtypeStruct((B, half), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((B, half), jnp.int32),
+            }
+        if shape.kind == "prefill":
+            half = S // 2
+            return {
+                "src_embeds": jax.ShapeDtypeStruct((B, half, cfg.d_model), cfg.dtype),
+                "tokens": jax.ShapeDtypeStruct((B, half), jnp.int32),
+            }
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+
+    if family == "vlm":
+        P = cfg.n_patches
+        if shape.kind == "train":
+            return {
+                "patch_embeds": jax.ShapeDtypeStruct((B, P, cfg.d_model), cfg.dtype),
+                "tokens": jax.ShapeDtypeStruct((B, S - P), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((B, S - P), jnp.int32),
+            }
+        if shape.kind == "prefill":
+            return {
+                "patch_embeds": jax.ShapeDtypeStruct((B, P, cfg.d_model), cfg.dtype),
+                "tokens": jax.ShapeDtypeStruct((B, S - P), jnp.int32),
+            }
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+
+    # decoder-only LM families
+    if shape.kind == "train":
+        return token_specs(B, S)
+    if shape.kind == "prefill":
+        return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+
+
+def cache_specs(cfg: Any, family: str, shape: ShapeSpec) -> Optional[dict]:
+    """ShapeDtypeStruct stand-in for the decode cache (shape.kind=='decode')."""
+    if shape.kind != "decode":
+        return None
+    B, S = shape.global_batch, shape.seq_len
+    f32, i32 = jnp.float32, jnp.int32
+
+    if family in ("dense", "vlm"):
+        Hs, D, L_ = cfg.kv_stored_heads, cfg.head_dim, cfg.n_layers
+        kv = jax.ShapeDtypeStruct((L_, B, S, Hs, D), cfg.dtype)
+        return {"k": kv, "v": kv, "length": jax.ShapeDtypeStruct((), i32)}
+    if family == "moe":
+        Hs, D = cfg.kv_stored_heads, cfg.head_dim
+        nd = cfg.first_dense_layers
+        nm = cfg.n_layers - nd
+        kv = jax.ShapeDtypeStruct((nm, B, S, Hs, D), cfg.dtype)
+        out = {"k": kv, "v": kv, "length": jax.ShapeDtypeStruct((), i32)}
+        if nd:
+            kvd = jax.ShapeDtypeStruct((nd, B, S, Hs, D), cfg.dtype)
+            out["k_dense"] = kvd
+            out["v_dense"] = kvd
+        return out
+    if family == "ssm":
+        return {
+            "h": jax.ShapeDtypeStruct((cfg.n_layers, B, cfg.d_inner, cfg.d_state), f32),
+            "conv": jax.ShapeDtypeStruct(
+                (cfg.n_layers, B, cfg.d_conv - 1, cfg.d_inner), cfg.dtype
+            ),
+            "length": jax.ShapeDtypeStruct((), i32),
+        }
+    if family == "hybrid":
+        R = cfg.n_repeats
+        W = min(cfg.window, S)
+        Hs = cfg.kv_stored_heads
+        out: dict = {}
+        for i, kind in enumerate(cfg.pattern):
+            key = f"{i}_{kind}"
+            if kind == "rec":
+                out[key] = {
+                    "h": jax.ShapeDtypeStruct((R, B, cfg.d_rnn), f32),
+                    "conv": jax.ShapeDtypeStruct(
+                        (R, B, cfg.conv_width - 1, cfg.d_rnn), cfg.dtype
+                    ),
+                }
+            else:
+                kv = jax.ShapeDtypeStruct((R, B, W, Hs, cfg.head_dim), cfg.dtype)
+                out[key] = {"k": kv, "v": kv}
+        out["length"] = jax.ShapeDtypeStruct((), i32)
+        return out
+    if family == "encdec":
+        Ld, Hs, D = cfg.n_dec_layers, cfg.kv_stored_heads, cfg.head_dim
+        S_src = 1024  # cached cross-attn span
+        kv = jax.ShapeDtypeStruct((Ld, B, S, Hs, D), cfg.dtype)
+        cross = jax.ShapeDtypeStruct((Ld, B, S_src, Hs, D), cfg.dtype)
+        return {"k": kv, "v": kv, "cross": {"k": cross, "v": cross},
+                "length": jax.ShapeDtypeStruct((), i32)}
+    raise ValueError(family)

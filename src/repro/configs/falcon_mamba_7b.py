@@ -1,0 +1,28 @@
+"""falcon-mamba-7b [ssm] — Mamba-1, attention-free, 64L.
+[arXiv:2410.05355; unverified]"""
+import jax.numpy as jnp
+from repro.configs.base import LM_SHAPES
+from repro.models.ssm import MambaConfig
+
+ARCH_ID = "falcon-mamba-7b"
+FAMILY = "ssm"
+
+
+def full_config() -> MambaConfig:
+    return MambaConfig(
+        name=ARCH_ID, n_layers=64, d_model=4096, d_inner=8192, d_state=16,
+        d_conv=4, dt_rank=256, vocab_size=65024, norm="rmsnorm",
+        tie_embeddings=False, dtype=jnp.bfloat16, scan_layers=True,
+        remat_policy="full", chunk=256,
+    )
+
+
+def smoke_config() -> MambaConfig:
+    return MambaConfig(
+        name=ARCH_ID + "-smoke", n_layers=2, d_model=64, d_inner=128,
+        d_state=8, dt_rank=4, vocab_size=512, chunk=16, dtype=jnp.float32,
+    )
+
+
+SHAPES = dict(LM_SHAPES)
+SKIP: dict = {}  # attention-free: O(1)-state decode, long_500k RUNS

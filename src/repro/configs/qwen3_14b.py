@@ -1,0 +1,36 @@
+"""qwen3-14b [dense] — qk_norm, GQA kv=8.  [hf:Qwen/Qwen3-8B; hf]"""
+import jax.numpy as jnp
+from repro.configs.base import FULL_ATTENTION_SKIP, LM_SHAPES
+from repro.models.transformer import DenseLMConfig
+
+ARCH_ID = "qwen3-14b"
+FAMILY = "dense"
+
+
+def full_config() -> DenseLMConfig:
+    return DenseLMConfig(
+        name=ARCH_ID, n_layers=40, d_model=5120, n_heads=40, n_kv_heads=8,
+        head_dim=128, d_ff=17408, vocab_size=151936, rope_theta=1e6,
+        qk_norm=True, norm="rmsnorm", act="silu", gated_ffn=True,
+        dtype=jnp.bfloat16, scan_layers=True, remat_policy="full",
+        # kv_repl=1: Hq=40 admits stored-head counts {8, 40}, neither a
+        # multiple of TP=16 — decode shards the KV *sequence* axis instead
+        # (launch/dryrun.py picks kv-seq sharding when heads can't fill TP).
+        kv_repl=1,
+        # 40 heads don't divide TP=16 either, so per-block prefill scores
+        # replicate across 'model'; block_q=256 bounds the transient to
+        # ~2.7 GB (§Perf iteration 1b).
+        prefill_block_q=256,
+    )
+
+
+def smoke_config() -> DenseLMConfig:
+    return DenseLMConfig(
+        name=ARCH_ID + "-smoke", n_layers=2, d_model=64, n_heads=8,
+        n_kv_heads=2, head_dim=8, d_ff=128, vocab_size=512, qk_norm=True,
+        dtype=jnp.float32,
+    )
+
+
+SHAPES = dict(LM_SHAPES)
+SKIP = {"long_500k": FULL_ATTENTION_SKIP}

@@ -1,0 +1,37 @@
+"""recurrentgemma-9b [hybrid] — RG-LRU + local attention, ~1:2 attn:rec.
+
+38 layers: pattern of length 19 = 6x(rec,rec,attn) + trailing rec, repeated
+twice -> 26 recurrent + 12 local-attention layers (the spec's 1:2 ratio),
+MQA kv=1, window 2048.  [arXiv:2402.19427; unverified]
+"""
+import jax.numpy as jnp
+from repro.configs.base import LM_SHAPES, ShapeSpec
+from repro.models.griffin import GriffinConfig
+
+ARCH_ID = "recurrentgemma-9b"
+FAMILY = "hybrid"
+
+_PATTERN = ("rec", "rec", "attn") * 6 + ("rec",)  # 19 layers x 2 repeats = 38
+
+
+def full_config() -> GriffinConfig:
+    return GriffinConfig(
+        name=ARCH_ID, n_layers=38, pattern=_PATTERN,
+        d_model=4096, d_rnn=4096, n_heads=16, n_kv_heads=1, head_dim=256,
+        d_ff=12288, vocab_size=256000, window=2048, conv_width=4,
+        norm="rmsnorm", act="gelu_tanh", tie_embeddings=True,
+        logit_softcap=30.0, dtype=jnp.bfloat16, scan_layers=True,
+        remat_policy="full", chunk=256,
+    )
+
+
+def smoke_config() -> GriffinConfig:
+    return GriffinConfig(
+        name=ARCH_ID + "-smoke", n_layers=6, pattern=("rec", "rec", "attn"),
+        d_model=64, d_rnn=64, n_heads=4, n_kv_heads=1, head_dim=16,
+        d_ff=128, vocab_size=512, window=16, chunk=16, dtype=jnp.float32,
+    )
+
+
+SHAPES = dict(LM_SHAPES)
+SKIP: dict = {}  # sub-quadratic (window 2048 + O(1) recurrent state): all run

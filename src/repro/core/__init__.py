@@ -1,0 +1,23 @@
+"""GEMEL's contribution: model merging for memory-constrained multi-model
+inference — signatures, layer groups, the ParamStore weight-unification
+substrate, the incremental AIMD planner, joint retraining, validation and
+drift tracking."""
+from repro.core.groups import LayerGroup, enumerate_groups, potential_savings
+from repro.core.merging import MergeResult, MergeTrainer
+from repro.core.planner import IncrementalMerger, MergeEvent, PlanResult
+from repro.core.signatures import (
+    LayerRecord,
+    records_from_params,
+    records_from_spec,
+    signature_match_fraction,
+)
+from repro.core.store import ParamStore
+from repro.core.validation import RegisteredModel, meets_targets, validate
+
+__all__ = [
+    "LayerGroup", "LayerRecord", "ParamStore", "RegisteredModel",
+    "IncrementalMerger", "MergeEvent", "MergeResult", "MergeTrainer",
+    "PlanResult", "enumerate_groups", "potential_savings",
+    "records_from_params", "records_from_spec", "signature_match_fraction",
+    "meets_targets", "validate",
+]

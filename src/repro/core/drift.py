@@ -1,0 +1,56 @@
+"""Data-drift tracking (§5.1 steps 4-5).
+
+Edge boxes periodically sample frames; the cloud runs the *original* models
+on them and compares against the merged models' outputs.  If any query's
+accuracy falls below target, edge inference reverts to the original weights
+for that model and merging resumes from the previously deployed state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+from repro.core.store import ParamStore
+from repro.core.validation import RegisteredModel
+
+
+@dataclasses.dataclass
+class DriftReport:
+    checked: dict  # model_id -> accuracy vs original on sampled data
+    breached: set  # model_ids under target
+    reverted: set  # model_ids whose edge inference switched to originals
+
+
+class DriftMonitor:
+    def __init__(self, store: ParamStore, originals: dict, models: list):
+        """originals: {model_id: original params pytree} kept cloud-side."""
+        self.store = store
+        self.originals = originals
+        self.models = {m.model_id: m for m in models}
+
+    def check(self, sampled_batches: dict) -> DriftReport:
+        """sampled_batches: {model_id: batch of recent edge frames}."""
+        checked, breached = {}, set()
+        for mid, batch in sampled_batches.items():
+            m = self.models[mid]
+            merged_params = self.store.materialize(mid)
+            acc = float(m.accuracy_fn(merged_params, batch))
+            checked[mid] = acc
+            if acc < m.absolute_target:
+                breached.add(mid)
+        return DriftReport(checked, breached, set())
+
+    def revert(self, report: DriftReport) -> DriftReport:
+        """Rebind breached models to their original private weights; shared
+        buffers survive for the remaining members."""
+        from repro.utils.tree import flatten_paths
+
+        for mid in report.breached:
+            flat = flatten_paths(self.originals[mid])
+            for path, leaf in flat.items():
+                key = f"{mid}:{path}"
+                self.store.buffers[key] = leaf
+                self.store.bindings[mid][path] = key
+            report.reverted.add(mid)
+        self.store._gc_unreferenced()
+        return report

@@ -1,0 +1,105 @@
+"""Layer groups (§5.3): all appearances of one architectural signature across
+a workload's models, sorted memory-forward.
+
+    group memory  = leaf_bytes * n_appearances        (what it costs today)
+    group savings = leaf_bytes * (n_appearances - 1)  (what merging saves)
+
+GEMEL sorts by group *memory* — "a 100 MB layer that appears in 4 models
+would be earlier in the list than a 120 MB layer that appears 3 times".
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Iterable, Optional
+
+from repro.core.signatures import LayerRecord
+
+
+@dataclasses.dataclass
+class LayerGroup:
+    signature: tuple
+    records: list  # list[LayerRecord], >= 2 entries, possibly across models
+
+    @property
+    def leaf_bytes(self) -> int:
+        return self.records[0].bytes
+
+    @property
+    def memory(self) -> int:
+        return self.leaf_bytes * len(self.records)
+
+    def columns(self) -> list:
+        """Merging is ACROSS models only (paper §4): a model's k-th
+        appearance of this signature merges with other models' k-th
+        appearances (position-ordered).  Each column becomes one shared
+        buffer; a model's internal duplicates stay distinct."""
+        from collections import defaultdict
+
+        by_model = defaultdict(list)
+        for r in sorted(self.records, key=lambda r: r.position):
+            by_model[r.model_id].append(r)
+        ncols = max(len(v) for v in by_model.values())
+        cols = [[] for _ in range(ncols)]
+        for rs in by_model.values():
+            for k, r in enumerate(rs):
+                cols[k].append(r)
+        return cols
+
+    @property
+    def savings(self) -> int:
+        """bytes saved = leaf_bytes x (appearances - max per-model count):
+        the workload still needs one buffer per column."""
+        return sum(
+            self.leaf_bytes * (len(c) - 1) for c in self.columns()
+        )
+
+    @property
+    def models(self) -> set:
+        return {r.model_id for r in self.records}
+
+    def drop_earliest_half(self) -> "LayerGroup":
+        """AIMD multiplicative decrease: drop the half of appearances closest
+        to the *start* of their models (they typically hold less memory and
+        are harder to share — §5.3)."""
+        ordered = sorted(self.records, key=lambda r: r.position)
+        keep = ordered[len(ordered) // 2 :]
+        return LayerGroup(self.signature, keep)
+
+    def without_models(self, model_ids: set) -> "LayerGroup":
+        return LayerGroup(
+            self.signature, [r for r in self.records if r.model_id not in model_ids]
+        )
+
+
+def enumerate_groups(
+    records: Iterable[LayerRecord], min_appearances: int = 2
+) -> list[LayerGroup]:
+    """Cluster records by signature; keep groups with >= min_appearances,
+    sorted descending by workload memory (memory-forward order)."""
+    by_sig: dict[tuple, list] = defaultdict(list)
+    for r in records:
+        by_sig[r.signature].append(r)
+    groups = [
+        LayerGroup(sig, recs)
+        for sig, recs in by_sig.items()
+        if len(recs) >= min_appearances
+    ]
+    groups.sort(key=lambda g: (-g.memory, g.signature))
+    return groups
+
+
+def potential_savings(records: Iterable[LayerRecord]) -> dict:
+    """Fig 5 'Optimal': share every architecturally identical layer,
+    disregarding weights/accuracy.  Returns totals in bytes."""
+    records = list(records)
+    total = sum(r.bytes for r in records)
+    groups = enumerate_groups(records)
+    saved = sum(g.savings for g in groups)
+    return {
+        "total_bytes": total,
+        "saved_bytes": saved,
+        "merged_bytes": total - saved,
+        "fraction_saved": saved / total if total else 0.0,
+        "n_groups": len(groups),
+    }

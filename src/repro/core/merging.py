@@ -1,0 +1,178 @@
+"""Joint retraining of a merging configuration (§5.3 "Accelerating
+retraining").
+
+Given a :class:`ParamStore` whose bindings already reflect the candidate
+configuration (shared keys in place), jointly train every involved model
+end-to-end: the loss is the mean of per-model losses, so gradients from all
+models sum into shared buffers (store.py makes this automatic).
+
+Adaptive behaviours from the paper:
+* **early success** — once a model's accuracy is within ``es_threshold`` of
+  its target, shrink the amount of data trained per epoch, inversely
+  proportional to gap/lift;
+* **early failure** — a model whose accuracy has not improved for
+  ``ef_epochs`` consecutive epochs (while below target) is evicted from the
+  attempt and reported to the planner.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.store import ParamStore
+from repro.core.validation import RegisteredModel, meets_targets, validate
+from repro.train.optimizer import AdamW
+from repro.utils.tree import unflatten_paths
+
+
+@dataclasses.dataclass
+class MergeResult:
+    success: bool
+    accuracies: dict
+    failed_models: set
+    epochs_used: int
+    wall_time: float
+    data_fraction_log: list
+
+
+@dataclasses.dataclass
+class MergeTrainer:
+    optimizer: Any = None
+    max_epochs: int = 10
+    es_threshold: float = 0.02  # start shrinking data within 2% of target
+    ef_epochs: int = 2
+    min_delta: float = 1e-3  # minimum accuracy lift that counts as progress
+    min_data_fraction: float = 0.25
+
+    def __post_init__(self):
+        if self.optimizer is None:
+            self.optimizer = AdamW(lr=3e-4)
+
+    # -- jitted joint step ----------------------------------------------------
+
+    def _build_step(self, store: ParamStore, models: list):
+        bindings = {m.model_id: dict(store.bindings[m.model_id]) for m in models}
+        by_id = {m.model_id: m for m in models}
+
+        def materialize(mid, buffers):
+            return unflatten_paths({p: buffers[k] for p, k in bindings[mid].items()})
+
+        def joint_loss(buffers, batches):
+            total = 0.0
+            for mid in sorted(bindings.keys()):
+                params = materialize(mid, buffers)
+                total = total + by_id[mid].loss_fn(params, batches[mid])
+            return total / len(bindings)
+
+        opt = self.optimizer
+
+        @jax.jit
+        def step(buffers, opt_state, batches):
+            loss, grads = jax.value_and_grad(joint_loss)(buffers, batches)
+            buffers, opt_state = opt.update(grads, opt_state, buffers)
+            return buffers, opt_state, loss
+
+        return step, bindings
+
+    # -- main loop -------------------------------------------------------------
+
+    def train(self, store: ParamStore, models: list) -> MergeResult:
+        t0 = time.monotonic()
+        active = list(models)
+        failed: set = set()
+        data_frac = {m.model_id: 1.0 for m in models}
+        frac_log: list = []
+        stall = {m.model_id: 0 for m in models}
+        prev_acc = validate(store, models)
+        last_accs = dict(prev_acc)
+
+        epoch = 0
+        step = opt_state = None
+        active_ids: tuple = ()
+        while epoch < self.max_epochs and active:
+            # (re)build the jitted step + optimizer state only when the set of
+            # active models changes — Adam moments persist across epochs.
+            if tuple(m.model_id for m in active) != active_ids:
+                step, bindings = self._build_step(store, active)
+                trainable = sorted({k for b in bindings.values() for k in b.values()})
+                buffers = {k: store.buffers[k] for k in trainable}
+                opt_state = self.optimizer.init(buffers)
+                active_ids = tuple(m.model_id for m in active)
+
+            # one epoch: per-model batch streams, truncated by data_frac.
+            # Models with reduced data cycle their shortened stream; the
+            # epoch shrinks only when EVERY model is in early-success.
+            streams = {}
+            for m in active:
+                batches = list(m.train_batches(epoch))
+                n = max(1, int(len(batches) * data_frac[m.model_id]))
+                streams[m.model_id] = batches[:n]
+            n_steps = max(len(s) for s in streams.values())
+            for i in range(n_steps):
+                batch_dict = {mid: streams[mid][i % len(streams[mid])] for mid in streams}
+                buffers, opt_state, loss = step(buffers, opt_state, batch_dict)
+            store.buffers.update(buffers)
+            epoch += 1
+
+            accs = validate(store, active)
+            last_accs.update(accs)
+            frac_log.append(dict(data_frac))
+
+            if meets_targets(accs, active):
+                return MergeResult(True, last_accs, failed, epoch,
+                                   time.monotonic() - t0, frac_log)
+
+            # Early-failure is *relative*: a model stalls only if it made no
+            # progress while other below-target models did (paper: "not
+            # improving at the same pace as the rest").
+            lifts = {m.model_id: accs[m.model_id] - prev_acc.get(m.model_id, 0.0)
+                     for m in active}
+            below = [m for m in active if accs[m.model_id] < m.absolute_target]
+            others_progress = {
+                m.model_id: any(
+                    lifts[o.model_id] > self.min_delta
+                    for o in below if o.model_id != m.model_id
+                )
+                for m in active
+            }
+            still_active = []
+            for m in active:
+                mid = m.model_id
+                lift, gap = lifts[mid], m.absolute_target - accs[mid]
+                if gap <= 0:
+                    # met target: keep training (others may pull it down) but
+                    # with minimal data.
+                    data_frac[mid] = self.min_data_fraction
+                    still_active.append(m)
+                elif gap <= self.es_threshold:
+                    # early success: data inversely proportional to gap/lift
+                    ratio = gap / max(lift, 1e-4)
+                    data_frac[mid] = float(
+                        jnp.clip(ratio, self.min_data_fraction, 1.0)
+                    )
+                    still_active.append(m)
+                else:
+                    if lift <= self.min_delta and others_progress[mid] and epoch > 1:
+                        stall[mid] += 1
+                    else:
+                        stall[mid] = 0
+                    if stall[mid] >= self.ef_epochs:
+                        failed.add(mid)  # early failure: evict from attempt
+                    else:
+                        still_active.append(m)
+                prev_acc[mid] = accs[mid]
+            active = still_active
+            if failed:
+                break  # report to planner; it decides pruning vs. discard
+
+        accs = validate(store, models)
+        last_accs.update(accs)
+        ok = meets_targets(
+            {m.model_id: accs[m.model_id] for m in models if m.model_id not in failed},
+            [m for m in models if m.model_id not in failed],
+        ) and not failed
+        return MergeResult(ok, last_accs, failed, epoch, time.monotonic() - t0, frac_log)

@@ -1,0 +1,89 @@
+"""Architectural signatures — the paper's notion of "architecturally
+identical" layers (§4.1): two layers can be merged iff their structural
+identity matches (op kind + every shape hyperparameter), *excluding* weights.
+
+Two sources of layers:
+
+* :class:`repro.models.vision.ModelSpec` descriptors — each ``LayerSpec``
+  is one layer; signature = (kind, shape).
+* live parameter pytrees (LM zoo / small CNNs) — each leaf is one layer;
+  signature = (semantic kind derived from the path tail, shape, dtype).
+  For scan-stacked leaves (leading layer axis) the caller may ask for
+  *sliced* records so each of the L stacked layers is its own appearance.
+
+A :class:`LayerRecord` is one appearance of one layer in one model; the
+grouping machinery (groups.py) clusters records by signature.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Iterable, Optional
+
+import numpy as np
+
+from repro.models.vision import ModelSpec
+from repro.utils.tree import flatten_paths, leaf_bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerRecord:
+    model_id: str
+    path: str  # addressable path within the model ("layer name")
+    signature: tuple  # hashable structural identity
+    bytes: int
+    position: float  # 0..1 normalised position within the model (start→end)
+
+    @property
+    def key(self) -> tuple:
+        return (self.model_id, self.path)
+
+
+def _kind_from_path(path: str) -> str:
+    """Semantic layer kind = path with numeric segments stripped, so
+    ``blocks/3/attn/wq`` and ``blocks/7/attn/wq`` share a kind while
+    ``blocks/3/attn/wq`` vs ``blocks/3/mlp/w_up`` do not."""
+    parts = [p for p in path.split("/") if not p.isdigit()]
+    return "/".join(parts)
+
+
+def records_from_spec(spec: ModelSpec, model_id: Optional[str] = None) -> list[LayerRecord]:
+    mid = model_id or spec.name
+    n = max(len(spec.layers), 1)
+    return [
+        LayerRecord(mid, l.name, l.signature, l.bytes, i / n)
+        for i, l in enumerate(spec.layers)
+    ]
+
+
+def records_from_params(
+    params: Any, model_id: str, include: Optional[Iterable[str]] = None
+) -> list[LayerRecord]:
+    """One record per param leaf.  ``include`` optionally filters paths
+    (e.g. exclude embeddings from merging consideration)."""
+    flat = flatten_paths(params)
+    paths = sorted(flat.keys())
+    n = max(len(paths), 1)
+    out = []
+    for i, path in enumerate(paths):
+        if include is not None and not any(path.startswith(p) for p in include):
+            continue
+        leaf = flat[path]
+        sig = (
+            _kind_from_path(path),
+            tuple(getattr(leaf, "shape", ())),
+            str(getattr(leaf, "dtype", "float32")),
+        )
+        out.append(LayerRecord(model_id, path, sig, leaf_bytes(leaf), i / n))
+    return out
+
+
+def signature_match_fraction(a: list[LayerRecord], b: list[LayerRecord]) -> float:
+    """Fig 4 metric: fraction of layers architecturally identical across a
+    model pair = matched / max(len(a), len(b)), where matching is multiset
+    intersection on signatures."""
+    from collections import Counter
+
+    ca = Counter(r.signature for r in a)
+    cb = Counter(r.signature for r in b)
+    matched = sum((ca & cb).values())
+    return matched / max(len(a), len(b), 1)

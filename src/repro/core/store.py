@@ -1,0 +1,142 @@
+"""ParamStore — the weight-unification substrate (DESIGN.md A3).
+
+A store holds *physical* buffers keyed by string ids; each model has a
+*binding map* ``{leaf_path: store_key}``.  Unmerged models bind every path to
+a private key ``"<model>:<path>"``.  Merging a :class:`LayerGroup` rebinds all
+member paths to one shared key, initialised from a donor member's weights
+(§5.3: "selects initial weights for the newly added group from a random model
+that includes that layer").
+
+Because :func:`materialize` is pure index-free dict lookup, ``jax.grad``
+through it automatically *sums* gradients from every model into shared
+buffers — joint retraining needs no parameter-server machinery.
+
+The store also gives exact memory accounting: resident bytes = unique
+buffers, which is precisely what merging saves on the edge box.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.core.groups import LayerGroup
+from repro.utils.tree import flatten_paths, leaf_bytes, unflatten_paths
+
+
+def _private_key(model_id: str, path: str) -> str:
+    return f"{model_id}:{path}"
+
+
+@dataclasses.dataclass
+class ParamStore:
+    buffers: dict  # store_key -> array
+    bindings: dict  # model_id -> {path: store_key}
+
+    # -- construction ---------------------------------------------------------
+
+    @classmethod
+    def from_models(cls, models: dict) -> "ParamStore":
+        """models: {model_id: params_pytree}."""
+        buffers: dict = {}
+        bindings: dict = {}
+        for mid, params in models.items():
+            flat = flatten_paths(params)
+            bindings[mid] = {}
+            for path, leaf in flat.items():
+                key = _private_key(mid, path)
+                buffers[key] = leaf
+                bindings[mid][path] = key
+        return cls(buffers, bindings)
+
+    # -- merging --------------------------------------------------------------
+
+    def merge_group(self, group: LayerGroup, donor: Optional[tuple] = None,
+                    group_id: Optional[str] = None) -> list:
+        """Rebind the group's appearances to shared buffers, COLUMN-wise:
+        merging is across models only (paper §4) — each model's k-th
+        appearance shares with other models' k-th appearances; a model's
+        internal duplicates stay distinct.  The first record of each column
+        donates the initial weights (§5.3 'from a random model').  Returns
+        the shared keys created."""
+        base = group_id or f"shared:{abs(hash(group.signature)) % 10**12}"
+        keys = []
+        for ci, col in enumerate(group.columns()):
+            if len(col) < 2:
+                continue  # single appearance: nothing to share
+            gid = f"{base}:c{ci}"
+            d = donor if donor and ci == 0 else (col[0].model_id, col[0].path)
+            donor_key = self.bindings[d[0]][d[1]]
+            self.buffers[gid] = self.buffers[donor_key]
+            for r in col:
+                old = self.bindings[r.model_id][r.path]
+                self.bindings[r.model_id][r.path] = gid
+                if old != gid:
+                    self._gc_key(old)
+            keys.append(gid)
+        return keys
+
+    def unmerge(self, group: LayerGroup) -> None:
+        """Give every member back a private copy of its current weights
+        (used when reverting a failed/drifted configuration)."""
+        for r in group.records:
+            cur = self.bindings[r.model_id][r.path]
+            priv = _private_key(r.model_id, r.path)
+            self.buffers[priv] = self.buffers[cur]
+            self.bindings[r.model_id][r.path] = priv
+        # shared buffer may now be orphaned
+        for r in group.records:
+            self._gc_unreferenced()
+            break
+
+    def _gc_key(self, key: str) -> None:
+        for binding in self.bindings.values():
+            if key in binding.values():
+                return
+        self.buffers.pop(key, None)
+
+    def _gc_unreferenced(self) -> None:
+        live = {k for b in self.bindings.values() for k in b.values()}
+        for k in list(self.buffers.keys()):
+            if k not in live:
+                del self.buffers[k]
+
+    # -- materialisation ------------------------------------------------------
+
+    def materialize(self, model_id: str, buffers: Optional[dict] = None) -> dict:
+        """Nested params for one model.  Pass ``buffers`` explicitly inside a
+        jitted/grad'd function so tracing sees them as inputs."""
+        buffers = self.buffers if buffers is None else buffers
+        binding = self.bindings[model_id]
+        return unflatten_paths({p: buffers[k] for p, k in binding.items()})
+
+    # -- accounting -----------------------------------------------------------
+
+    def resident_bytes(self, model_ids: Optional[list] = None) -> int:
+        """Unique buffer bytes for a set of models (the edge-box footprint)."""
+        ids = model_ids if model_ids is not None else list(self.bindings.keys())
+        keys = {self.bindings[m][p] for m in ids for p in self.bindings[m]}
+        return sum(leaf_bytes(self.buffers[k]) for k in keys)
+
+    def model_bytes(self, model_id: str) -> int:
+        return sum(
+            leaf_bytes(self.buffers[k]) for k in set(self.bindings[model_id].values())
+        )
+
+    def shared_keys(self) -> set:
+        counts: dict[str, int] = {}
+        for b in self.bindings.values():
+            for k in set(b.values()):
+                counts[k] = counts.get(k, 0) + 1
+        return {k for k, c in counts.items() if c > 1}
+
+    def incremental_load_bytes(self, next_model: str, resident: set) -> int:
+        """Bytes that must be DMA'd to run ``next_model`` given the set of
+        store keys already resident — the merging-aware swap cost (§5.4)."""
+        needed = set(self.bindings[next_model].values())
+        return sum(leaf_bytes(self.buffers[k]) for k in needed - resident)
+
+    def keys_for(self, model_id: str) -> set:
+        return set(self.bindings[model_id].values())

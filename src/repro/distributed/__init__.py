@@ -1,0 +1,7 @@
+from repro.distributed.sharding import (
+    LogicalRules,
+    constrain,
+    logical_to_spec,
+    use_rules,
+    current_rules,
+)

@@ -1,0 +1,85 @@
+"""HLO collective accounting — parses lowered/compiled HLO text and sums
+operand bytes of every collective op.  This is the §Roofline collective term
+(cost_analysis does not expose collective bytes).
+
+Conservative model: every collective's *output* bytes are assumed to cross
+chip boundaries once; ring algorithms move ~2x for all-gather/reduce-scatter
+composites, which we fold into per-op factors below.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Optional
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"(\w[\w.-]*)\s*=\s*(\([^)]*\)|[\w\[\],{}<>/ ]+?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+# bytes-on-wire factor per output byte (ring algorithms, large-N limit)
+_WIRE_FACTOR = {
+    "all-gather": 1.0,       # each chip receives (N-1)/N of the output
+    "all-reduce": 2.0,       # reduce-scatter + all-gather
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def _shape_bytes(shape_text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_text):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    by_kind_bytes: dict  # op kind -> raw output bytes
+    by_kind_count: dict
+    wire_bytes: int  # factor-adjusted bytes on the wire
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.by_kind_bytes.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    by_bytes: dict = defaultdict(int)
+    by_count: dict = defaultdict(int)
+    wire = 0.0
+    seen_done = set()
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        name, shape_text, kind = m.group(1), m.group(2), m.group(3)
+        # avoid double counting async start/done pairs: count 'start' and the
+        # sync form; skip 'done'
+        tail = hlo_text[m.end() - 1 : m.end()]
+        full = m.group(0)
+        if "-done(" in full:
+            continue
+        b = _shape_bytes(shape_text)
+        by_bytes[kind] += b
+        by_count[kind] += 1
+        wire += b * _WIRE_FACTOR[kind]
+    return CollectiveStats(dict(by_bytes), dict(by_count), int(wire))

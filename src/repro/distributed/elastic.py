@@ -1,0 +1,57 @@
+"""Elastic scaling: remap a training/serving job onto a different mesh.
+
+On node failure (or scale-up) the job restarts on a new mesh shape; params
+and optimizer state are *resharded on load* — the checkpoint stores plain
+host arrays (dedup-aware, see ckpt/manager.py) and this module computes the
+new shardings and places shards.  At 1000+ nodes this is the standard
+recover-in-minutes path; no in-flight migration is attempted.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.distributed.partitioning import param_specs
+from repro.distributed.sharding import LogicalRules
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    """A candidate mesh for the surviving device set."""
+
+    shape: tuple
+    axes: tuple
+
+    @property
+    def n_devices(self) -> int:
+        return int(np.prod(self.shape))
+
+
+def plan_for_devices(n_devices: int, model_parallel: int, multi_pod_size: int = 0) -> MeshPlan:
+    """Largest usable mesh given surviving devices: keep the model axis fixed
+    (TP degree is a property of the model config), shrink data/pod axes."""
+    if n_devices < model_parallel:
+        raise ValueError(
+            f"{n_devices} devices cannot host model-parallel degree {model_parallel}"
+        )
+    data = n_devices // model_parallel
+    if multi_pod_size and data > multi_pod_size:
+        pods = data // multi_pod_size
+        return MeshPlan((pods, multi_pod_size, model_parallel), ("pod", "data", "model"))
+    return MeshPlan((data, model_parallel), ("data", "model"))
+
+
+def reshard_tree(tree, rules: LogicalRules):
+    """Place a host-resident pytree onto the mesh described by ``rules``.
+
+    Works leaf-by-leaf with ``jax.device_put``; GSPMD handles the layout.
+    """
+    from repro.distributed.partitioning import param_shardings
+
+    shardings = param_shardings(tree, rules)
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(np.asarray(x), s), tree, shardings
+    )

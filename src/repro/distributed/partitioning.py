@@ -1,0 +1,150 @@
+"""Parameter partitioning: leaf path + shape -> logical axes -> PartitionSpec.
+
+The LM zoo stores parameters as nested dicts; this module classifies each
+leaf by its path tail (MaxText-style naming conventions) and assigns logical
+axes, which :class:`repro.distributed.sharding.LogicalRules` resolves against
+the active mesh.  Production rules (launch/mesh.py):
+
+    embed_fsdp -> "data"     (ZeRO-3 parameter sharding)
+    tensor     -> "model"    (TP: heads / d_ff / vocab)
+    expert     -> "model"    (EP for MoE expert leaves)
+    vocab      -> "model"
+    layers     -> None       (the stacked-scan layer axis is never sharded)
+
+Divisibility guard: an axis that does not divide its mesh extent is dropped
+(replicated) rather than erroring — the dry-run proves the real configs
+divide where it matters.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import LogicalRules
+from repro.utils.tree import flatten_paths, unflatten_paths
+
+# (path-suffix pattern, logical axes for the *trailing* dims). Leading dims
+# not covered by the pattern (e.g. the stacked-layer axis, expert axis in a
+# 4D expert leaf) are handled separately.
+_RULES: list = [
+    # embeddings / unembeddings
+    ("embed/table", ("vocab", "embed_fsdp")),
+    ("lm_head/w", ("embed_fsdp", "vocab")),
+    # attention projections
+    ("attn/wq", ("embed_fsdp", "tensor")),
+    ("attn/wk", ("embed_fsdp", "tensor")),
+    ("attn/wv", ("embed_fsdp", "tensor")),
+    ("attn/wo", ("tensor", "embed_fsdp")),
+    ("self_attn/wq", ("embed_fsdp", "tensor")),
+    ("self_attn/wk", ("embed_fsdp", "tensor")),
+    ("self_attn/wv", ("embed_fsdp", "tensor")),
+    ("self_attn/wo", ("tensor", "embed_fsdp")),
+    ("cross_attn/wq", ("embed_fsdp", "tensor")),
+    ("cross_attn/wk", ("embed_fsdp", "tensor")),
+    ("cross_attn/wv", ("embed_fsdp", "tensor")),
+    ("cross_attn/wo", ("tensor", "embed_fsdp")),
+    # FFN
+    ("mlp/w_gate", ("embed_fsdp", "tensor")),
+    ("mlp/w_up", ("embed_fsdp", "tensor")),
+    ("mlp/w_down", ("tensor", "embed_fsdp")),
+    ("shared/w_gate", ("embed_fsdp", "tensor")),
+    ("shared/w_up", ("embed_fsdp", "tensor")),
+    ("shared/w_down", ("tensor", "embed_fsdp")),
+    # MoE experts: (E, d, f)/(E, f, d) — expert axis sharded, others follow
+    ("experts/w_gate", ("expert", "embed_fsdp", None)),
+    ("experts/w_up", ("expert", "embed_fsdp", None)),
+    ("experts/w_down", ("expert", None, "embed_fsdp")),
+    ("router/w", ("embed_fsdp", None)),
+    # Mamba mixer
+    ("mixer/in_proj/w", ("embed_fsdp", "tensor")),
+    ("mixer/out_proj/w", ("tensor", "embed_fsdp")),
+    ("mixer/x_proj/w", ("tensor", None)),
+    ("mixer/dt_proj/w", (None, "tensor")),
+    ("mixer/conv/w", (None, "tensor")),
+    ("mixer/conv/b", ("tensor",)),
+    ("mixer/A_log", ("tensor", None)),
+    ("mixer/D", ("tensor",)),
+    # Griffin recurrent block
+    ("rec/in_x/w", ("embed_fsdp", "tensor")),
+    ("rec/in_gate/w", ("embed_fsdp", "tensor")),
+    ("rec/out_proj/w", ("tensor", "embed_fsdp")),
+    ("rec/conv/w", (None, "tensor")),
+    ("rec/conv/b", ("tensor",)),
+    ("rec/rglru/w_a", ("tensor", None, None)),  # block-diagonal: (nb, bw, bw)
+    ("rec/rglru/w_x", ("tensor", None, None)),
+    ("rec/rglru/b_a", ("tensor",)),
+    ("rec/rglru/b_x", ("tensor",)),
+    ("rec/rglru/lam", ("tensor",)),
+]
+
+
+def leaf_logical_axes(path: str, shape: Sequence[int]) -> tuple:
+    """Logical axes for one param leaf.  Leading stacked dims (scan layers,
+    pattern repeats) are padded with the unsharded 'layers' axis."""
+    ndim = len(shape)
+    for suffix, axes in _RULES:
+        if path.endswith(suffix) or (f"/{suffix.split('/')[0]}/" in path and path.endswith("/" + suffix.split("/")[-1]) and suffix.split("/")[0] in path):
+            if len(axes) <= ndim:
+                pad = (None,) * (ndim - len(axes) - 0)
+                # leading dims = stacked layers/repeats: unsharded
+                return ("layers",) * (ndim - len(axes)) + tuple(axes)
+    # default: replicate small leaves; FSDP-shard any large trailing matrix
+    if ndim >= 2 and int(np.prod(shape)) >= 1 << 20:
+        return ("layers",) * (ndim - 2) + ("embed_fsdp", None)
+    return (None,) * ndim
+
+
+def _divisible(mesh: Mesh, axes, dim: int) -> bool:
+    if axes is None:
+        return True
+    names = axes if isinstance(axes, (list, tuple)) else (axes,)
+    extent = 1
+    for n in names:
+        extent *= mesh.shape[n]
+    return dim % extent == 0
+
+
+def _path_str(key_path) -> str:
+    parts = []
+    for k in key_path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_specs(params, rules: Optional[LogicalRules]):
+    """PartitionSpec pytree for a param tree (ShapeDtypeStructs fine too).
+    Mesh axes that don't divide the dim are dropped (replicated).  Structure
+    is preserved exactly (empty subtrees like non-parametric LN survive)."""
+    import jax
+
+    def one(key_path, leaf):
+        shape = tuple(getattr(leaf, "shape", ()))
+        if rules is None:
+            return P()
+        path = _path_str(key_path)
+        logical = leaf_logical_axes(path, shape)
+        spec = rules.resolve(logical)
+        fixed = []
+        for dim, axes in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+            fixed.append(axes if _divisible(rules.mesh, axes, dim) else None)
+        return P(*fixed)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def param_shardings(params, rules: LogicalRules):
+    import jax
+
+    specs = param_specs(params, rules)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(rules.mesh, s),
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

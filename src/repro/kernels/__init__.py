@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the serving/training hot spots (DESIGN.md A5):
+blocked flash attention (causal/window/GQA), GQA decode attention against a
+length-masked KV cache, the RG-LRU diagonal scan, the Mamba selective scan,
+and ``page_gather`` — the TPU analogue of GEMEL's layer-granular partial
+swap.  ``ops`` is the dispatching entry point; ``ref`` holds the pure-jnp
+oracles every kernel is property-tested against."""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,99 @@
+"""Mamba selective scan for TPU.
+
+    h_t = exp(dt_t ⊗ A) * h_{t-1} + (dt_t x_t) ⊗ B_t        h: (di, n)
+    y_t = h_t · C_t
+
+Grid (B, num_di_blocks, num_chunks): channel blocks are parallel, chunks are
+the sequential carry axis.  The state tile (block_di, n) lives in VMEM
+scratch; per time step the kernel forms the (block_di, n) decay/input tiles
+from the compact (dt, dtx, B, C) rows — the (B,S,di,n) tensors never exist
+anywhere, which is the whole point of the kernel (HBM traffic is O(S·di),
+not O(S·di·n); arithmetic intensity rises by ~n = 16x vs. the naive form).
+
+VMEM per instance (block_di=512, chunk=128, n=16, f32):
+    dt/dtx tiles 2*(chunk, block_di) = 512 KB, B/C tiles 2*(chunk, n) tiny,
+    A tile (block_di, n) = 32 KB, h (block_di, n) = 32 KB, y (chunk, block_di)
+    = 256 KB  →  < 1 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mamba_kernel(dt_ref, dtx_ref, B_ref, C_ref, A_ref, h0_ref,
+                  y_ref, hlast_ref, h_ref, *, chunk: int, num_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = h0_ref[0, :, :].astype(jnp.float32)
+
+    A = A_ref[...].astype(jnp.float32)  # (bdi, n)
+
+    def step(t, h):
+        dt_t = dt_ref[0, t, :].astype(jnp.float32)  # (bdi,)
+        dtx_t = dtx_ref[0, t, :].astype(jnp.float32)
+        B_t = B_ref[0, t, :].astype(jnp.float32)  # (n,)
+        C_t = C_ref[0, t, :].astype(jnp.float32)
+        a_t = jnp.exp(dt_t[:, None] * A)  # (bdi, n) transient
+        h = a_t * h + dtx_t[:, None] * B_t[None, :]
+        y_ref[0, t, :] = jnp.sum(h * C_t[None, :], axis=1).astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_ref[...])
+    h_ref[...] = h
+
+    @pl.when(ci == num_chunks - 1)
+    def _emit():
+        hlast_ref[0, :, :] = h.astype(hlast_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_di", "interpret"))
+def mamba_scan(
+    dt: jax.Array,  # (B, S, di)
+    dtx: jax.Array,  # (B, S, di)
+    Bmat: jax.Array,  # (B, S, n)
+    Cmat: jax.Array,  # (B, S, n)
+    A: jax.Array,  # (di, n)
+    h0: jax.Array,  # (B, di, n)
+    chunk: int = 128,
+    block_di: int = 512,
+    interpret: bool = True,
+):
+    """Returns (y (B,S,di) float32, h_last (B,di,n) float32)."""
+    B, S, di = dt.shape
+    n = A.shape[1]
+    chunk = min(chunk, S)
+    block_di = min(block_di, di)
+    assert S % chunk == 0 and di % block_di == 0
+    nc, ndi = S // chunk, di // block_di
+
+    kernel = functools.partial(_mamba_kernel, chunk=chunk, num_chunks=nc)
+    y, h_last = pl.pallas_call(
+        kernel,
+        grid=(B, ndi, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_di), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((1, chunk, block_di), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((1, chunk, n), lambda b, d, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b, d, c: (b, c, 0)),
+            pl.BlockSpec((block_di, n), lambda b, d, c: (d, 0)),
+            pl.BlockSpec((1, block_di, n), lambda b, d, c: (b, d, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, block_di), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((1, block_di, n), lambda b, d, c: (b, d, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, di), jnp.float32),
+            jax.ShapeDtypeStruct((B, di, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_di, n), jnp.float32)],
+        interpret=interpret,
+    )(dt, dtx, Bmat, Cmat, A, h0)
+    return y, h_last

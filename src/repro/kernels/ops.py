@@ -1,0 +1,69 @@
+"""Public kernel entry points with backend dispatch.
+
+    mode = "kernel"     pl.pallas_call compiled for TPU (production)
+    mode = "interpret"  kernel body executed in Python on CPU (validation)
+    mode = "ref"        pure-jnp oracle (CPU tests, the 512-device dry-run —
+                        custom calls carry no XLA cost model, DESIGN.md A5)
+
+Default resolves from the REPRO_KERNEL_MODE env var, falling back to "ref"
+on CPU hosts and "kernel" when a TPU is present.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+from repro.kernels import ref as _ref
+from repro.kernels.decode_attention import decode_attention as _decode_kernel
+from repro.kernels.flash_attention import flash_attention as _flash_kernel
+from repro.kernels.mamba_scan import mamba_scan as _mamba_kernel
+from repro.kernels.page_gather import page_gather as _gather_kernel
+from repro.kernels.rg_lru import rg_lru_scan as _rg_lru_kernel
+
+
+def default_mode() -> str:
+    env = os.environ.get("REPRO_KERNEL_MODE")
+    if env:
+        return env
+    return "kernel" if jax.default_backend() == "tpu" else "ref"
+
+
+def flash_attention(q, k, v, causal=True, window=None, mode: Optional[str] = None,
+                    **kw):
+    mode = mode or default_mode()
+    if mode == "ref":
+        return _ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    return _flash_kernel(q, k, v, causal=causal, window=window,
+                         interpret=(mode == "interpret"), **kw)
+
+
+def decode_attention(q, k_cache, v_cache, lengths, mode: Optional[str] = None, **kw):
+    mode = mode or default_mode()
+    if mode == "ref":
+        return _ref.decode_attention_ref(q, k_cache, v_cache, lengths)
+    return _decode_kernel(q, k_cache, v_cache, lengths,
+                          interpret=(mode == "interpret"), **kw)
+
+
+def rg_lru_scan(a, b, h0, mode: Optional[str] = None, **kw):
+    mode = mode or default_mode()
+    if mode == "ref":
+        return _ref.rg_lru_ref(a, b, h0)
+    return _rg_lru_kernel(a, b, h0, interpret=(mode == "interpret"), **kw)
+
+
+def mamba_scan(dt, dtx, Bmat, Cmat, A, h0, mode: Optional[str] = None, **kw):
+    mode = mode or default_mode()
+    if mode == "ref":
+        return _ref.mamba_scan_ref(dt, dtx, Bmat, Cmat, A, h0)
+    return _mamba_kernel(dt, dtx, Bmat, Cmat, A, h0,
+                         interpret=(mode == "interpret"), **kw)
+
+
+def page_gather(pool, page_table, mode: Optional[str] = None, **kw):
+    mode = mode or default_mode()
+    if mode == "ref":
+        return _ref.page_gather_ref(pool, page_table)
+    return _gather_kernel(pool, page_table, interpret=(mode == "interpret"), **kw)

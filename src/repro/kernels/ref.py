@@ -1,0 +1,114 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+Each function is the semantic ground truth the kernels are property-tested
+against (tests/test_kernels.py sweeps shapes/dtypes and asserts allclose).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(
+    q: jax.Array,  # (B, S, Hq, D)
+    k: jax.Array,  # (B, S, Hkv, D)
+    v: jax.Array,  # (B, S, Hkv, D)
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    scale = (1.0 / np.sqrt(D)) if scale is None else scale
+    qg = q.reshape(B, S, Hkv, G, D)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qp = jnp.arange(S)[:, None]
+    kp = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= kp <= qp
+    if window is not None:
+        mask &= (qp - kp) < window
+    scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, S, Hq, D).astype(q.dtype)
+
+
+def decode_attention_ref(
+    q: jax.Array,  # (B, Hq, D) single-step query
+    k_cache: jax.Array,  # (B, Smax, Hkv, D)
+    v_cache: jax.Array,  # (B, Smax, Hkv, D)
+    lengths: jax.Array,  # (B,) valid prefix length per row
+    scale: Optional[float] = None,
+) -> jax.Array:
+    B, Hq, D = q.shape
+    Smax, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    scale = (1.0 / np.sqrt(D)) if scale is None else scale
+    qg = q.reshape(B, Hkv, G, D)
+    scores = jnp.einsum("bhgd,bkhd->bhgk", qg.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * scale
+    valid = jnp.arange(Smax)[None, :] < lengths[:, None]  # (B, Smax)
+    scores = jnp.where(valid[:, None, None, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", probs, v_cache.astype(jnp.float32))
+    return out.reshape(B, Hq, D).astype(q.dtype)
+
+
+def rg_lru_ref(
+    a: jax.Array,  # (B, S, d) per-step decay in (0,1)
+    b: jax.Array,  # (B, S, d) per-step input
+    h0: jax.Array,  # (B, d)
+):
+    """Diagonal recurrence h_t = a_t * h_{t-1} + b_t; returns (y=(B,S,d), h_last)."""
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    aT = jnp.swapaxes(a.astype(jnp.float32), 0, 1)
+    bT = jnp.swapaxes(b.astype(jnp.float32), 0, 1)
+    h_last, ys = jax.lax.scan(step, h0.astype(jnp.float32), (aT, bT))
+    return jnp.swapaxes(ys, 0, 1), h_last
+
+
+def mamba_scan_ref(
+    dt: jax.Array,  # (B, S, di)
+    dtx: jax.Array,  # (B, S, di)  == dt * x
+    Bmat: jax.Array,  # (B, S, n)
+    Cmat: jax.Array,  # (B, S, n)
+    A: jax.Array,  # (di, n) negative
+    h0: jax.Array,  # (B, di, n)
+):
+    """Selective scan: h_t = exp(dt_t A) h_{t-1} + dtx_t B_t; y_t = C_t . h_t.
+    Returns (y (B,S,di) f32, h_last (B,di,n))."""
+    def step(h, xs):
+        dt_t, dtx_t, B_t, C_t = xs
+        at = jnp.exp(dt_t[..., None] * A)  # (B, di, n)
+        h = at * h + dtx_t[..., None] * B_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    xs = (
+        jnp.swapaxes(dt.astype(jnp.float32), 0, 1),
+        jnp.swapaxes(dtx.astype(jnp.float32), 0, 1),
+        jnp.swapaxes(Bmat.astype(jnp.float32), 0, 1),
+        jnp.swapaxes(Cmat.astype(jnp.float32), 0, 1),
+    )
+    h_last, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return jnp.swapaxes(ys, 0, 1), h_last
+
+
+def page_gather_ref(
+    pool: jax.Array,  # (P, page)
+    page_table: jax.Array,  # (N,) int32 indices into pool
+) -> jax.Array:
+    """out[i] = pool[page_table[i]] — assemble a model's weights from the
+    paged HBM pool (GEMEL partial-swap analogue)."""
+    return jnp.take(pool, page_table, axis=0)

@@ -1,0 +1,459 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be the first two lines (before any other import — jax locks the device
+count on first init):
+"""
+import os  # noqa: E402
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import subprocess  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs.base import cache_specs, input_specs  # noqa: E402
+from repro.configs.registry import all_arch_ids, load_arch  # noqa: E402
+from repro.distributed.collectives import parse_collectives  # noqa: E402
+from repro.distributed.partitioning import param_shardings  # noqa: E402
+from repro.distributed.sharding import use_rules  # noqa: E402
+from repro.launch.mesh import make_production_mesh, production_rules  # noqa: E402
+from repro.models.registry import get_family  # noqa: E402
+from repro.train.optimizer import AdamW  # noqa: E402
+from repro.train.trainer import init_state, make_train_step, state_shardings  # noqa: E402
+
+DEFAULT_OUT = "artifacts/dryrun"
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _with_sharding(specs_tree, shardings_tree):
+    return jax.tree_util.tree_map(
+        lambda s, sh: _sds(s.shape, s.dtype, sh), specs_tree, shardings_tree
+    )
+
+
+def _batch_sharding(rules, spec):
+    """Shard dim 0 (global batch) over the batch axes when divisible."""
+    mesh = rules.mesh
+    batch_axes = rules.rules["batch"]
+    extent = 1
+    for a in (batch_axes if isinstance(batch_axes, tuple) else (batch_axes,)):
+        extent *= mesh.shape[a]
+    ndim = len(spec.shape)
+    if ndim >= 1 and spec.shape[0] % extent == 0:
+        return NamedSharding(mesh, P(batch_axes, *([None] * (ndim - 1))))
+    return NamedSharding(mesh, P(*([None] * ndim)))
+
+
+def _cache_shardings(cfg, family, shape, rules, cache_tree):
+    """Shardings for the decode cache: batch dim over batch axes, the
+    kv-head / inner dim over 'model' when divisible."""
+    mesh = rules.mesh
+    batch_axes = rules.rules["batch"]
+    model_axis = "model"
+    B = shape.global_batch
+
+    def extent(axes):
+        e = 1
+        for a in (axes if isinstance(axes, tuple) else (axes,)):
+            e *= mesh.shape[a]
+        return e
+
+    kv_seq_shard = rules.rules.get("kv_seq") is not None
+    S = shape.seq_len
+
+    def one(spec):
+        dims = list(spec.shape)
+        axes = [None] * len(dims)
+        for i, d in enumerate(dims):
+            if d == B and B % extent(batch_axes) == 0 and batch_axes not in axes:
+                axes[i] = batch_axes
+                break
+        if kv_seq_shard:
+            # match the in-model constraint: seq dim over 'model'
+            for i, d in enumerate(dims):
+                if axes[i] is None and d == S and d % mesh.shape[model_axis] == 0:
+                    axes[i] = model_axis
+                    return NamedSharding(mesh, P(*axes))
+        # shard the largest model-divisible trailing dim over 'model'
+        best = None
+        for i in range(len(dims) - 1, 0, -1):
+            if axes[i] is None and dims[i] % mesh.shape[model_axis] == 0 and dims[i] >= mesh.shape[model_axis]:
+                if dims[i] > 1:
+                    best = i
+                    break
+        if best is not None:
+            axes[best] = model_axis
+        return NamedSharding(mesh, P(*axes))
+
+    return jax.tree_util.tree_map(one, cache_tree)
+
+
+@dataclasses.dataclass
+class CellResult:
+    arch: str
+    shape: str
+    mesh: str
+    kind: str
+    ok: bool
+    seconds: float
+    error: str = ""
+    flops_per_device: float = 0.0
+    bytes_per_device: float = 0.0
+    argument_bytes: int = 0
+    output_bytes: int = 0
+    temp_bytes: int = 0
+    peak_bytes_estimate: int = 0
+    collective_bytes: dict = dataclasses.field(default_factory=dict)
+    collective_counts: dict = dataclasses.field(default_factory=dict)
+    collective_wire_bytes: int = 0
+    microbatches: int = 1
+    n_devices: int = 0
+
+
+def microbatches_for(arch_mod, shape, mesh, tensor_parallel: bool = True) -> int:
+    """Grad-accumulation depth: keep the per-chip microbatch at 1 sequence
+    for >=7B models, 4 otherwise (activation-memory bound, EXPERIMENTS §Perf).
+    With TP off the 'model' axis folds into data parallelism, so the batch
+    spreads over the whole mesh."""
+    if shape.kind != "train":
+        return 1
+    data_total = 1
+    for a in ("pod", "data"):
+        if a in mesh.shape:
+            data_total *= mesh.shape[a]
+    if not tensor_parallel:
+        data_total *= mesh.shape.get("model", 1)
+    big = arch_mod.ARCH_ID in (
+        "qwen2-72b", "qwen3-14b", "falcon-mamba-7b", "recurrentgemma-9b",
+        "deepseek-moe-16b",
+    )
+    per_chip = 1 if big else 4
+    return max(1, shape.global_batch // (data_total * per_chip))
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             seq_shard: bool = False, compress_grads: bool = False) -> CellResult:
+    t0 = time.monotonic()
+    mod = load_arch(arch)
+    if shape_name in mod.SKIP:
+        return CellResult(arch, shape_name, mesh_kind, "skip", True,
+                          time.monotonic() - t0, error=mod.SKIP[shape_name])
+    cfg = mod.full_config()
+    fam = get_family(mod.FAMILY)
+    shape = mod.SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    # KV layout policy: if the stored KV heads can't fill the TP axis, shard
+    # the cache's sequence dim over "model" instead (context parallelism).
+    kv_seq_shard = False
+    if shape.kind in ("prefill", "decode") and hasattr(cfg, "kv_stored_heads"):
+        kv_seq_shard = cfg.kv_stored_heads % mesh.shape["model"] != 0
+    # seq_act sharding measured WORSE for train (22.4->31.0 GB peak,
+    # 3.5->52.6 GB collectives: GSPMD re-gathers the full sequence around
+    # every attention region) — hypothesis refuted, see EXPERIMENTS §Perf i3.
+    # TP only pays for itself on wide models; small-d archs train pure FSDP
+    # (§Perf iteration 5).  Folding the model axis into DP needs the global
+    # batch to divide the whole mesh (multi-pod: 512 > batch 256 -> keep TP).
+    tp = (getattr(cfg, "d_model", 0) >= 4096 or shape.kind != "train"
+          or shape.global_batch % mesh.size != 0)
+    rules = production_rules(mesh, seq_shard=seq_shard,
+                             kv_seq_shard=kv_seq_shard, tensor_parallel=tp)
+    key = jax.random.PRNGKey(0)
+
+    params_shapes = jax.eval_shape(lambda: fam.init(cfg, key))
+    p_shardings = param_shardings(params_shapes, rules)
+    params_in = _with_sharding(params_shapes, p_shardings)
+    inputs = input_specs(cfg, mod.FAMILY, shape)
+    inputs_in = {
+        k: _sds(s.shape, s.dtype, _batch_sharding(rules, s))
+        for k, s in inputs.items()
+    }
+
+    mb = microbatches_for(mod, shape, mesh, tensor_parallel=tp)
+    with mesh, use_rules(rules):
+        if shape.kind == "train":
+            opt = AdamW(lr=1e-4)
+            state_shapes = jax.eval_shape(
+                lambda p: init_state(p, opt, compress_grads), params_shapes
+            )
+            st_shardings = state_shardings(state_shapes, rules)
+            state_in = _with_sharding(state_shapes, st_shardings)
+            loss = lambda p, b: fam.loss(cfg, p, b)
+            step = make_train_step(loss, opt, rules, microbatches=mb,
+                                   compress_grads=compress_grads)
+            jitted = jax.jit(step, donate_argnums=(0,))
+            lowered = jitted.lower(state_in, inputs_in)
+        elif shape.kind == "prefill":
+            S = shape.seq_len
+
+            # max_len == S keeps the cache's seq dim TP-divisible (32769
+            # broke kv_seq sharding and replicated the cache — §Perf 1d)
+            if mod.FAMILY == "encdec":
+                fn = lambda p, src_embeds, tokens: fam.prefill(cfg, p, src_embeds, tokens, tokens.shape[1])
+            elif mod.FAMILY == "vlm":
+                fn = lambda p, patch_embeds, tokens: fam.prefill(cfg, p, tokens, patch_embeds, S)
+            elif mod.FAMILY == "ssm":
+                fn = lambda p, tokens: fam.prefill(cfg, p, tokens)
+            else:
+                fn = lambda p, tokens: fam.prefill(cfg, p, tokens, S)
+            jitted = jax.jit(fn)
+            lowered = jitted.lower(params_in, *[inputs_in[k] for k in sorted(inputs_in)])
+        else:  # decode
+            cache = cache_specs(cfg, mod.FAMILY, shape)
+            c_shardings = _cache_shardings(cfg, mod.FAMILY, shape, rules, cache)
+            cache_in = _with_sharding(cache, c_shardings)
+            fn = lambda p, c, tokens: fam.decode_step(cfg, p, c, tokens)
+            jitted = jax.jit(fn, donate_argnums=(1,))
+            lowered = jitted.lower(params_in, cache_in, inputs_in["tokens"])
+
+        compiled = lowered.compile()
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    colls = parse_collectives(hlo)
+    peak = (getattr(ma, "argument_size_in_bytes", 0)
+            + getattr(ma, "output_size_in_bytes", 0)
+            + getattr(ma, "temp_size_in_bytes", 0)
+            - getattr(ma, "alias_size_in_bytes", 0))
+    return CellResult(
+        arch, shape_name, mesh_kind, shape.kind, True, time.monotonic() - t0,
+        flops_per_device=float(ca.get("flops", 0.0)),
+        bytes_per_device=float(ca.get("bytes accessed", 0.0)),
+        argument_bytes=getattr(ma, "argument_size_in_bytes", 0),
+        output_bytes=getattr(ma, "output_size_in_bytes", 0),
+        temp_bytes=getattr(ma, "temp_size_in_bytes", 0),
+        peak_bytes_estimate=peak,
+        collective_bytes=colls.by_kind_bytes,
+        collective_counts=colls.by_kind_count,
+        collective_wire_bytes=colls.wire_bytes,
+        microbatches=mb,
+        n_devices=mesh.size,
+    )
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true",
+                    help="drive every (arch x shape x mesh) cell in subprocesses")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--seq-shard", action="store_true")
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--probe", action="store_true",
+                    help="cost probe: unrolled shallow variants, depth-extrapolated")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out, exist_ok=True)
+
+    if args.all:
+        meshes = ["single", "multi"]
+        failures = []
+        for arch in all_arch_ids():
+            mod = load_arch(arch)
+            for shape_name in mod.SHAPES:
+                for mesh_kind in meshes:
+                    tag = f"{args.tag}-" if args.tag else ""
+                    if args.probe:
+                        tag = "probe-" + tag
+                    fname = os.path.join(
+                        args.out, f"{tag}{arch}__{shape_name}__{mesh_kind}.json"
+                    )
+                    if os.path.exists(fname) and not args.force:
+                        print(f"[skip exists] {fname}")
+                        continue
+                    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                           "--arch", arch, "--shape", shape_name,
+                           "--mesh", mesh_kind, "--out", args.out]
+                    if args.probe:
+                        cmd.append("--probe")
+                    if args.seq_shard:
+                        cmd.append("--seq-shard")
+                    if args.compress_grads:
+                        cmd.append("--compress-grads")
+                    if args.tag:
+                        cmd += ["--tag", args.tag]
+                    print(f"[run] {arch} {shape_name} {mesh_kind}", flush=True)
+                    r = subprocess.run(cmd, capture_output=True, text=True,
+                                       timeout=3600)
+                    if r.returncode != 0:
+                        failures.append((arch, shape_name, mesh_kind))
+                        print(r.stdout[-2000:])
+                        print(r.stderr[-4000:])
+        print(f"done; {len(failures)} failures: {failures}")
+        sys.exit(1 if failures else 0)
+
+    try:
+        if args.probe:
+            res_d = run_cost_probe(args.arch, args.shape, args.mesh)
+        else:
+            res = run_cell(args.arch, args.shape, args.mesh,
+                           seq_shard=args.seq_shard,
+                           compress_grads=args.compress_grads)
+            res_d = dataclasses.asdict(res)
+    except Exception as e:  # noqa: BLE001
+        res = CellResult(args.arch, args.shape, args.mesh, "?", False, 0.0,
+                         error=f"{e}\n{traceback.format_exc()}")
+        res_d = dataclasses.asdict(res)
+    tag = f"{args.tag}-" if args.tag else ""
+    if args.probe:
+        tag = "probe-" + tag
+    fname = os.path.join(args.out, f"{tag}{args.arch}__{args.shape}__{args.mesh}.json")
+    with open(fname, "w") as f:
+        json.dump(res_d, f, indent=2)
+    status = "OK" if res_d.get("ok") else "FAIL"
+    if res_d.get("kind") == "skip":
+        status = "SKIP"
+    print(f"[{status}] {'probe ' if args.probe else ''}{args.arch} {args.shape} "
+          f"{args.mesh} ({res_d.get('seconds', 0):.1f}s) "
+          f"flops/dev={res_d.get('flops_per_device', 0):.3e} "
+          f"peak={res_d.get('peak_bytes_estimate', 0)/1e9:.2f}GB "
+          f"coll_wire={res_d.get('collective_wire_bytes', 0)/1e9:.3f}GB")
+    if not res_d.get("ok"):
+        print(res_d.get("error", ""))
+        sys.exit(1)
+
+
+
+
+# ---------------------------------------------------------------------------
+# Cost probe: XLA's cost_analysis counts while-loop bodies ONCE, so scanned
+# models under-report flops/bytes/collectives by ~the trip count.  The probe
+# lowers UNROLLED shallow variants at two depths (python-loop layers and
+# chunks, microbatches=1) and linearly extrapolates to the full depth —
+# exact for uniform-layer stacks: cost(L) = a + b*L.
+# Weight-gather collectives are counted once (mb=1), i.e. assuming
+# loop-invariant hoisting across grad-accum microbatches (documented).
+# ---------------------------------------------------------------------------
+
+
+def _probe_variants(mod, cfg, shape):
+    """[(scale_value, cfg_variant)], full_scale — cost linear in scale."""
+    fam = mod.FAMILY
+    base = dict(scan_layers=False, probe_unroll=True)
+    if fam == "hybrid":
+        plen = len(cfg.pattern)
+        # bound the python-unrolled chunk count (S/chunk <= 8)
+        chunk = max(cfg.chunk, shape.seq_len // 8)
+        mk = lambda r: dataclasses.replace(cfg, n_layers=plen * r, chunk=chunk,
+                                           **base)
+        return [(1, mk(1)), (2, mk(2))], cfg.n_repeats
+    if fam == "encdec":
+        mk = lambda L: dataclasses.replace(cfg, n_enc_layers=L, n_dec_layers=L,
+                                           **base)
+        return [(2, mk(2)), (4, mk(4))], cfg.n_dec_layers
+    if fam == "moe":
+        fd = cfg.first_dense_layers
+        mk = lambda L: dataclasses.replace(cfg, n_layers=fd + L, **base)
+        return [(2, mk(2)), (4, mk(4))], cfg.n_layers - fd
+    if fam == "ssm":
+        # bound the unrolled chunk count for very long sequences
+        chunk = max(cfg.chunk, shape.seq_len // 16 or cfg.chunk)
+        mk = lambda L: dataclasses.replace(cfg, n_layers=L, chunk=chunk, **base)
+        return [(2, mk(2)), (4, mk(4))], cfg.n_layers
+    mk = lambda L: dataclasses.replace(cfg, n_layers=L, **base)
+    return [(2, mk(2)), (4, mk(4))], cfg.n_layers
+
+
+def _lower_cell(mod, cfg, shape, mesh_kind, microbatches):
+    """Shared lowering path returning (flops, bytes, wire_bytes) per device."""
+    fam = get_family(mod.FAMILY)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    kv_seq_shard = False
+    if shape.kind in ("prefill", "decode") and hasattr(cfg, "kv_stored_heads"):
+        kv_seq_shard = cfg.kv_stored_heads % mesh.shape["model"] != 0
+    tp = (getattr(cfg, "d_model", 0) >= 4096 or shape.kind != "train"
+          or shape.global_batch % mesh.size != 0)
+    rules = production_rules(mesh, kv_seq_shard=kv_seq_shard,
+                             tensor_parallel=tp)
+    key = jax.random.PRNGKey(0)
+    params_shapes = jax.eval_shape(lambda: fam.init(cfg, key))
+    p_shardings = param_shardings(params_shapes, rules)
+    params_in = _with_sharding(params_shapes, p_shardings)
+    inputs = input_specs(cfg, mod.FAMILY, shape)
+    inputs_in = {
+        k: _sds(s.shape, s.dtype, _batch_sharding(rules, s))
+        for k, s in inputs.items()
+    }
+    with mesh, use_rules(rules):
+        if shape.kind == "train":
+            opt = AdamW(lr=1e-4)
+            state_shapes = jax.eval_shape(
+                lambda p: init_state(p, opt, False), params_shapes
+            )
+            st_sh = state_shardings(state_shapes, rules)
+            state_in = _with_sharding(state_shapes, st_sh)
+            step = make_train_step(lambda p, b: fam.loss(cfg, p, b), opt, rules,
+                                   microbatches=microbatches)
+            lowered = jax.jit(step, donate_argnums=(0,)).lower(state_in, inputs_in)
+        elif shape.kind == "prefill":
+            S = shape.seq_len
+            if mod.FAMILY == "encdec":
+                fn = lambda p, src_embeds, tokens: fam.prefill(cfg, p, src_embeds, tokens, tokens.shape[1])
+            elif mod.FAMILY == "vlm":
+                fn = lambda p, patch_embeds, tokens: fam.prefill(cfg, p, tokens, patch_embeds, S)
+            elif mod.FAMILY == "ssm":
+                fn = lambda p, tokens: fam.prefill(cfg, p, tokens)
+            else:
+                fn = lambda p, tokens: fam.prefill(cfg, p, tokens, S)
+            lowered = jax.jit(fn).lower(
+                params_in, *[inputs_in[k] for k in sorted(inputs_in)]
+            )
+        else:
+            cache = cache_specs(cfg, mod.FAMILY, shape)
+            c_sh = _cache_shardings(cfg, mod.FAMILY, shape, rules, cache)
+            cache_in = _with_sharding(cache, c_sh)
+            fn = lambda p, c, tokens: fam.decode_step(cfg, p, c, tokens)
+            lowered = jax.jit(fn, donate_argnums=(1,)).lower(
+                params_in, cache_in, inputs_in["tokens"]
+            )
+        compiled = lowered.compile()
+    ca = compiled.cost_analysis() or {}
+    colls = parse_collectives(compiled.as_text())
+    return (float(ca.get("flops", 0.0)), float(ca.get("bytes accessed", 0.0)),
+            float(colls.wire_bytes))
+
+
+def run_cost_probe(arch: str, shape_name: str, mesh_kind: str) -> dict:
+    t0 = time.monotonic()
+    mod = load_arch(arch)
+    if shape_name in mod.SKIP:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "ok": True, "kind": "skip"}
+    cfg = mod.full_config()
+    shape = mod.SHAPES[shape_name]
+    variants, full_scale = _probe_variants(mod, cfg, shape)
+    (s1, c1), (s2, c2) = [(sv, _lower_cell(mod, cv, shape, mesh_kind, 1))
+                          for sv, cv in variants]
+    out = {}
+    for i, name in enumerate(["flops", "bytes", "wire"]):
+        slope = (c2[i] - c1[i]) / (s2 - s1)
+        intercept = c1[i] - slope * s1
+        out[name + "_per_device"] = intercept + slope * full_scale
+    return {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind, "ok": True,
+        "kind": shape.kind, "seconds": time.monotonic() - t0,
+        "probe_scales": [variants[0][0], variants[1][0]],
+        "full_scale": full_scale,
+        "flops_per_device": out["flops_per_device"],
+        "bytes_per_device": out["bytes_per_device"],
+        "collective_wire_bytes": out["wire_per_device"],
+        "n_devices": 512 if mesh_kind == "multi" else 256,
+    }
+
+
+if __name__ == "__main__":
+    main()

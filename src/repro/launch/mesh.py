@@ -1,0 +1,70 @@
+"""Production meshes + logical-axis rules.
+
+Single pod: (16, 16) over ("data", "model") — 256 chips (TPU v5e pod).
+Multi-pod: (2, 16, 16) over ("pod", "data", "model") — 512 chips; the
+``pod`` axis extends data parallelism across the DCN/ICI boundary.
+
+``make_production_mesh`` is a FUNCTION so importing this module never
+touches jax device state (the dry-run must set XLA_FLAGS first).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.distributed.sharding import LogicalRules
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+# logical axis -> mesh axis rules (see distributed/sharding.py docstring)
+def production_rules(mesh, *, seq_shard: bool = False,
+                     kv_seq_shard: bool = False,
+                     seq_act_shard: bool = False,
+                     tensor_parallel: bool = True) -> LogicalRules:
+    multi = "pod" in mesh.shape
+    batch = ("pod", "data") if multi else ("data",)
+    # tensor_parallel=False: small-d_model archs are heavily collective-bound
+    # under TP=16 (e.g. olmo-1b train: 140 GB/step wire, 11x the compute
+    # term); they run pure FSDP+DP instead, with the 'model' axis folded into
+    # data parallelism for weights via the divisibility-guarded FSDP axis.
+    # MoE expert parallelism stays on 'model' regardless (EP without TP).
+    tp = "model" if tensor_parallel else None
+    if not tensor_parallel:
+        batch = tuple(batch) + ("model",)  # fold TP axis into DP
+    rules = {
+        # activations
+        "batch": batch,
+        "seq": "model" if seq_shard else None,  # context parallelism knob
+        # Megatron-style sequence parallelism — measured WORSE under GSPMD
+        # (see EXPERIMENTS §Perf i3); kept as an off-by-default knob.
+        "seq_act": "model" if seq_act_shard else None,
+        "heads": tp,
+        "kv_heads": tp,
+        # kv_seq_shard: when stored KV heads can't fill the TP axis (e.g.
+        # qwen3-14b: 8 heads vs TP=16), shard the cache's *sequence* dim over
+        # "model" instead — GSPMD turns the masked softmax into a sharded
+        # reduction (sequence/context parallelism for decode).
+        "kv_heads_stored": None if kv_seq_shard else tp,
+        "kv_seq": "model" if kv_seq_shard else None,
+        "embed": None,
+        "vocab": tp,
+        "inner": tp,
+        "moe_group": batch,
+        "expert": "model",
+        # parameters (partitioning.py)
+        "embed_fsdp": ("data", "model") if not tensor_parallel else "data",
+        "tensor": tp,
+        "layers": None,
+    }
+    return LogicalRules(mesh, rules)
+
+
+def smoke_rules() -> Optional[LogicalRules]:
+    """Single-device: no rules (constrain is a no-op)."""
+    return None

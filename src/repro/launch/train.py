@@ -1,0 +1,86 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs a real reduced-scale training loop on this host (smoke config) or, with
+``--dry-run``, lowers the full config against the production mesh (see
+dryrun.py for the sweep driver).  The same code path a multi-pod deployment
+would drive via ``jax.distributed.initialize`` — on real hardware only the
+device/mesh bootstrap differs.
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    args = ap.parse_args(argv)
+
+    import jax
+
+    from repro.configs.base import ShapeSpec, input_specs
+    from repro.configs.registry import load_arch
+    from repro.data.synthetic import LMStream
+    from repro.models.registry import get_family
+    from repro.runtime.monitors import HeartbeatMonitor, StragglerMonitor
+    from repro.train.optimizer import AdamW
+    from repro.train.trainer import Trainer
+
+    mod = load_arch(args.arch)
+    cfg = mod.smoke_config()
+    fam = get_family(mod.FAMILY)
+    params = fam.init(cfg, jax.random.PRNGKey(0))
+
+    spec = ShapeSpec("cli", args.seq, args.batch, "train")
+    specs = input_specs(cfg, mod.FAMILY, spec)
+
+    def batches():
+        import jax.numpy as jnp
+
+        stream = LMStream(cfg.vocab_size, args.batch, args.seq)
+        step = 0
+        while True:
+            base = stream.batch_at(step)
+            batch = {}
+            for k, s in specs.items():
+                if k in base:
+                    batch[k] = base[k][:, : s.shape[1]]
+                elif s.dtype == jnp.int32:
+                    batch[k] = base["tokens"][:, : s.shape[1]]
+                else:
+                    batch[k] = jax.random.normal(
+                        jax.random.PRNGKey(step), s.shape, jnp.float32
+                    )
+            yield batch
+            step += 1
+
+    ckpt = None
+    if args.ckpt_dir:
+        from repro.ckpt.manager import CheckpointManager
+
+        ckpt = CheckpointManager(args.ckpt_dir)
+
+    trainer = Trainer(
+        loss_fn=lambda p, b: fam.loss(cfg, p, b),
+        optimizer=AdamW(lr=args.lr),
+        microbatches=args.microbatches,
+        compress_grads=args.compress_grads,
+        ckpt_manager=ckpt,
+        ckpt_every=args.ckpt_every,
+        monitors=(HeartbeatMonitor(1), StragglerMonitor()),
+    )
+    out = trainer.fit(params, batches(), args.steps)
+    for h in out["history"]:
+        print(f"step {h['step']:5d} loss {h['loss']:.4f} gnorm {h['grad_norm']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,308 @@
+"""Encoder-decoder transformer — covers seamless-m4t-medium's text backbone.
+
+The speech/audio frontend is a STUB per the mandate: ``forward`` consumes
+precomputed frame embeddings (B, S_src, d_model) for the encoder side (see
+``configs/seamless_m4t_medium.input_specs``).  The decoder is a standard
+causal transformer with cross-attention; decode keeps a self-attn KV cache
+plus *cached* cross-attn K/V (computed once from the encoder output).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecConfig:
+    name: str = "encdec-lm"
+    n_enc_layers: int = 4
+    n_dec_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: int = 64
+    d_ff: int = 1024
+    vocab_size: int = 1000
+    vocab_multiple: int = 256
+    rope_theta: float = 1e4
+    norm: str = "layernorm"
+    act: str = "relu"
+    gated_ffn: bool = False
+    tie_embeddings: bool = True
+    dtype: Any = jnp.float32
+    scan_layers: bool = True
+    remat_policy: str = "none"
+    kv_repl: int = 1
+    probe_unroll: bool = False  # API parity for the dry-run cost probe
+
+    @property
+    def padded_vocab(self) -> int:
+        return L.padded_vocab(self.vocab_size, self.vocab_multiple)
+
+    @property
+    def n_layers(self) -> int:  # API parity with decoder-only configs
+        return self.n_dec_layers
+
+    @property
+    def kv_stored_heads(self) -> int:
+        return self.n_kv_heads * self.kv_repl
+
+
+def _init_attn(cfg: EncDecConfig, key, kv_dim: Optional[int] = None) -> dict:
+    ks = jax.random.split(key, 4)
+    Hq, Hkv, D, d = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_model
+    kd = kv_dim or d
+    return {
+        "wq": L.init_dense(ks[0], d, Hq * D, cfg.dtype),
+        "wk": L.init_dense(ks[1], kd, Hkv * D, cfg.dtype),
+        "wv": L.init_dense(ks[2], kd, Hkv * D, cfg.dtype),
+        "wo": L.init_dense(ks[3], Hq * D, d, cfg.dtype),
+    }
+
+
+def _init_enc_layer(cfg: EncDecConfig, key) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn": _init_attn(cfg, k1),
+        "mlp": L.init_ffn(k2, cfg.d_model, cfg.d_ff, cfg.dtype, gated=cfg.gated_ffn, bias=True),
+        "ln1": L.init_norm(cfg.norm, cfg.d_model, cfg.dtype),
+        "ln2": L.init_norm(cfg.norm, cfg.d_model, cfg.dtype),
+    }
+
+
+def _init_dec_layer(cfg: EncDecConfig, key) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "self_attn": _init_attn(cfg, k1),
+        "cross_attn": _init_attn(cfg, k2),
+        "mlp": L.init_ffn(k3, cfg.d_model, cfg.d_ff, cfg.dtype, gated=cfg.gated_ffn, bias=True),
+        "ln1": L.init_norm(cfg.norm, cfg.d_model, cfg.dtype),
+        "ln2": L.init_norm(cfg.norm, cfg.d_model, cfg.dtype),
+        "ln3": L.init_norm(cfg.norm, cfg.d_model, cfg.dtype),
+    }
+
+
+def init(cfg: EncDecConfig, key) -> dict:
+    k_embed, k_enc, k_dec, k_head = jax.random.split(key, 4)
+    V = cfg.padded_vocab
+    params: dict = {
+        "embed": {"table": (jax.random.normal(k_embed, (V, cfg.d_model)) * 0.02).astype(cfg.dtype)},
+        "enc_final_norm": L.init_norm(cfg.norm, cfg.d_model, cfg.dtype),
+        "final_norm": L.init_norm(cfg.norm, cfg.d_model, cfg.dtype),
+    }
+    ekeys = jax.random.split(k_enc, cfg.n_enc_layers)
+    dkeys = jax.random.split(k_dec, cfg.n_dec_layers)
+    if cfg.scan_layers:
+        params["enc_blocks"] = jax.vmap(lambda k: _init_enc_layer(cfg, k))(ekeys)
+        params["dec_blocks"] = jax.vmap(lambda k: _init_dec_layer(cfg, k))(dkeys)
+    else:
+        params["enc_blocks"] = {str(i): _init_enc_layer(cfg, ekeys[i]) for i in range(cfg.n_enc_layers)}
+        params["dec_blocks"] = {str(i): _init_dec_layer(cfg, dkeys[i]) for i in range(cfg.n_dec_layers)}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {"w": L.init_dense(k_head, cfg.d_model, V, cfg.dtype)}
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Attention helpers
+# ---------------------------------------------------------------------------
+
+
+def _mha(cfg: EncDecConfig, p: dict, xq: jax.Array, xkv: jax.Array,
+         q_pos: jax.Array, kv_pos: jax.Array, causal: bool) -> jax.Array:
+    B, Sq, _ = xq.shape
+    Skv = xkv.shape[1]
+    Hq, Hkv, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = L.dense(xq, p["wq"]).reshape(B, Sq, Hq, D)
+    k = L.dense(xkv, p["wk"]).reshape(B, Skv, Hkv, D)
+    v = L.dense(xkv, p["wv"]).reshape(B, Skv, Hkv, D)
+    if causal:  # relative position via RoPE on the self-attn path only
+        q = L.apply_rope(q, q_pos, cfg.rope_theta, D)
+        k = L.apply_rope(k, kv_pos, cfg.rope_theta, D)
+    q = constrain(q, "batch", "seq", "heads", None)
+    k = constrain(k, "batch", "seq", "kv_heads", None)
+    v = constrain(v, "batch", "seq", "kv_heads", None)
+    mask = L.attention_mask(q_pos, kv_pos, causal=causal) if causal else None
+    attn = L.gqa_attention(q, k, v, mask)
+    return L.dense(attn.reshape(B, Sq, -1), p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Encoder / decoder forward
+# ---------------------------------------------------------------------------
+
+
+def encode(cfg: EncDecConfig, params: dict, src_embeds: jax.Array) -> jax.Array:
+    """src_embeds: (B, S_src, d_model) precomputed frontend features."""
+    B, S, _ = src_embeds.shape
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = constrain(src_embeds.astype(cfg.dtype), "batch", "seq_act", "embed")
+
+    def layer(p, h):
+        hh = L.apply_norm(cfg.norm, h, p["ln1"])
+        # bidirectional self-attention, RoPE positions
+        h = h + _mha(cfg, p["attn"], hh, hh, pos, pos, causal=False)
+        hh = L.apply_norm(cfg.norm, h, p["ln2"])
+        h = h + L.ffn(hh, p["mlp"], act=cfg.act, gated=cfg.gated_ffn)
+        return constrain(h, "batch", "seq_act", "embed")
+
+    if cfg.remat_policy == "full":
+        layer = jax.checkpoint(layer)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(lambda h, p: (layer(p, h), None), x, params["enc_blocks"])
+    else:
+        for i in range(cfg.n_enc_layers):
+            x = layer(params["enc_blocks"][str(i)], x)
+    return L.apply_norm(cfg.norm, x, params["enc_final_norm"])
+
+
+def decode_train(cfg: EncDecConfig, params: dict, enc_out: jax.Array,
+                 tokens: jax.Array) -> jax.Array:
+    """Teacher-forced decoder pass. Returns logits (B, S_tgt, V)."""
+    B, S = tokens.shape
+    S_src = enc_out.shape[1]
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    src_pos = jnp.broadcast_to(jnp.arange(S_src, dtype=jnp.int32), (B, S_src))
+    x = L.embed(tokens, params["embed"]["table"])
+    x = constrain(x, "batch", "seq_act", "embed")
+
+    def layer(p, h):
+        hh = L.apply_norm(cfg.norm, h, p["ln1"])
+        h = h + _mha(cfg, p["self_attn"], hh, hh, pos, pos, causal=True)
+        hh = L.apply_norm(cfg.norm, h, p["ln2"])
+        h = h + _mha(cfg, p["cross_attn"], hh, enc_out, pos, src_pos, causal=False)
+        hh = L.apply_norm(cfg.norm, h, p["ln3"])
+        h = h + L.ffn(hh, p["mlp"], act=cfg.act, gated=cfg.gated_ffn)
+        return constrain(h, "batch", "seq_act", "embed")
+
+    if cfg.remat_policy == "full":
+        layer = jax.checkpoint(layer)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(lambda h, p: (layer(p, h), None), x, params["dec_blocks"])
+    else:
+        for i in range(cfg.n_dec_layers):
+            x = layer(params["dec_blocks"][str(i)], x)
+    x = L.apply_norm(cfg.norm, x, params["final_norm"])
+    if cfg.tie_embeddings:
+        return L.unembed(x, params["embed"]["table"], transpose=True)
+    return L.unembed(x, params["lm_head"]["w"], transpose=False)
+
+
+def forward(cfg: EncDecConfig, params: dict, src_embeds: jax.Array, tokens: jax.Array):
+    enc_out = encode(cfg, params, src_embeds)
+    logits = decode_train(cfg, params, enc_out, tokens)
+    return constrain(logits, "batch", "seq_act", "vocab")
+
+
+def loss_fn(cfg: EncDecConfig, params: dict, batch: dict) -> jax.Array:
+    logits = forward(cfg, params, batch["src_embeds"], batch["tokens"])
+    return L.softmax_cross_entropy(
+        logits, batch["labels"], valid_vocab=cfg.vocab_size, mask=batch.get("mask")
+    )
+
+
+# ---------------------------------------------------------------------------
+# Incremental decode: self-attn KV cache + precomputed cross-attn K/V
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: EncDecConfig, params: dict, enc_out: jax.Array, batch: int,
+               max_len: int, dtype=None) -> dict:
+    """Build the decode cache: empty self-attn KV + cross K/V from enc_out."""
+    dtype = dtype or cfg.dtype
+    Ld, Hs, D = cfg.n_dec_layers, cfg.kv_stored_heads, cfg.head_dim
+    S_src = enc_out.shape[1]
+    Hkv = cfg.n_kv_heads
+
+    def cross_kv(p):
+        k = L.dense(enc_out, p["cross_attn"]["wk"]).reshape(batch, S_src, Hkv, D)
+        v = L.dense(enc_out, p["cross_attn"]["wv"]).reshape(batch, S_src, Hkv, D)
+        if cfg.kv_repl > 1:
+            k = jnp.repeat(k, cfg.kv_repl, axis=2)
+            v = jnp.repeat(v, cfg.kv_repl, axis=2)
+        return {"k": k.astype(dtype), "v": v.astype(dtype)}
+
+    if cfg.scan_layers:
+        cross = jax.vmap(cross_kv)(params["dec_blocks"])
+    else:
+        per = [cross_kv(params["dec_blocks"][str(i)]) for i in range(Ld)]
+        cross = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per)
+    return {
+        "k": jnp.zeros((Ld, batch, max_len, Hs, D), dtype),
+        "v": jnp.zeros((Ld, batch, max_len, Hs, D), dtype),
+        "cross": cross,
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(cfg: EncDecConfig, params: dict, cache: dict, tokens: jax.Array):
+    """tokens (B, S_new) -> (logits, new_cache). Cross-attn K/V reused."""
+    B, Sn = tokens.shape
+    length = cache["length"]
+    pos = length + jnp.broadcast_to(jnp.arange(Sn, dtype=jnp.int32), (B, Sn))
+    x = L.embed(tokens, params["embed"]["table"])
+    Hq, D = cfg.n_heads, cfg.head_dim
+
+    def layer(h, xs):
+        p, ck, cv, cross = xs
+        hh = L.apply_norm(cfg.norm, h, p["ln1"])
+        q = L.dense(hh, p["self_attn"]["wq"]).reshape(B, Sn, Hq, D)
+        k = L.dense(hh, p["self_attn"]["wk"]).reshape(B, Sn, cfg.n_kv_heads, D)
+        v = L.dense(hh, p["self_attn"]["wv"]).reshape(B, Sn, cfg.n_kv_heads, D)
+        q = L.apply_rope(q, pos, cfg.rope_theta, D)
+        k = L.apply_rope(k, pos, cfg.rope_theta, D)
+        if cfg.kv_repl > 1:
+            k = jnp.repeat(k, cfg.kv_repl, axis=2)
+            v = jnp.repeat(v, cfg.kv_repl, axis=2)
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, length, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, length, 0, 0))
+        ck = constrain(ck, "batch", "kv_seq", "kv_heads_stored", None)
+        cv = constrain(cv, "batch", "kv_seq", "kv_heads_stored", None)
+        Smax = ck.shape[1]
+        kv_pos = jnp.broadcast_to(jnp.arange(Smax, dtype=jnp.int32), (B, Smax))
+        mask = L.attention_mask(pos, kv_pos, causal=True)
+        mask = mask & (kv_pos < (length + Sn))[:, None, None, :]
+        attn = L.gqa_attention(q, ck, cv, mask)
+        h = h + L.dense(attn.reshape(B, Sn, -1), p["self_attn"]["wo"])
+        # cross attention against precomputed K/V
+        hh = L.apply_norm(cfg.norm, h, p["ln2"])
+        qc = L.dense(hh, p["cross_attn"]["wq"]).reshape(B, Sn, Hq, D)
+        attn_c = L.gqa_attention(qc, cross["k"], cross["v"], None)
+        h = h + L.dense(attn_c.reshape(B, Sn, -1), p["cross_attn"]["wo"])
+        hh = L.apply_norm(cfg.norm, h, p["ln3"])
+        h = h + L.ffn(hh, p["mlp"], act=cfg.act, gated=cfg.gated_ffn)
+        return h, {"k": ck, "v": cv}
+
+    if cfg.scan_layers:
+        x, new_kv = jax.lax.scan(
+            layer, x, (params["dec_blocks"], cache["k"], cache["v"], cache["cross"])
+        )
+    else:
+        ks, vs = [], []
+        for i in range(cfg.n_dec_layers):
+            cross_i = jax.tree_util.tree_map(lambda a: a[i], cache["cross"])
+            x, ncl = layer(x, (params["dec_blocks"][str(i)], cache["k"][i], cache["v"][i], cross_i))
+            ks.append(ncl["k"]); vs.append(ncl["v"])
+        new_kv = {"k": jnp.stack(ks), "v": jnp.stack(vs)}
+
+    x = L.apply_norm(cfg.norm, x, params["final_norm"])
+    if cfg.tie_embeddings:
+        logits = L.unembed(x, params["embed"]["table"], transpose=True)
+    else:
+        logits = L.unembed(x, params["lm_head"]["w"], transpose=False)
+    new_cache = {"k": new_kv["k"], "v": new_kv["v"], "cross": cache["cross"],
+                 "length": length + Sn}
+    return logits, new_cache
+
+
+def prefill(cfg: EncDecConfig, params: dict, src_embeds: jax.Array,
+            tokens: jax.Array, max_len: int):
+    enc_out = encode(cfg, params, src_embeds)
+    cache = init_cache(cfg, params, enc_out, tokens.shape[0], max_len)
+    return decode_step(cfg, params, cache, tokens)

@@ -1,0 +1,434 @@
+"""Griffin-style hybrid LM (RG-LRU + local attention) — covers
+recurrentgemma-9b: pattern (recurrent, recurrent, local-attention) repeated,
+MQA (kv=1), sliding window 2048.
+
+RG-LRU recurrence (Griffin, arXiv:2402.19427):
+    r_t = sigmoid(W_a x_t + b_a)          recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)          input gate
+    a_t = exp(-c * softplus(Lambda) * r_t)        per-channel decay in (0,1)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The recurrence is diagonal, so training/prefill uses the same chunked
+associative-scan as the Mamba path (elementwise, no state dim).  Decode keeps
+(h, conv window) per recurrent layer and a fixed-size *ring-buffer* KV cache of
+``window`` slots per attention layer — long_500k decode is O(window), not O(S).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.models import transformer as T
+
+_RGLRU_C = 8.0
+
+
+@dataclasses.dataclass(frozen=True)
+class GriffinConfig:
+    name: str = "griffin-lm"
+    n_layers: int = 6  # must be divisible by len(pattern)
+    pattern: tuple = ("rec", "rec", "attn")
+    d_model: int = 256
+    d_rnn: int = 256  # lru width
+    n_heads: int = 4
+    n_kv_heads: int = 1  # MQA
+    head_dim: int = 64
+    d_ff: int = 1024
+    vocab_size: int = 1000
+    vocab_multiple: int = 256
+    window: int = 128  # local attention window
+    rope_theta: float = 1e4
+    conv_width: int = 4
+    rglru_blocks: int = 0  # 0 -> n_heads; block-diagonal gate weights
+    norm: str = "rmsnorm"
+    act: str = "gelu_tanh"
+    gated_ffn: bool = True
+    tie_embeddings: bool = True
+    logit_softcap: Optional[float] = 30.0
+    dtype: Any = jnp.float32
+    scan_layers: bool = True  # scan over *pattern repeats*
+    remat_policy: str = "none"
+    chunk: int = 256
+    kv_repl: int = 1
+    probe_unroll: bool = False  # python-loop chunks/blocks (cost probe)
+
+    @property
+    def padded_vocab(self) -> int:
+        return L.padded_vocab(self.vocab_size, self.vocab_multiple)
+
+    @property
+    def n_repeats(self) -> int:
+        assert self.n_layers % len(self.pattern) == 0
+        return self.n_layers // len(self.pattern)
+
+    @property
+    def kv_stored_heads(self) -> int:
+        return self.n_kv_heads * self.kv_repl
+
+    @property
+    def gate_blocks(self) -> int:
+        return self.rglru_blocks or self.n_heads
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_recurrent(cfg: GriffinConfig, key) -> dict:
+    ks = jax.random.split(key, 6)
+    d, dr = cfg.d_model, cfg.d_rnn
+    nb = cfg.gate_blocks
+    bw = dr // nb
+    # Lambda init so a^c in (0.9, 0.999) at r=1 (Griffin appendix).
+    u = jax.random.uniform(ks[4], (dr,), minval=0.9**2, maxval=0.999**2)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / (2.0 * _RGLRU_C)))  # inv-softplus
+    # Gate weights are BLOCK-DIAGONAL per head (faithful to recurrentgemma's
+    # BlockDiagonalLinear) — no cross-block channel mixing, so a TP-sharded
+    # d_rnn computes its gates entirely locally (no all-reduce; §Perf i4).
+    blk = lambda k: (jax.random.normal(k, (nb, bw, bw)) * (0.5 / np.sqrt(bw))).astype(cfg.dtype)
+    return {
+        "in_x": {"w": L.init_dense(ks[0], d, dr, cfg.dtype)},
+        "in_gate": {"w": L.init_dense(ks[1], d, dr, cfg.dtype)},
+        "conv": {
+            "w": (jax.random.normal(ks[2], (cfg.conv_width, dr)) / np.sqrt(cfg.conv_width)).astype(cfg.dtype),
+            "b": jnp.zeros((dr,), cfg.dtype),
+        },
+        "rglru": {
+            "w_a": blk(ks[3]),
+            "b_a": jnp.zeros((dr,), cfg.dtype),
+            "w_x": blk(ks[5]),
+            "b_x": jnp.zeros((dr,), cfg.dtype),
+            "lam": lam.astype(jnp.float32),
+        },
+        "out_proj": {"w": L.init_dense(ks[0], dr, d, cfg.dtype)},
+    }
+
+
+def _init_attn(cfg: GriffinConfig, key) -> dict:
+    ks = jax.random.split(key, 4)
+    Hq, Hkv, D, d = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_model
+    return {
+        "wq": L.init_dense(ks[0], d, Hq * D, cfg.dtype),
+        "wk": L.init_dense(ks[1], d, Hkv * D, cfg.dtype),
+        "wv": L.init_dense(ks[2], d, Hkv * D, cfg.dtype),
+        "wo": L.init_dense(ks[3], Hq * D, d, cfg.dtype),
+    }
+
+
+def _init_layer(cfg: GriffinConfig, kind: str, key) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": L.init_norm(cfg.norm, cfg.d_model, cfg.dtype),
+        "ln2": L.init_norm(cfg.norm, cfg.d_model, cfg.dtype),
+        "mlp": L.init_ffn(k2, cfg.d_model, cfg.d_ff, cfg.dtype, gated=cfg.gated_ffn),
+    }
+    if kind == "rec":
+        p["rec"] = _init_recurrent(cfg, k1)
+    else:
+        p["attn"] = _init_attn(cfg, k1)
+    return p
+
+
+def init(cfg: GriffinConfig, key) -> dict:
+    k_embed, k_blocks = jax.random.split(key)
+    V = cfg.padded_vocab
+    params: dict = {
+        "embed": {"table": (jax.random.normal(k_embed, (V, cfg.d_model)) * 0.02).astype(cfg.dtype)},
+        "final_norm": L.init_norm(cfg.norm, cfg.d_model, cfg.dtype),
+    }
+    R = cfg.n_repeats
+    rkeys = jax.random.split(k_blocks, R)
+
+    def init_repeat(k):
+        lk = jax.random.split(k, len(cfg.pattern))
+        return {f"{i}_{kind}": _init_layer(cfg, kind, lk[i]) for i, kind in enumerate(cfg.pattern)}
+
+    if cfg.scan_layers:
+        params["repeats"] = jax.vmap(init_repeat)(rkeys)
+    else:
+        params["repeats"] = {str(r): init_repeat(rkeys[r]) for r in range(R)}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {"w": L.init_dense(k_embed, cfg.d_model, V, cfg.dtype)}
+    return params
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+
+def _block_dense(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Block-diagonal linear: x (B,S,dr), w (nb,bw,bw) -> (B,S,dr)."""
+    B, S, dr = x.shape
+    nb, bw, _ = w.shape
+    xb = x.reshape(B, S, nb, bw)
+    y = jnp.einsum("bsnw,nwk->bsnk", xb, w, preferred_element_type=jnp.float32)
+    return y.reshape(B, S, dr) + b.astype(jnp.float32)
+
+
+def _rglru_coeffs(p: dict, x: jax.Array):
+    """x: (B,S,dr) pre-activation branch.  Returns (a, b) of the diagonal
+    recurrence h = a*h + b, both (B,S,dr) float32."""
+    r = jax.nn.sigmoid(_block_dense(x, p["w_a"], p["b_a"]))
+    i = jax.nn.sigmoid(_block_dense(x, p["w_x"], p["b_x"]))
+    log_a = -_RGLRU_C * jax.nn.softplus(p["lam"]) * r  # (B,S,dr)
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) computed stably: sqrt(-expm1(2*log_a))
+    beta = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    b = beta * (i * x.astype(jnp.float32))
+    return a, b
+
+
+def _scan_diag(a: jax.Array, b: jax.Array, h0: jax.Array, chunk: int,
+               unroll: bool = False):
+    """Diagonal recurrence h_t = a_t h_{t-1} + b_t, chunked scan.
+    a, b: (B,S,d) float32; h0: (B,d).  Returns (h_all, h_last)."""
+    B, S, d = a.shape
+    chunk = min(chunk, S)
+    if S % chunk != 0:
+        chunk = S
+    nc = S // chunk
+    a_c = a.reshape(B, nc, chunk, d).transpose(1, 0, 2, 3)
+    b_c = b.reshape(B, nc, chunk, d).transpose(1, 0, 2, 3)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    def body(h, xs):
+        ac, bc = xs
+        bc = bc.at[:, 0].add(ac[:, 0] * h)
+        _, bb = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        return bb[:, -1], bb
+
+    if unroll:
+        h, hs = h0, []
+        for i in range(nc):
+            h, hh = body(h, (a_c[i], b_c[i]))
+            hs.append(hh)
+        h_last, h_chunks = h, jnp.stack(hs)
+    else:
+        h_last, h_chunks = jax.lax.scan(body, h0, (a_c, b_c))
+    return h_chunks.transpose(1, 0, 2, 3).reshape(B, S, d), h_last
+
+
+def _recurrent_mixer(cfg: GriffinConfig, p: dict, x: jax.Array, state: Optional[dict]):
+    """Griffin recurrent block. x (B,S,d) -> (y, new_state)."""
+    B, S, _ = x.shape
+    xb = L.dense(x, p["in_x"]["w"])  # (B,S,dr) recurrent branch
+    gate = jax.nn.gelu(L.dense(x, p["in_gate"]["w"]).astype(jnp.float32))
+    xb = constrain(xb, "batch", "seq_act", "inner")
+    conv_hist = state["conv"] if state is not None else None
+    from repro.models.ssm import _conv1d  # shared depthwise causal conv
+
+    xc, new_conv = _conv1d(xb, p["conv"]["w"], p["conv"]["b"], conv_hist)
+    a, b = _rglru_coeffs(p["rglru"], xc)
+    h0 = state["h"] if state is not None else jnp.zeros((B, cfg.d_rnn), jnp.float32)
+    h_all, h_last = _scan_diag(a, b, h0, cfg.chunk, unroll=cfg.probe_unroll)
+    y = (h_all * gate).astype(x.dtype)
+    out = L.dense(y, p["out_proj"]["w"])
+    return out, {"h": h_last, "conv": new_conv}
+
+
+# ---------------------------------------------------------------------------
+# Local attention (ring-buffer cache for decode)
+# ---------------------------------------------------------------------------
+
+
+def _attn_full(cfg: GriffinConfig, p: dict, x: jax.Array, positions: jax.Array):
+    B, S, _ = x.shape
+    Hq, Hkv, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = L.dense(x, p["wq"]).reshape(B, S, Hq, D)
+    k = L.dense(x, p["wk"]).reshape(B, S, Hkv, D)
+    v = L.dense(x, p["wv"]).reshape(B, S, Hkv, D)
+    q = L.apply_rope(q, positions, cfg.rope_theta, D)
+    k = L.apply_rope(k, positions, cfg.rope_theta, D)
+    q = constrain(q, "batch", "seq", "heads", None)
+    attn = L.blocked_causal_attention(
+        q, k, v, positions, window=cfg.window,
+        # probe mode unrolls blocks in python: keep the count low
+        block_q=4096 if cfg.probe_unroll else 1024,
+        unroll=cfg.probe_unroll,
+    )
+    return L.dense(attn.reshape(B, S, -1), p["wo"])
+
+
+def _attn_decode(cfg: GriffinConfig, p: dict, cache_l: dict, x: jax.Array,
+                 positions: jax.Array, length: jax.Array):
+    """Ring-buffer local attention decode: cache k/v are (B, W, Hs, D) with
+    slot = position % window."""
+    B, Sn, _ = x.shape
+    Hq, Hkv, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    W = cache_l["k"].shape[1]
+    q = L.dense(x, p["wq"]).reshape(B, Sn, Hq, D)
+    k = L.dense(x, p["wk"]).reshape(B, Sn, Hkv, D)
+    v = L.dense(x, p["wv"]).reshape(B, Sn, Hkv, D)
+    q = L.apply_rope(q, positions, cfg.rope_theta, D)
+    k = L.apply_rope(k, positions, cfg.rope_theta, D)
+    if cfg.kv_repl > 1:
+        k = jnp.repeat(k, cfg.kv_repl, axis=2)
+        v = jnp.repeat(v, cfg.kv_repl, axis=2)
+    slots = positions % W  # (B, Sn)
+    ck = cache_l["k"]
+    cv = cache_l["v"]
+    bidx = jnp.arange(B)[:, None]
+    ck = ck.at[bidx, slots].set(k.astype(ck.dtype))
+    cv = cv.at[bidx, slots].set(v.astype(cv.dtype))
+    # positions currently stored in each slot
+    slot_ids = jnp.arange(W, dtype=jnp.int32)[None, :]  # (1, W)
+    last = positions[:, -1:]  # (B,1)
+    # slot s holds the largest pos <= last with pos % W == s
+    stored_pos = last - ((last - slot_ids) % W)
+    valid = stored_pos >= 0
+    mask = L.attention_mask(positions, stored_pos, causal=True, window=cfg.window)
+    mask = mask & valid[:, None, None, :]
+    q = constrain(q, "batch", None, "heads", None)
+    attn = L.gqa_attention(q, ck, cv, mask)
+    out = L.dense(attn.reshape(B, Sn, -1), p["wo"])
+    return out, {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# Blocks / forward / decode
+# ---------------------------------------------------------------------------
+
+
+def _layer(cfg: GriffinConfig, kind: str, p: dict, x: jax.Array, positions: jax.Array):
+    h = L.apply_norm(cfg.norm, x, p["ln1"])
+    if kind == "rec":
+        y, _ = _recurrent_mixer(cfg, p["rec"], h, None)
+    else:
+        y = _attn_full(cfg, p["attn"], h, positions)
+    x = x + y
+    h = L.apply_norm(cfg.norm, x, p["ln2"])
+    x = x + L.ffn(h, p["mlp"], act=cfg.act, gated=cfg.gated_ffn)
+    return constrain(x, "batch", "seq_act", "embed")
+
+
+def _repeat_fwd(cfg: GriffinConfig, p_rep: dict, x: jax.Array, positions: jax.Array):
+    for i, kind in enumerate(cfg.pattern):
+        x = _layer(cfg, kind, p_rep[f"{i}_{kind}"], x, positions)
+    return x
+
+
+def forward(cfg: GriffinConfig, params: dict, tokens: jax.Array,
+            positions: Optional[jax.Array] = None) -> jax.Array:
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = L.embed(tokens, params["embed"]["table"])
+    x = x * jnp.sqrt(jnp.asarray(cfg.d_model, x.dtype))  # gemma-style scaling
+    x = constrain(x, "batch", "seq_act", "embed")
+
+    rep = lambda p, h: _repeat_fwd(cfg, p, h, positions)
+    if cfg.remat_policy == "full":
+        rep = jax.checkpoint(rep)
+    elif cfg.remat_policy == "dots":
+        rep = jax.checkpoint(rep, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    if cfg.scan_layers:
+        def body(h, p):
+            return rep(p, h), None
+        x, _ = jax.lax.scan(body, x, params["repeats"])
+    else:
+        for r in range(cfg.n_repeats):
+            x = rep(params["repeats"][str(r)], x)
+
+    x = L.apply_norm(cfg.norm, x, params["final_norm"])
+    if cfg.tie_embeddings:
+        logits = L.unembed(x, params["embed"]["table"], transpose=True)
+    else:
+        logits = L.unembed(x, params["lm_head"]["w"], transpose=False)
+    if cfg.logit_softcap is not None:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return constrain(logits, "batch", "seq_act", "vocab")
+
+
+def loss_fn(cfg: GriffinConfig, params: dict, batch: dict) -> jax.Array:
+    logits = forward(cfg, params, batch["tokens"])
+    return L.softmax_cross_entropy(
+        logits, batch["labels"], valid_vocab=cfg.vocab_size, mask=batch.get("mask")
+    )
+
+
+def init_cache(cfg: GriffinConfig, batch: int, max_len: int, dtype=None) -> dict:
+    """Per-repeat state: rec layers carry (h, conv), attn layers carry a
+    ring-buffer KV of ``window`` slots — total state is O(window), so the
+    512k-decode cell stays sub-quadratic AND sub-linear in memory."""
+    dtype = dtype or cfg.dtype
+    R = cfg.n_repeats
+    W = min(cfg.window, max_len)
+    Hs = cfg.kv_stored_heads
+    state: dict = {}
+    for i, kind in enumerate(cfg.pattern):
+        if kind == "rec":
+            state[f"{i}_{kind}"] = {
+                "h": jnp.zeros((R, batch, cfg.d_rnn), jnp.float32),
+                "conv": jnp.zeros((R, batch, cfg.conv_width - 1, cfg.d_rnn), dtype),
+            }
+        else:
+            state[f"{i}_{kind}"] = {
+                "k": jnp.zeros((R, batch, W, Hs, cfg.head_dim), dtype),
+                "v": jnp.zeros((R, batch, W, Hs, cfg.head_dim), dtype),
+            }
+    state["length"] = jnp.zeros((), jnp.int32)
+    return state
+
+
+def decode_step(cfg: GriffinConfig, params: dict, cache: dict, tokens: jax.Array):
+    B, Sn = tokens.shape
+    length = cache["length"]
+    positions = length + jnp.broadcast_to(jnp.arange(Sn, dtype=jnp.int32), (B, Sn))
+    x = L.embed(tokens, params["embed"]["table"])
+    x = x * jnp.sqrt(jnp.asarray(cfg.d_model, x.dtype))
+
+    def repeat_step(h, xs):
+        p_rep, st_rep = xs
+        new_st = {}
+        for i, kind in enumerate(cfg.pattern):
+            key = f"{i}_{kind}"
+            p = p_rep[key]
+            hh = L.apply_norm(cfg.norm, h, p["ln1"])
+            if kind == "rec":
+                y, nst = _recurrent_mixer(cfg, p["rec"], hh, st_rep[key])
+            else:
+                y, nst = _attn_decode(cfg, p["attn"], st_rep[key], hh, positions, length)
+            h = h + y
+            hh = L.apply_norm(cfg.norm, h, p["ln2"])
+            h = h + L.ffn(hh, p["mlp"], act=cfg.act, gated=cfg.gated_ffn)
+            new_st[key] = nst
+        return h, new_st
+
+    layer_state = {k: v for k, v in cache.items() if k != "length"}
+    if cfg.scan_layers:
+        x, new_states = jax.lax.scan(repeat_step, x, (params["repeats"], layer_state))
+    else:
+        outs = []
+        for r in range(cfg.n_repeats):
+            st = jax.tree_util.tree_map(lambda a: a[r], layer_state)
+            x, nst = repeat_step(x, (params["repeats"][str(r)], st))
+            outs.append(nst)
+        new_states = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
+
+    x = L.apply_norm(cfg.norm, x, params["final_norm"])
+    if cfg.tie_embeddings:
+        logits = L.unembed(x, params["embed"]["table"], transpose=True)
+    else:
+        logits = L.unembed(x, params["lm_head"]["w"], transpose=False)
+    if cfg.logit_softcap is not None:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    new_cache = dict(new_states)
+    new_cache["length"] = length + Sn
+    return logits, new_cache
+
+
+def prefill(cfg: GriffinConfig, params: dict, tokens: jax.Array, max_len: int):
+    cache = init_cache(cfg, tokens.shape[0], max_len)
+    return decode_step(cfg, params, cache, tokens)

@@ -1,0 +1,313 @@
+"""Shared primitive layers for the LM model zoo.
+
+Everything here is a pure function over explicit parameter dicts — no module
+classes — so the merging engine can address every weight by its pytree path.
+
+Conventions:
+  * activations: (batch, seq, d_model) unless stated otherwise
+  * attention heads carried as separate axes: q (B, S, Hq, D), kv (B, S, Hkv, D)
+  * all matmuls accumulate in float32 (``preferred_element_type``) and cast
+    back to the activation dtype.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: Optional[jax.Array], eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        y = y * (1.0 + 0.0 + scale.astype(jnp.float32))  # scale stored as gamma
+    return y.astype(dt)
+
+
+def layer_norm(
+    x: jax.Array,
+    scale: Optional[jax.Array],
+    bias: Optional[jax.Array],
+    eps: float = 1e-5,
+) -> jax.Array:
+    """LayerNorm; pass ``scale=bias=None`` for OLMo-style non-parametric LN."""
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        y = y * scale.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(dt)
+
+
+def apply_norm(kind: str, x: jax.Array, params: dict) -> jax.Array:
+    if kind == "rmsnorm":
+        return rms_norm(x, params["scale"])
+    if kind == "layernorm":
+        return layer_norm(x, params["scale"], params.get("bias"))
+    if kind == "nonparam_ln":
+        return layer_norm(x, None, None)
+    raise ValueError(f"unknown norm kind: {kind}")
+
+
+def init_norm(kind: str, d: int, dtype) -> dict:
+    if kind == "rmsnorm":
+        return {"scale": jnp.zeros((d,), dtype)}  # stored as gamma offset (1+g)
+    if kind == "layernorm":
+        return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    if kind == "nonparam_ln":
+        return {}
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding (supports partial-rotary, e.g. StableLM pct=0.25)
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, rotary_dim: int, theta: float) -> jax.Array:
+    exponents = jnp.arange(0, rotary_dim, 2, dtype=jnp.float32) / rotary_dim
+    return 1.0 / (theta**exponents)  # (rotary_dim/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float, rotary_dim: int) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) int32. Rotates first ``rotary_dim``."""
+    dt = x.dtype
+    d = x.shape[-1]
+    rotary_dim = min(rotary_dim, d)
+    freqs = rope_frequencies(d, rotary_dim, theta)  # (rd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, rd/2)
+    cos = jnp.cos(angles)[:, :, None, :]  # (B, S, 1, rd/2)
+    sin = jnp.sin(angles)[:, :, None, :]
+    x_rot, x_pass = x[..., :rotary_dim], x[..., rotary_dim:]
+    x1, x2 = jnp.split(x_rot.astype(jnp.float32), 2, axis=-1)
+    out_rot = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out_rot.astype(dt), x_pass], axis=-1) if rotary_dim < d else out_rot.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Attention (reference jnp implementation; Pallas kernels mirror this oracle)
+# ---------------------------------------------------------------------------
+
+
+def attention_mask(
+    q_positions: jax.Array,
+    kv_positions: jax.Array,
+    causal: bool = True,
+    window: Optional[int] = None,
+) -> jax.Array:
+    """Boolean mask (B, 1, Sq, Skv): True = attend.
+
+    ``window`` gives sliding-window (local) attention: attend iff
+    0 <= q_pos - kv_pos < window.
+    """
+    qp = q_positions[:, None, :, None]
+    kp = kv_positions[:, None, None, :]
+    mask = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), dtype=bool)
+    if causal:
+        mask = mask & (kp <= qp)
+    if window is not None:
+        mask = mask & (qp - kp < window)
+    return mask
+
+
+def gqa_attention(
+    q: jax.Array,  # (B, Sq, Hq, D)
+    k: jax.Array,  # (B, Skv, Hkv, D)
+    v: jax.Array,  # (B, Skv, Hkv, D)
+    mask: Optional[jax.Array] = None,  # (B, 1, Sq, Skv) bool
+    scale: Optional[float] = None,
+    logit_softcap: Optional[float] = None,
+) -> jax.Array:
+    """Grouped-query attention reference. Returns (B, Sq, Hq, D)."""
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    assert Hq % Hkv == 0, f"Hq={Hq} not a multiple of Hkv={Hkv}"
+    G = Hq // Hkv
+    scale = (1.0 / np.sqrt(D)) if scale is None else scale
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    # scores: (B, Hkv, G, Sq, Skv)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k, preferred_element_type=jnp.float32)
+    scores = scores * scale
+    if logit_softcap is not None:
+        scores = jnp.tanh(scores / logit_softcap) * logit_softcap
+    if mask is not None:
+        scores = jnp.where(mask[:, :, None, :, :], scores, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+def blocked_causal_attention(
+    q: jax.Array,  # (B, S, Hq, D)
+    k: jax.Array,  # (B, S, Hkv, D)
+    v: jax.Array,
+    positions: jax.Array,  # (B, S)
+    window: Optional[int] = None,
+    block_q: int = 1024,
+    unroll: bool = False,
+) -> jax.Array:
+    """Causal (optionally sliding-window) attention computed one query block
+    at a time via ``lax.scan`` so only (B, H, block_q, S_kv) scores are live.
+
+    This is the HLO-level analogue of the flash-attention outer loop; for
+    ``window`` it slices keys to a static (window + block_q) span so local
+    attention is O(S * (W + block_q)).  Matches :func:`gqa_attention` exactly
+    (property-tested in tests/test_models.py).
+    """
+    B, S, Hq, D = q.shape
+    if S % block_q != 0:
+        return gqa_attention(q, k, v, attention_mask(positions, positions, True, window))
+    nb = S // block_q
+    qb = q.reshape(B, nb, block_q, Hq, D).transpose(1, 0, 2, 3, 4)
+    pb = positions.reshape(B, nb, block_q).transpose(1, 0, 2)
+
+    if window is not None:
+        span = window + block_q  # static key span per query block
+
+        def body(_, xs):
+            qi, pi, i = xs
+            s0 = i * block_q
+            start = jnp.maximum(0, s0 + block_q - span)
+            kk = jax.lax.dynamic_slice(k, (0, start, 0, 0), (B, min(span, S), k.shape[2], D))
+            vv = jax.lax.dynamic_slice(v, (0, start, 0, 0), (B, min(span, S), v.shape[2], D))
+            kv_pos = start + jnp.arange(min(span, S), dtype=jnp.int32)
+            kv_pos = jnp.broadcast_to(kv_pos, (B, min(span, S)))
+            mask = attention_mask(pi, kv_pos, causal=True, window=window)
+            return None, gqa_attention(qi, kk, vv, mask)
+    else:
+
+        def body(_, xs):
+            qi, pi, i = xs
+            kv_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+            mask = attention_mask(pi, kv_pos, causal=True, window=None)
+            return None, gqa_attention(qi, k, v, mask)
+
+    idx = jnp.arange(nb, dtype=jnp.int32)
+    if unroll:
+        # python loop (no HLO while) — used by the dry-run cost probe, where
+        # XLA's cost_analysis counts loop bodies only once
+        outs = [body(None, (qb[i], pb[i], jnp.int32(i)))[1] for i in range(nb)]
+        out = jnp.stack(outs)
+    else:
+        _, out = jax.lax.scan(body, None, (qb, pb, idx))
+    return out.transpose(1, 0, 2, 3, 4).reshape(B, S, Hq, D)
+
+
+# ---------------------------------------------------------------------------
+# Dense projections / FFN
+# ---------------------------------------------------------------------------
+
+
+def dense(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None) -> jax.Array:
+    out = jnp.einsum("...d,df->...f", x, w, preferred_element_type=jnp.float32)
+    if b is not None:
+        out = out + b.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+_ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+}
+
+
+def ffn(x: jax.Array, params: dict, act: str = "silu", gated: bool = True) -> jax.Array:
+    a = _ACTS[act]
+    if gated:
+        g = dense(x, params["w_gate"])
+        u = dense(x, params["w_up"])
+        return dense(a(g) * u, params["w_down"])
+    h = dense(x, params["w_up"], params.get("b_up"))
+    return dense(a(h), params["w_down"], params.get("b_down"))
+
+
+def init_ffn(key, d_model: int, d_ff: int, dtype, gated: bool = True, bias: bool = False) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / np.sqrt(d_model)
+    s_ff = 1.0 / np.sqrt(d_ff)
+    if gated:
+        return {
+            "w_gate": (jax.random.normal(k1, (d_model, d_ff)) * s_in).astype(dtype),
+            "w_up": (jax.random.normal(k2, (d_model, d_ff)) * s_in).astype(dtype),
+            "w_down": (jax.random.normal(k3, (d_ff, d_model)) * s_ff).astype(dtype),
+        }
+    p = {
+        "w_up": (jax.random.normal(k1, (d_model, d_ff)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(k2, (d_ff, d_model)) * s_ff).astype(dtype),
+    }
+    if bias:
+        p["b_up"] = jnp.zeros((d_ff,), dtype)
+        p["b_down"] = jnp.zeros((d_model,), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding with vocab padding
+# ---------------------------------------------------------------------------
+
+
+def padded_vocab(vocab_size: int, multiple: int = 256) -> int:
+    return int(-(-vocab_size // multiple) * multiple)
+
+
+def embed(tokens: jax.Array, table: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(x: jax.Array, table_or_head: jax.Array, transpose: bool) -> jax.Array:
+    """Logits over the *padded* vocab; caller slices/masks real vocab."""
+    if transpose:  # tied embeddings: table is (V, d)
+        return jnp.einsum("...d,vd->...v", x, table_or_head, preferred_element_type=jnp.float32)
+    return jnp.einsum("...d,dv->...v", x, table_or_head, preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+
+def softmax_cross_entropy(
+    logits: jax.Array,  # (..., V) float32
+    labels: jax.Array,  # (...,) int32
+    valid_vocab: Optional[int] = None,
+    mask: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Mean token cross-entropy; padded vocab ids masked out of the partition."""
+    logits = logits.astype(jnp.float32)
+    if valid_vocab is not None and valid_vocab < logits.shape[-1]:
+        pad = logits.shape[-1] - valid_vocab
+        neg = jnp.full((pad,), jnp.finfo(jnp.float32).min, logits.dtype)
+        logits = logits + jnp.concatenate([jnp.zeros((valid_vocab,), logits.dtype), neg])
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+@dataclasses.dataclass(frozen=True)
+class InitScale:
+    """Weight init scales (kept simple: scaled normal)."""
+
+    attn: float = 1.0
+    ffn: float = 1.0
+
+
+def init_dense(key, d_in: int, d_out: int, dtype, scale: float = 1.0) -> jax.Array:
+    return (jax.random.normal(key, (d_in, d_out)) * (scale / np.sqrt(d_in))).astype(dtype)

@@ -1,0 +1,403 @@
+"""Mixture-of-Experts decoder LM — covers deepseek-moe-16b (2 shared + 64
+routed, top-6, fine-grained experts, first layer dense) and olmoe-1b-7b
+(64 routed, top-8).
+
+Routing is the GShard/Switch capacity formulation expressed as einsums so the
+expert dimension shards over the ``expert`` (= ``model``) mesh axis and GSPMD
+lowers the dispatch/combine resharding into all-to-alls:
+
+    tokens (B,S,d) -> groups (G, s, d)
+    router -> top-k -> dispatch (G, s, E, C) / combine (G, s, E, C)
+    expert_in  = einsum(dispatch, x)   : (E, G, C, d)   <- a2a here
+    expert_out = per-expert FFN        : (E, G, C, d)
+    y          = einsum(combine, out)  : (G, s, d)      <- a2a back
+
+``group_size`` bounds the transient dispatch tensor (G*s*E*C); it is a
+first-class perf knob (see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass(frozen=True)
+class MoELMConfig(T.DenseLMConfig):
+    name: str = "moe-lm"
+    n_experts: int = 8
+    top_k: int = 2
+    n_shared_experts: int = 0  # deepseek: 2
+    d_ff_expert: int = 128  # per-expert hidden (the spec's d_ff)
+    d_ff_dense: int = 512  # dense-FFN layers (deepseek layer 0)
+    first_dense_layers: int = 0  # deepseek: 1
+    capacity_factor: float = 1.25
+    group_size: int = 512  # routing group (tokens)
+    norm_topk_prob: bool = False
+    router_aux_weight: float = 0.01
+
+    def capacity(self, s: int) -> int:
+        c = int(np.ceil(s * self.top_k * self.capacity_factor / self.n_experts))
+        return max(c, 1)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_moe_ffn(cfg: MoELMConfig, key) -> dict:
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    d, fe, E = cfg.d_model, cfg.d_ff_expert, cfg.n_experts
+    s_in, s_out = 1.0 / np.sqrt(d), 1.0 / np.sqrt(fe)
+    p = {
+        "router": {"w": (jax.random.normal(k1, (d, E)) * s_in).astype(jnp.float32)},
+        "experts": {
+            "w_gate": (jax.random.normal(k2, (E, d, fe)) * s_in).astype(cfg.dtype),
+            "w_up": (jax.random.normal(k3, (E, d, fe)) * s_in).astype(cfg.dtype),
+            "w_down": (jax.random.normal(k4, (E, fe, d)) * s_out).astype(cfg.dtype),
+        },
+    }
+    if cfg.n_shared_experts > 0:
+        p["shared"] = L.init_ffn(k5, d, cfg.n_shared_experts * fe, cfg.dtype, gated=True)
+    return p
+
+
+def _init_block(cfg: MoELMConfig, key, dense_ffn: bool) -> dict:
+    k_attn, k_ffn = jax.random.split(key)
+    base = T._init_block(
+        dataclasses.replace(cfg, d_ff=cfg.d_ff_dense), k_attn
+    )
+    if not dense_ffn:
+        del base["mlp"]
+        base["moe"] = _init_moe_ffn(cfg, k_ffn)
+    return base
+
+
+def init(cfg: MoELMConfig, key) -> dict:
+    k_embed, k_dense, k_blocks, k_head = jax.random.split(key, 4)
+    V = cfg.padded_vocab
+    params: dict = {
+        "embed": {"table": (jax.random.normal(k_embed, (V, cfg.d_model)) * 0.02).astype(cfg.dtype)},
+        "final_norm": L.init_norm(cfg.norm, cfg.d_model, cfg.dtype),
+    }
+    n_moe = cfg.n_layers - cfg.first_dense_layers
+    if cfg.first_dense_layers:
+        dkeys = jax.random.split(k_dense, cfg.first_dense_layers)
+        params["dense_blocks"] = {
+            str(i): _init_block(cfg, dkeys[i], dense_ffn=True)
+            for i in range(cfg.first_dense_layers)
+        }
+    bkeys = jax.random.split(k_blocks, n_moe)
+    if cfg.scan_layers:
+        params["blocks"] = jax.vmap(lambda k: _init_block(cfg, k, dense_ffn=False))(bkeys)
+    else:
+        params["blocks"] = {str(i): _init_block(cfg, bkeys[i], dense_ffn=False) for i in range(n_moe)}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {"w": L.init_dense(k_head, cfg.d_model, V, cfg.dtype)}
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Routing
+# ---------------------------------------------------------------------------
+
+
+def route(cfg: MoELMConfig, router_w: jax.Array, x: jax.Array):
+    """x: (G, s, d). Returns (dispatch (G,s,E,C) bool->dtype, combine (G,s,E,C),
+    aux_loss scalar)."""
+    G, s, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = cfg.capacity(s)
+    logits = jnp.einsum("gsd,de->gse", x.astype(jnp.float32), router_w)
+    probs = jax.nn.softmax(logits, axis=-1)  # (G, s, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)  # (G, s, K)
+    if cfg.norm_topk_prob:
+        gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+    sel = jax.nn.one_hot(expert_idx, E, dtype=jnp.float32)  # (G, s, K, E)
+
+    # position of each (token, k) within its expert queue; priority: lower k
+    # first, then token order (GShard ordering: iterate k-major over tokens).
+    sel_kmajor = jnp.swapaxes(sel, 1, 2)  # (G, K, s, E)
+    flat = sel_kmajor.reshape(G, K * s, E)
+    pos = jnp.cumsum(flat, axis=1) - flat  # (G, K*s, E) position if kept
+    pos = pos.reshape(G, K, s, E)
+    pos = jnp.swapaxes(pos, 1, 2)  # (G, s, K, E)
+    within_cap = (pos < C).astype(jnp.float32) * sel
+    pos_idx = jnp.sum(pos * sel, axis=-1).astype(jnp.int32)  # (G, s, K)
+    pos_oh = jax.nn.one_hot(pos_idx, C, dtype=jnp.float32)  # (G, s, K, C)
+
+    kept = within_cap  # (G, s, K, E) 1.0 iff routed and within capacity
+    dispatch = jnp.einsum("gske,gskc->gsec", kept, pos_oh)
+    combine = jnp.einsum("gske,gskc,gsk->gsec", kept, pos_oh, gate_vals)
+
+    # Switch-style load-balance aux loss.
+    density = jnp.mean(sel.sum(2), axis=1)  # (G, E) fraction routed
+    density_probs = jnp.mean(probs, axis=1)  # (G, E)
+    aux = jnp.mean(density * density_probs) * (E**2) / K
+    return dispatch, combine, aux
+
+
+def moe_ffn(cfg: MoELMConfig, p: dict, x: jax.Array):
+    """x: (B, S, d) -> (y, aux_loss)."""
+    B, S, d = x.shape
+    N = B * S
+    s = min(cfg.group_size, N)
+    assert N % s == 0, f"tokens {N} not divisible by group {s}"
+    G = N // s
+    xg = x.reshape(G, s, d)
+    dispatch, combine, aux = route(cfg, p["router"]["w"], xg)
+    dispatch = constrain(dispatch.astype(x.dtype), "moe_group", None, "expert", None)
+    combine = constrain(combine.astype(jnp.float32), "moe_group", None, "expert", None)
+
+    # dispatch -> (E, G, C, d): GSPMD all-to-all (groups->experts)
+    ein = jnp.einsum("gsec,gsd->egcd", dispatch, xg, preferred_element_type=jnp.float32).astype(x.dtype)
+    ein = constrain(ein, "expert", "moe_group", None, None)
+    w = p["experts"]
+    g = jnp.einsum("egcd,edf->egcf", ein, w["w_gate"], preferred_element_type=jnp.float32)
+    u = jnp.einsum("egcd,edf->egcf", ein, w["w_up"], preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    eout = jnp.einsum("egcf,efd->egcd", h, w["w_down"], preferred_element_type=jnp.float32).astype(x.dtype)
+    eout = constrain(eout, "expert", "moe_group", None, None)
+
+    y = jnp.einsum("gsec,egcd->gsd", combine.astype(x.dtype), eout, preferred_element_type=jnp.float32)
+    y = y.astype(x.dtype).reshape(B, S, d)
+    if cfg.n_shared_experts > 0:
+        y = y + L.ffn(x, p["shared"], act=cfg.act, gated=True)
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# Blocks / forward / decode
+# ---------------------------------------------------------------------------
+
+
+def _block(cfg: MoELMConfig, p: dict, x: jax.Array, positions: jax.Array, dense_ffn: bool):
+    h = L.apply_norm(cfg.norm, x, p["ln1"])
+    q, k, v = T._qkv(cfg, p["attn"], h, positions)
+    q = constrain(q, "batch", "seq", "heads", None)
+    k = constrain(k, "batch", "seq", "kv_heads", None)
+    v = constrain(v, "batch", "seq", "kv_heads", None)
+    mask = L.attention_mask(positions, positions, causal=True, window=cfg.window)
+    attn = L.gqa_attention(q, k, v, mask)
+    x = x + L.dense(attn.reshape(x.shape[0], x.shape[1], -1), p["attn"]["wo"])
+    h = L.apply_norm(cfg.norm, x, p["ln2"])
+    if dense_ffn:
+        return x + L.ffn(h, p["mlp"], act=cfg.act, gated=cfg.gated_ffn), 0.0
+    y, aux = moe_ffn(cfg, p["moe"], h)
+    return x + y, aux
+
+
+def forward(cfg: MoELMConfig, params: dict, tokens: jax.Array,
+            positions: Optional[jax.Array] = None):
+    """Returns (logits, aux_loss)."""
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = L.embed(tokens, params["embed"]["table"])
+    x = constrain(x, "batch", "seq_act", "embed")
+    aux_total = jnp.zeros((), jnp.float32)
+
+    for i in range(cfg.first_dense_layers):
+        x, _ = _block(cfg, params["dense_blocks"][str(i)], x, positions, dense_ffn=True)
+
+    block = T._maybe_remat(
+        cfg, lambda p, h: _block(cfg, p, h, positions, dense_ffn=False)
+    )
+    if cfg.scan_layers:
+        def body(carry, p):
+            h, aux = carry
+            h, a = block(p, h)
+            return (h, aux + a), None
+        (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), params["blocks"])
+    else:
+        n_moe = cfg.n_layers - cfg.first_dense_layers
+        for i in range(n_moe):
+            x, a = block(params["blocks"][str(i)], x)
+            aux_total = aux_total + a
+
+    x = L.apply_norm(cfg.norm, x, params["final_norm"])
+    if cfg.tie_embeddings:
+        logits = L.unembed(x, params["embed"]["table"], transpose=True)
+    else:
+        logits = L.unembed(x, params["lm_head"]["w"], transpose=False)
+    return constrain(logits, "batch", "seq_act", "vocab"), aux_total
+
+
+def loss_fn(cfg: MoELMConfig, params: dict, batch: dict) -> jax.Array:
+    logits, aux = forward(cfg, params, batch["tokens"])
+    ce = L.softmax_cross_entropy(
+        logits, batch["labels"], valid_vocab=cfg.vocab_size, mask=batch.get("mask")
+    )
+    return ce + cfg.router_aux_weight * aux
+
+
+# -- decode -----------------------------------------------------------------
+
+
+def init_cache(cfg: MoELMConfig, batch: int, max_len: int, dtype=None) -> dict:
+    """KV cache split into dense-layer and moe-layer buffers so the scan
+    carries only the moe stack (in-place) and the (few) dense layers never
+    force whole-cache copies."""
+    dtype = dtype or cfg.dtype
+    Hs, D = cfg.kv_stored_heads, cfg.head_dim
+    nd = cfg.first_dense_layers
+    nm = cfg.n_layers - nd
+    out = {
+        "k": jnp.zeros((nm, batch, max_len, Hs, D), dtype),
+        "v": jnp.zeros((nm, batch, max_len, Hs, D), dtype),
+        "length": jnp.zeros((), jnp.int32),
+    }
+    if nd:
+        out["k_dense"] = jnp.zeros((nd, batch, max_len, Hs, D), dtype)
+        out["v_dense"] = jnp.zeros((nd, batch, max_len, Hs, D), dtype)
+    return out
+
+
+def _block_decode(cfg: MoELMConfig, p: dict, cache_l: dict, x, positions, length, dense_ffn: bool):
+    B, Sn, _ = x.shape
+    h = L.apply_norm(cfg.norm, x, p["ln1"])
+    q, k, v = T._qkv(cfg, p["attn"], h, positions)
+    ck, cv = T._write_kv(cache_l["k"], cache_l["v"], k, v, length, cfg.kv_repl)
+    ck = constrain(ck, "batch", "kv_seq", "kv_heads_stored", None)
+    cv = constrain(cv, "batch", "kv_seq", "kv_heads_stored", None)
+    Smax = ck.shape[1]
+    kv_positions = jnp.broadcast_to(jnp.arange(Smax, dtype=jnp.int32), (B, Smax))
+    mask = L.attention_mask(positions, kv_positions, causal=True, window=cfg.window)
+    mask = mask & (kv_positions < (length + Sn))[:, None, None, :]
+    attn = L.gqa_attention(q, ck, cv, mask)
+    x = x + L.dense(attn.reshape(B, Sn, -1), p["attn"]["wo"])
+    h = L.apply_norm(cfg.norm, x, p["ln2"])
+    if dense_ffn:
+        return x + L.ffn(h, p["mlp"], act=cfg.act, gated=cfg.gated_ffn), {"k": ck, "v": cv}
+    y, _ = moe_ffn(cfg, p["moe"], h)
+    return x + y, {"k": ck, "v": cv}
+
+
+def decode_step(cfg: MoELMConfig, params: dict, cache: dict, tokens: jax.Array):
+    B, Sn = tokens.shape
+    length = cache["length"]
+    positions = length + jnp.broadcast_to(jnp.arange(Sn, dtype=jnp.int32), (B, Sn))
+    x = L.embed(tokens, params["embed"]["table"])
+
+    nd = cfg.first_dense_layers
+    new_cache = {"length": length + Sn}
+    if nd:
+        kd, vd = cache["k_dense"], cache["v_dense"]
+        for i in range(nd):
+            cl = {"k": kd[i], "v": vd[i]}
+            x, ncl = _block_decode(cfg, params["dense_blocks"][str(i)], cl, x, positions, length, True)
+            kd = kd.at[i].set(ncl["k"])
+            vd = vd.at[i].set(ncl["v"])
+        new_cache["k_dense"], new_cache["v_dense"] = kd, vd
+
+    # moe cache travels as scan CARRY, updated in place at a layer offset
+    ck, cv = cache["k"], cache["v"]
+    if cfg.scan_layers:
+        def body(carry, p):
+            h, ck_, cv_, li = carry
+            cl = {
+                "k": jax.lax.dynamic_index_in_dim(ck_, li, 0, keepdims=False),
+                "v": jax.lax.dynamic_index_in_dim(cv_, li, 0, keepdims=False),
+            }
+            h, ncl = _block_decode(cfg, p, cl, h, positions, length, False)
+            ck_ = jax.lax.dynamic_update_index_in_dim(ck_, ncl["k"], li, 0)
+            cv_ = jax.lax.dynamic_update_index_in_dim(cv_, ncl["v"], li, 0)
+            return (h, ck_, cv_, li + 1), None
+
+        (x, ck, cv, _), _ = jax.lax.scan(
+            body, (x, ck, cv, jnp.int32(0)), params["blocks"]
+        )
+    else:
+        for i in range(cfg.n_layers - nd):
+            cl = {"k": ck[i], "v": cv[i]}
+            x, ncl = _block_decode(cfg, params["blocks"][str(i)], cl, x, positions, length, False)
+            ck = ck.at[i].set(ncl["k"])
+            cv = cv.at[i].set(ncl["v"])
+    new_cache["k"], new_cache["v"] = ck, cv
+
+    x = L.apply_norm(cfg.norm, x, params["final_norm"])
+    if cfg.tie_embeddings:
+        logits = L.unembed(x, params["embed"]["table"], transpose=True)
+    else:
+        logits = L.unembed(x, params["lm_head"]["w"], transpose=False)
+    return logits, new_cache
+
+
+def _block_prefill(cfg: MoELMConfig, p: dict, x, positions, max_len: int,
+                   dense_ffn: bool):
+    """Blocked (flash-analogue) prefill layer + padded KV emit (see
+    transformer._block_prefill)."""
+    B, S, _ = x.shape
+    h = L.apply_norm(cfg.norm, x, p["ln1"])
+    q, k, v = T._qkv(cfg, p["attn"], h, positions)
+    q = constrain(q, "batch", "seq", "heads", None)
+    k = constrain(k, "batch", "seq", "kv_heads", None)
+    v = constrain(v, "batch", "seq", "kv_heads", None)
+    attn = L.blocked_causal_attention(
+        q, k, v, positions, window=cfg.window,
+        block_q=cfg.prefill_block_q, unroll=cfg.probe_unroll,
+    )
+    x = x + L.dense(attn.reshape(B, S, -1), p["attn"]["wo"])
+    h = L.apply_norm(cfg.norm, x, p["ln2"])
+    if dense_ffn:
+        x = x + L.ffn(h, p["mlp"], act=cfg.act, gated=cfg.gated_ffn)
+    else:
+        y, _ = moe_ffn(cfg, p["moe"], h)
+        x = x + y
+    x = constrain(x, "batch", "seq_act", "embed")
+    if cfg.kv_repl > 1:
+        k = jnp.repeat(k, cfg.kv_repl, axis=2)
+        v = jnp.repeat(v, cfg.kv_repl, axis=2)
+    pad = [(0, 0), (0, max_len - S), (0, 0), (0, 0)]
+    ck = constrain(jnp.pad(k.astype(cfg.dtype), pad),
+                   "batch", "kv_seq", "kv_heads_stored", None)
+    cv = constrain(jnp.pad(v.astype(cfg.dtype), pad),
+                   "batch", "kv_seq", "kv_heads_stored", None)
+    return x, {"k": ck, "v": cv}
+
+
+def prefill(cfg: MoELMConfig, params: dict, tokens: jax.Array, max_len: int):
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = L.embed(tokens, params["embed"]["table"])
+    x = constrain(x, "batch", "seq_act", "embed")
+
+    dense_kv = []
+    for i in range(cfg.first_dense_layers):
+        x, kvl = _block_prefill(cfg, params["dense_blocks"][str(i)], x,
+                                positions, max_len, dense_ffn=True)
+        dense_kv.append(kvl)
+
+    layer = lambda p, h: _block_prefill(cfg, p, h, positions, max_len, False)
+    if cfg.scan_layers:
+        x, kv = jax.lax.scan(lambda h, p: layer(p, h), x, params["blocks"])
+    else:
+        ks, vs = [], []
+        for i in range(cfg.n_layers - cfg.first_dense_layers):
+            x, kvl = layer(params["blocks"][str(i)], x)
+            ks.append(kvl["k"]); vs.append(kvl["v"])
+        kv = {"k": jnp.stack(ks), "v": jnp.stack(vs)}
+
+    cache_extra = {}
+    if dense_kv:
+        cache_extra = {
+            "k_dense": jnp.stack([c["k"] for c in dense_kv]),
+            "v_dense": jnp.stack([c["v"] for c in dense_kv]),
+        }
+    # last-position logits only (serving samples one next token)
+    x = L.apply_norm(cfg.norm, x[:, -1:], params["final_norm"])
+    if cfg.tie_embeddings:
+        logits = L.unembed(x, params["embed"]["table"], transpose=True)
+    else:
+        logits = L.unembed(x, params["lm_head"]["w"], transpose=False)
+    cache = {"k": kv["k"], "v": kv["v"], "length": jnp.asarray(S, jnp.int32),
+             **cache_extra}
+    return logits, cache

@@ -1,0 +1,70 @@
+"""Uniform adapter over the model zoo.
+
+Every family exposes the same call surface so the trainer / server / dry-run
+can be generic:
+
+    fam = get_family("moe")
+    params = fam.init(cfg, key)
+    loss   = fam.loss(cfg, params, batch)          # train_step target
+    logits, cache = fam.prefill(cfg, params, ...)  # serving
+    logits, cache = fam.decode_step(cfg, params, cache, tokens)
+
+``batch`` layouts per family (all include "labels" and optional "mask"):
+    dense/moe/ssm/griffin:  {"tokens": (B,S) i32}
+    vlm:                    + {"patch_embeds": (B,P,d) f}
+    encdec:                 {"src_embeds": (B,Ssrc,d) f, "tokens": (B,Stgt)}
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax.numpy as jnp
+
+from repro.models import encdec, griffin, moe, ssm, transformer, vlm
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelFamily:
+    name: str
+    config_cls: type
+    init: Callable
+    loss: Callable
+    forward: Callable
+    init_cache: Optional[Callable] = None
+    decode_step: Optional[Callable] = None
+    prefill: Optional[Callable] = None
+    has_decode: bool = True
+
+
+FAMILIES: dict[str, ModelFamily] = {
+    "dense": ModelFamily(
+        "dense", transformer.DenseLMConfig, transformer.init, transformer.loss_fn,
+        transformer.forward, transformer.init_cache, transformer.decode_step,
+        transformer.prefill,
+    ),
+    "moe": ModelFamily(
+        "moe", moe.MoELMConfig, moe.init, moe.loss_fn, moe.forward,
+        moe.init_cache, moe.decode_step, moe.prefill,
+    ),
+    "ssm": ModelFamily(
+        "ssm", ssm.MambaConfig, ssm.init, ssm.loss_fn, ssm.forward,
+        ssm.init_cache, ssm.decode_step, ssm.prefill,
+    ),
+    "hybrid": ModelFamily(
+        "hybrid", griffin.GriffinConfig, griffin.init, griffin.loss_fn,
+        griffin.forward, griffin.init_cache, griffin.decode_step, griffin.prefill,
+    ),
+    "vlm": ModelFamily(
+        "vlm", vlm.VLMConfig, vlm.init, vlm.loss_fn, vlm.forward,
+        vlm.init_cache, vlm.decode_step, vlm.prefill,
+    ),
+    "encdec": ModelFamily(
+        "encdec", encdec.EncDecConfig, encdec.init, encdec.loss_fn,
+        encdec.forward, None, encdec.decode_step, encdec.prefill,
+    ),
+}
+
+
+def get_family(name: str) -> ModelFamily:
+    return FAMILIES[name]

@@ -1,0 +1,294 @@
+"""Mamba-1 selective state-space LM — covers falcon-mamba-7b.
+
+Recurrence (per channel c, state dim n):
+    h_t = exp(Δ_t A) h_{t-1} + Δ_t B_t x_t
+    y_t = C_t · h_t + D x_t
+
+Training/prefill uses a *chunked* scan: ``lax.scan`` over sequence chunks
+carrying the state, with a parallel associative scan inside each chunk.  This
+bounds live memory to O(chunk · d_inner · d_state) per layer instead of
+O(S · d_inner · d_state) — the same blocking the Pallas kernel
+(kernels/mamba_scan.py) uses in VMEM.  Decode keeps (h, conv window) state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    name: str = "mamba-lm"
+    n_layers: int = 4
+    d_model: int = 256
+    d_inner: int = 512  # 2 * d_model
+    d_state: int = 16
+    d_conv: int = 4
+    dt_rank: int = 16  # d_model / 16
+    vocab_size: int = 1000
+    vocab_multiple: int = 256
+    norm: str = "rmsnorm"
+    tie_embeddings: bool = True
+    dtype: Any = jnp.float32
+    scan_layers: bool = True
+    remat_policy: str = "none"
+    chunk: int = 256  # sequence chunk for the state scan
+    probe_unroll: bool = False  # python-loop chunks (dry-run cost probe)
+
+    @property
+    def padded_vocab(self) -> int:
+        return L.padded_vocab(self.vocab_size, self.vocab_multiple)
+
+
+def _init_mixer(cfg: MambaConfig, key) -> dict:
+    ks = jax.random.split(key, 6)
+    d, di, n, r = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.dt_rank
+    # A initialised to -[1..n] per channel (S4D-real); stored as log.
+    A = jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))
+    dt_init = jnp.exp(
+        jax.random.uniform(ks[4], (di,)) * (np.log(0.1) - np.log(0.001)) + np.log(0.001)
+    )
+    inv_softplus = jnp.log(jnp.expm1(dt_init))
+    return {
+        "in_proj": {"w": L.init_dense(ks[0], d, 2 * di, cfg.dtype)},
+        "conv": {
+            "w": (jax.random.normal(ks[1], (cfg.d_conv, di)) / np.sqrt(cfg.d_conv)).astype(cfg.dtype),
+            "b": jnp.zeros((di,), cfg.dtype),
+        },
+        "x_proj": {"w": L.init_dense(ks[2], di, r + 2 * n, cfg.dtype)},
+        "dt_proj": {
+            "w": L.init_dense(ks[3], r, di, cfg.dtype),
+            "b": inv_softplus.astype(cfg.dtype),
+        },
+        "A_log": jnp.log(A).astype(jnp.float32),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": {"w": L.init_dense(ks[5], di, d, cfg.dtype)},
+    }
+
+
+def _init_block(cfg: MambaConfig, key) -> dict:
+    return {"ln": L.init_norm(cfg.norm, cfg.d_model, cfg.dtype), "mixer": _init_mixer(cfg, key)}
+
+
+def init(cfg: MambaConfig, key) -> dict:
+    k_embed, k_blocks, k_head = jax.random.split(key, 3)
+    V = cfg.padded_vocab
+    params: dict = {
+        "embed": {"table": (jax.random.normal(k_embed, (V, cfg.d_model)) * 0.02).astype(cfg.dtype)},
+        "final_norm": L.init_norm(cfg.norm, cfg.d_model, cfg.dtype),
+    }
+    bkeys = jax.random.split(k_blocks, cfg.n_layers)
+    if cfg.scan_layers:
+        params["blocks"] = jax.vmap(lambda k: _init_block(cfg, k))(bkeys)
+    else:
+        params["blocks"] = {str(i): _init_block(cfg, bkeys[i]) for i in range(cfg.n_layers)}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {"w": L.init_dense(k_head, cfg.d_model, V, cfg.dtype)}
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Selective scan
+# ---------------------------------------------------------------------------
+
+
+def _ssm_coeffs(cfg: MambaConfig, p: dict, xc: jax.Array):
+    """xc: (B, S, di) post-conv activations. Returns the *compact* coefficient
+    set (dt, dtx, Bmat, Cmat, A); the (B,S,di,n) decay/input tensors are only
+    ever formed per-chunk inside the fused scan to bound live memory."""
+    r, n = cfg.dt_rank, cfg.d_state
+    dbc = L.dense(xc, p["x_proj"]["w"])  # (B,S,r+2n)
+    dt_r, Bmat, Cmat = jnp.split(dbc, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(
+        L.dense(dt_r, p["dt_proj"]["w"]).astype(jnp.float32) + p["dt_proj"]["b"].astype(jnp.float32)
+    )  # (B,S,di)
+    A = -jnp.exp(p["A_log"])  # (di, n)
+    dtx = dt * xc.astype(jnp.float32)  # (B,S,di)
+    return dt, dtx, Bmat.astype(jnp.float32), Cmat.astype(jnp.float32), A
+
+
+def _scan_fused(dt, dtx, Bmat, Cmat, A, h0, chunk: int, unroll: bool = False):
+    """Fused selective scan: forms per-chunk (B,chunk,di,n) decay/input
+    tensors, runs the associative scan, and contracts against C inside the
+    chunk, so only (B,S,di) tensors ever live in HBM.  This is the same
+    blocking the Pallas kernel (kernels/mamba_scan.py) uses in VMEM.
+
+    dt, dtx: (B,S,di); Bmat, Cmat: (B,S,n); A: (di,n); h0: (B,di,n).
+    Returns (y (B,S,di) float32, h_last (B,di,n)).
+    """
+    B, S, di = dt.shape
+    n = A.shape[1]
+    chunk = min(chunk, S)
+    if S % chunk != 0:
+        chunk = S  # fall back to one chunk (small inputs)
+    nc = S // chunk
+
+    def to_chunks(x):
+        return x.reshape(B, nc, chunk, *x.shape[2:]).swapaxes(0, 1)
+
+    dt_c, dtx_c, B_c, C_c = map(to_chunks, (dt, dtx, Bmat, Cmat))
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    def body(h, xs):
+        dtc, dtxc, Bc, Cc = xs  # (B, chunk, ...)
+        ac = jnp.exp(dtc[..., None] * A)  # (B, chunk, di, n) — transient
+        bc = dtxc[..., None] * Bc[:, :, None, :]
+        bc = bc.at[:, 0].add(ac[:, 0] * h)
+        _, hh = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        yc = jnp.einsum("bsdn,bsn->bsd", hh, Cc, preferred_element_type=jnp.float32)
+        return hh[:, -1], yc
+
+    if unroll:
+        h, ys = h0, []
+        for i in range(nc):
+            h, yc = body(h, (dt_c[i], dtx_c[i], B_c[i], C_c[i]))
+            ys.append(yc)
+        h_last, y_chunks = h, jnp.stack(ys)
+    else:
+        h_last, y_chunks = jax.lax.scan(body, h0, (dt_c, dtx_c, B_c, C_c))
+    y = y_chunks.swapaxes(0, 1).reshape(B, S, di)
+    return y, h_last
+
+
+def _conv1d(xz: jax.Array, w: jax.Array, b: jax.Array, history: Optional[jax.Array] = None):
+    """Depthwise causal conv. xz (B,S,di), w (K,di). history (B,K-1,di)|None."""
+    B, S, di = xz.shape
+    K = w.shape[0]
+    if history is None:
+        history = jnp.zeros((B, K - 1, di), xz.dtype)
+    xpad = jnp.concatenate([history, xz], axis=1)  # (B, S+K-1, di)
+    out = jnp.zeros((B, S, di), jnp.float32)
+    for j in range(K):
+        out = out + xpad[:, j : j + S, :].astype(jnp.float32) * w[j].astype(jnp.float32)
+    out = out + b.astype(jnp.float32)
+    new_hist = xpad[:, S:, :] if K > 1 else history
+    return out.astype(xz.dtype), new_hist
+
+
+def _mixer(cfg: MambaConfig, p: dict, x: jax.Array, state: Optional[dict] = None):
+    """x: (B,S,d). state: {"h": (B,di,n), "conv": (B,K-1,di)} or None.
+    Returns (y (B,S,d), new_state)."""
+    B, S, _ = x.shape
+    di = cfg.d_inner
+    xz = L.dense(x, p["in_proj"]["w"])  # (B,S,2di)
+    x_ssm, z = jnp.split(xz, 2, axis=-1)
+    x_ssm = constrain(x_ssm, "batch", "seq_act", "inner")
+    conv_hist = state["conv"] if state is not None else None
+    xc, new_conv = _conv1d(x_ssm, p["conv"]["w"], p["conv"]["b"], conv_hist)
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+
+    dt, dtx, Bmat, Cmat, A = _ssm_coeffs(cfg, p, xc)
+    h0 = state["h"] if state is not None else jnp.zeros((B, di, cfg.d_state), jnp.float32)
+    y, h_last = _scan_fused(dt, dtx, Bmat, Cmat, A, h0, cfg.chunk,
+                            unroll=cfg.probe_unroll)
+    y = y + p["D"].astype(jnp.float32) * xc.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = L.dense(y.astype(x.dtype), p["out_proj"]["w"])
+    new_state = {"h": h_last, "conv": new_conv}
+    return out, new_state
+
+
+def _block(cfg: MambaConfig, p: dict, x: jax.Array, state: Optional[dict] = None):
+    h = L.apply_norm(cfg.norm, x, p["ln"])
+    y, new_state = _mixer(cfg, p["mixer"], h, state)
+    return x + y, new_state
+
+
+def _maybe_remat(cfg: MambaConfig, fn):
+    if cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    raise ValueError(cfg.remat_policy)
+
+
+def forward(cfg: MambaConfig, params: dict, tokens: jax.Array,
+            positions: Optional[jax.Array] = None) -> jax.Array:
+    B, S = tokens.shape
+    x = L.embed(tokens, params["embed"]["table"])
+    x = constrain(x, "batch", "seq_act", "embed")
+    block = _maybe_remat(cfg, lambda p, h: _block(cfg, p, h)[0])
+    if cfg.scan_layers:
+        def body(h, p):
+            return block(p, h), None
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+    else:
+        for i in range(cfg.n_layers):
+            x = block(params["blocks"][str(i)], x)
+    x = L.apply_norm(cfg.norm, x, params["final_norm"])
+    if cfg.tie_embeddings:
+        logits = L.unembed(x, params["embed"]["table"], transpose=True)
+    else:
+        logits = L.unembed(x, params["lm_head"]["w"], transpose=False)
+    return constrain(logits, "batch", "seq_act", "vocab")
+
+
+def loss_fn(cfg: MambaConfig, params: dict, batch: dict) -> jax.Array:
+    logits = forward(cfg, params, batch["tokens"])
+    return L.softmax_cross_entropy(
+        logits, batch["labels"], valid_vocab=cfg.vocab_size, mask=batch.get("mask")
+    )
+
+
+# ---------------------------------------------------------------------------
+# Stateful decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: MambaConfig, batch: int, max_len: int = 0, dtype=None) -> dict:
+    """Recurrent state (max_len unused — O(1) state; kept for API parity)."""
+    del max_len
+    L_ = cfg.n_layers
+    return {
+        "h": jnp.zeros((L_, batch, cfg.d_inner, cfg.d_state), jnp.float32),
+        "conv": jnp.zeros((L_, batch, cfg.d_conv - 1, cfg.d_inner), dtype or cfg.dtype),
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(cfg: MambaConfig, params: dict, cache: dict, tokens: jax.Array):
+    """tokens (B, S_new); returns (logits, new_cache). Works for prefill too."""
+    B, Sn = tokens.shape
+    x = L.embed(tokens, params["embed"]["table"])
+
+    states = {"h": cache["h"], "conv": cache["conv"]}
+    if cfg.scan_layers:
+        def body(h, xs):
+            p, st = xs
+            h, new_st = _block(cfg, p, h, st)
+            return h, new_st
+        x, new_states = jax.lax.scan(body, x, (params["blocks"], states))
+    else:
+        hs, cs = [], []
+        for i in range(cfg.n_layers):
+            st = {"h": states["h"][i], "conv": states["conv"][i]}
+            x, nst = _block(cfg, params["blocks"][str(i)], x, st)
+            hs.append(nst["h"]); cs.append(nst["conv"])
+        new_states = {"h": jnp.stack(hs), "conv": jnp.stack(cs)}
+
+    x = L.apply_norm(cfg.norm, x, params["final_norm"])
+    if cfg.tie_embeddings:
+        logits = L.unembed(x, params["embed"]["table"], transpose=True)
+    else:
+        logits = L.unembed(x, params["lm_head"]["w"], transpose=False)
+    new_cache = {"h": new_states["h"], "conv": new_states["conv"],
+                 "length": cache["length"] + Sn}
+    return logits, new_cache
+
+
+def prefill(cfg: MambaConfig, params: dict, tokens: jax.Array, max_len: int = 0):
+    cache = init_cache(cfg, tokens.shape[0])
+    return decode_step(cfg, params, cache, tokens)

@@ -1,0 +1,375 @@
+"""Dense decoder-only transformer (GQA) — covers qwen2-72b, qwen3-14b,
+olmo-1b, stablelm-1.6b and the internvl2-2b language backbone.
+
+Design notes:
+  * parameters are nested dicts; per-layer params are *stacked* on axis 0 and
+    the layer loop is ``jax.lax.scan`` (keeps HLO small for the 512-device
+    dry-run and makes remat policy application uniform).
+  * attention is the jnp reference (kernels/ holds the Pallas TPU version;
+    see DESIGN.md A5 for why the dry-run lowers the reference path).
+  * activations are annotated with logical axes (repro.distributed.constrain)
+    so one model definition serves every mesh.
+  * decode keeps a KV cache with optional KV-head replication so the head
+    axis divides the tensor-parallel mesh axis (MaxText-style), or a
+    sequence-sharded layout for context-parallel decode.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseLMConfig:
+    name: str = "dense-lm"
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: int = 64
+    d_ff: int = 1024
+    vocab_size: int = 1000
+    vocab_multiple: int = 256  # pad vocab so TP-16 divides it
+    rope_theta: float = 1e4
+    rotary_pct: float = 1.0  # stablelm uses 0.25
+    qkv_bias: bool = False  # qwen2 uses True
+    qk_norm: bool = False  # qwen3 uses True
+    norm: str = "rmsnorm"  # rmsnorm | layernorm | nonparam_ln (olmo)
+    act: str = "silu"
+    gated_ffn: bool = True
+    tie_embeddings: bool = False
+    window: Optional[int] = None  # sliding-window attention (all layers)
+    logit_softcap: Optional[float] = None
+    dtype: Any = jnp.float32
+    scan_layers: bool = True
+    remat_policy: str = "none"  # none | full | dots
+    # decode-time KV head replication factor (1 = none); set by the serving
+    # layer so kv_heads*kv_repl divides the TP axis.
+    kv_repl: int = 1
+    # prefill attention blocking (flash-analogue outer loop): bounds live
+    # scores to (block_q, S) instead of (S, S)
+    prefill_block_q: int = 1024
+    probe_unroll: bool = False  # python-loop blocks (dry-run cost probe)
+
+    @property
+    def padded_vocab(self) -> int:
+        return L.padded_vocab(self.vocab_size, self.vocab_multiple)
+
+    @property
+    def kv_stored_heads(self) -> int:
+        return self.n_kv_heads * self.kv_repl
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(cfg: DenseLMConfig, key) -> dict:
+    ks = jax.random.split(key, 8)
+    Hq, Hkv, D, d = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_model
+    p: dict = {
+        "attn": {
+            "wq": L.init_dense(ks[0], d, Hq * D, cfg.dtype),
+            "wk": L.init_dense(ks[1], d, Hkv * D, cfg.dtype),
+            "wv": L.init_dense(ks[2], d, Hkv * D, cfg.dtype),
+            "wo": L.init_dense(ks[3], Hq * D, d, cfg.dtype),
+        },
+        "mlp": L.init_ffn(ks[4], d, cfg.d_ff, cfg.dtype, gated=cfg.gated_ffn),
+        "ln1": L.init_norm(cfg.norm, d, cfg.dtype),
+        "ln2": L.init_norm(cfg.norm, d, cfg.dtype),
+    }
+    if cfg.qkv_bias:
+        p["attn"]["bq"] = jnp.zeros((Hq * D,), cfg.dtype)
+        p["attn"]["bk"] = jnp.zeros((Hkv * D,), cfg.dtype)
+        p["attn"]["bv"] = jnp.zeros((Hkv * D,), cfg.dtype)
+    if cfg.qk_norm:
+        p["attn"]["q_norm"] = jnp.zeros((D,), cfg.dtype)
+        p["attn"]["k_norm"] = jnp.zeros((D,), cfg.dtype)
+    return p
+
+
+def init(cfg: DenseLMConfig, key) -> dict:
+    k_embed, k_blocks, k_head = jax.random.split(key, 3)
+    V = cfg.padded_vocab
+    params: dict = {
+        "embed": {
+            "table": (jax.random.normal(k_embed, (V, cfg.d_model)) * 0.02).astype(cfg.dtype)
+        },
+        "final_norm": L.init_norm(cfg.norm, cfg.d_model, cfg.dtype),
+    }
+    block_keys = jax.random.split(k_blocks, cfg.n_layers)
+    if cfg.scan_layers:
+        params["blocks"] = jax.vmap(lambda k: _init_block(cfg, k))(block_keys)
+    else:
+        params["blocks"] = {str(i): _init_block(cfg, block_keys[i]) for i in range(cfg.n_layers)}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {"w": L.init_dense(k_head, cfg.d_model, V, cfg.dtype)}
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward pieces
+# ---------------------------------------------------------------------------
+
+
+def _qkv(cfg: DenseLMConfig, p_attn: dict, x: jax.Array, positions: jax.Array):
+    B, S, _ = x.shape
+    Hq, Hkv, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = L.dense(x, p_attn["wq"], p_attn.get("bq")).reshape(B, S, Hq, D)
+    k = L.dense(x, p_attn["wk"], p_attn.get("bk")).reshape(B, S, Hkv, D)
+    v = L.dense(x, p_attn["wv"], p_attn.get("bv")).reshape(B, S, Hkv, D)
+    if cfg.qk_norm:
+        q = L.rms_norm(q, p_attn["q_norm"])
+        k = L.rms_norm(k, p_attn["k_norm"])
+    rd = int(cfg.rotary_pct * D)
+    q = L.apply_rope(q, positions, cfg.rope_theta, rd)
+    k = L.apply_rope(k, positions, cfg.rope_theta, rd)
+    return q, k, v
+
+
+def _block(cfg: DenseLMConfig, p: dict, x: jax.Array, positions: jax.Array) -> jax.Array:
+    """Full-sequence (training / prefill-style) block."""
+    h = L.apply_norm(cfg.norm, x, p["ln1"])
+    q, k, v = _qkv(cfg, p["attn"], h, positions)
+    q = constrain(q, "batch", "seq", "heads", None)
+    k = constrain(k, "batch", "seq", "kv_heads", None)
+    v = constrain(v, "batch", "seq", "kv_heads", None)
+    mask = L.attention_mask(positions, positions, causal=True, window=cfg.window)
+    attn = L.gqa_attention(q, k, v, mask)
+    x = x + L.dense(attn.reshape(x.shape[0], x.shape[1], -1), p["attn"]["wo"])
+    x = constrain(x, "batch", "seq_act", "embed")
+    h = L.apply_norm(cfg.norm, x, p["ln2"])
+    ff = L.ffn(h, p["mlp"], act=cfg.act, gated=cfg.gated_ffn)
+    x = x + ff
+    return constrain(x, "batch", "seq_act", "embed")
+
+
+def _maybe_remat(cfg: DenseLMConfig, fn):
+    if cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    raise ValueError(cfg.remat_policy)
+
+
+def forward(cfg: DenseLMConfig, params: dict, tokens: jax.Array,
+            positions: Optional[jax.Array] = None) -> jax.Array:
+    """tokens (B, S) -> logits (B, S, padded_vocab) float32."""
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = L.embed(tokens, params["embed"]["table"])
+    x = constrain(x, "batch", "seq_act", "embed")
+
+    block = _maybe_remat(cfg, lambda p, h: _block(cfg, p, h, positions))
+    if cfg.scan_layers:
+        def body(h, p):
+            return block(p, h), None
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+    else:
+        for i in range(cfg.n_layers):
+            x = block(params["blocks"][str(i)], x)
+
+    x = L.apply_norm(cfg.norm, x, params["final_norm"])
+    if cfg.tie_embeddings:
+        logits = L.unembed(x, params["embed"]["table"], transpose=True)
+    else:
+        logits = L.unembed(x, params["lm_head"]["w"], transpose=False)
+    if cfg.logit_softcap is not None:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return constrain(logits, "batch", "seq_act", "vocab")
+
+
+def loss_fn(cfg: DenseLMConfig, params: dict, batch: dict) -> jax.Array:
+    logits = forward(cfg, params, batch["tokens"])
+    return L.softmax_cross_entropy(
+        logits, batch["labels"], valid_vocab=cfg.vocab_size, mask=batch.get("mask")
+    )
+
+
+# ---------------------------------------------------------------------------
+# KV cache + decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: DenseLMConfig, batch: int, max_len: int, dtype=None) -> dict:
+    """KV cache stacked over layers: k/v (L, B, Smax, Hkv*kv_repl, D)."""
+    dtype = dtype or cfg.dtype
+    Hs = cfg.kv_stored_heads
+    shape = (cfg.n_layers, batch, max_len, Hs, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+def _write_kv(cache_k, cache_v, k, v, start: jax.Array, kv_repl: int):
+    """Write new k/v (B, S, Hkv, D) into per-layer cache at position start."""
+    if kv_repl > 1:
+        k = jnp.repeat(k, kv_repl, axis=2)
+        v = jnp.repeat(v, kv_repl, axis=2)
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype), (0, start, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype), (0, start, 0, 0))
+    return cache_k, cache_v
+
+
+def _block_decode(cfg: DenseLMConfig, p: dict, cache_l: dict, x: jax.Array,
+                  positions: jax.Array, length: jax.Array):
+    """Single-step (or chunked) decode block against a cache layer.
+
+    x: (B, S_new, d); cache k/v: (B, Smax, Hs, D); returns (x, new_cache_l).
+    """
+    B, Sn, _ = x.shape
+    h = L.apply_norm(cfg.norm, x, p["ln1"])
+    q, k, v = _qkv(cfg, p["attn"], h, positions)
+    ck, cv = _write_kv(cache_l["k"], cache_l["v"], k, v, length, cfg.kv_repl)
+    ck = constrain(ck, "batch", "kv_seq", "kv_heads_stored", None)
+    cv = constrain(cv, "batch", "kv_seq", "kv_heads_stored", None)
+    Smax = ck.shape[1]
+    kv_positions = jnp.broadcast_to(jnp.arange(Smax, dtype=jnp.int32), (B, Smax))
+    mask = L.attention_mask(positions, kv_positions, causal=True, window=cfg.window)
+    # mask out cache slots beyond the written prefix
+    valid = kv_positions < (length + Sn)
+    mask = mask & valid[:, None, None, :]
+    q = constrain(q, "batch", None, "heads", None)
+    attn = L.gqa_attention(q, ck, cv, mask)
+    x = x + L.dense(attn.reshape(B, Sn, -1), p["attn"]["wo"])
+    h = L.apply_norm(cfg.norm, x, p["ln2"])
+    x = x + L.ffn(h, p["mlp"], act=cfg.act, gated=cfg.gated_ffn)
+    return x, {"k": ck, "v": cv}
+
+
+def decode_step(cfg: DenseLMConfig, params: dict, cache: dict, tokens: jax.Array) -> tuple:
+    """One decode step. tokens (B, S_new) (S_new=1 for AR decode).
+
+    The full stacked KV cache travels through the layer scan as CARRY and is
+    updated in place at a layer offset — passing it as scan xs/ys double-
+    buffers the whole cache (2x 10.7 GB/chip for qwen2-72b at 32k; §Perf
+    iteration 2).  Returns (logits (B, S_new, V), new_cache).
+    """
+    B, Sn = tokens.shape
+    length = cache["length"]
+    positions = length + jnp.broadcast_to(jnp.arange(Sn, dtype=jnp.int32), (B, Sn))
+    x = L.embed(tokens, params["embed"]["table"])
+    x = constrain(x, "batch", None, "embed")
+
+    if cfg.scan_layers:
+        def body(carry, p):
+            h, ck, cv, li = carry
+            cl = {
+                "k": jax.lax.dynamic_index_in_dim(ck, li, 0, keepdims=False),
+                "v": jax.lax.dynamic_index_in_dim(cv, li, 0, keepdims=False),
+            }
+            h, ncl = _block_decode(cfg, p, cl, h, positions, length)
+            ck = jax.lax.dynamic_update_index_in_dim(ck, ncl["k"], li, 0)
+            cv = jax.lax.dynamic_update_index_in_dim(cv, ncl["v"], li, 0)
+            return (h, ck, cv, li + 1), None
+
+        (x, ck, cv, _), _ = jax.lax.scan(
+            body, (x, cache["k"], cache["v"], jnp.int32(0)), params["blocks"]
+        )
+        new_cache = {"k": ck, "v": cv, "length": length + Sn}
+    else:
+        ck, cv = cache["k"], cache["v"]
+        for i in range(cfg.n_layers):
+            cl = {"k": ck[i], "v": cv[i]}
+            x, ncl = _block_decode(cfg, params["blocks"][str(i)], cl, x, positions, length)
+            ck = ck.at[i].set(ncl["k"])
+            cv = cv.at[i].set(ncl["v"])
+        new_cache = {"k": ck, "v": cv, "length": length + Sn}
+
+    x = L.apply_norm(cfg.norm, x, params["final_norm"])
+    if cfg.tie_embeddings:
+        logits = L.unembed(x, params["embed"]["table"], transpose=True)
+    else:
+        logits = L.unembed(x, params["lm_head"]["w"], transpose=False)
+    if cfg.logit_softcap is not None:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return logits, new_cache
+
+
+def _block_prefill(cfg: DenseLMConfig, p: dict, x: jax.Array,
+                   positions: jax.Array, max_len: int):
+    """One layer of blocked prefill: flash-analogue attention (live scores
+    bounded to (block_q, S)) + emit this layer's padded KV cache."""
+    B, S, _ = x.shape
+    h = L.apply_norm(cfg.norm, x, p["ln1"])
+    q, k, v = _qkv(cfg, p["attn"], h, positions)
+    q = constrain(q, "batch", "seq", "heads", None)
+    k = constrain(k, "batch", "seq", "kv_heads", None)
+    v = constrain(v, "batch", "seq", "kv_heads", None)
+    attn = L.blocked_causal_attention(
+        q, k, v, positions, window=cfg.window,
+        block_q=cfg.prefill_block_q, unroll=cfg.probe_unroll,
+    )
+    x = x + L.dense(attn.reshape(B, S, -1), p["attn"]["wo"])
+    h = L.apply_norm(cfg.norm, x, p["ln2"])
+    x = x + L.ffn(h, p["mlp"], act=cfg.act, gated=cfg.gated_ffn)
+    x = constrain(x, "batch", "seq_act", "embed")
+    # cache layer: replicate kv heads and pad seq to max_len
+    if cfg.kv_repl > 1:
+        k = jnp.repeat(k, cfg.kv_repl, axis=2)
+        v = jnp.repeat(v, cfg.kv_repl, axis=2)
+    pad = [(0, 0), (0, max_len - S), (0, 0), (0, 0)]
+    ck = constrain(jnp.pad(k.astype(cfg.dtype), pad),
+                   "batch", "kv_seq", "kv_heads_stored", None)
+    cv = constrain(jnp.pad(v.astype(cfg.dtype), pad),
+                   "batch", "kv_seq", "kv_heads_stored", None)
+    return x, {"k": ck, "v": cv}
+
+
+def prefill(cfg: DenseLMConfig, params: dict, tokens: jax.Array, max_len: int) -> tuple:
+    """Prefill a cache from a full prompt; returns (logits, cache).
+
+    Uses the blocked (flash-analogue) attention path: peak live memory is
+    O(block_q * S) per layer, not O(S^2) — the dense-masked path at 32k
+    blew past HBM (EXPERIMENTS.md §Perf iteration 1)."""
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = L.embed(tokens, params["embed"]["table"])
+    return prefill_from_embeddings(cfg, params, x, positions, max_len)
+
+
+def prefill_from_embeddings(cfg: DenseLMConfig, params: dict, x: jax.Array,
+                            positions: jax.Array, max_len: int) -> tuple:
+    B, S, _ = x.shape
+    x = constrain(x, "batch", "seq_act", "embed")
+
+    layer = lambda p, h: _block_prefill(cfg, p, h, positions, max_len)
+    if cfg.scan_layers:
+        def body(h, p):
+            h, kv = layer(p, h)
+            return h, kv
+        x, kv = jax.lax.scan(body, x, params["blocks"])
+    else:
+        ks, vs = [], []
+        for i in range(cfg.n_layers):
+            x, kvl = layer(params["blocks"][str(i)], x)
+            ks.append(kvl["k"]); vs.append(kvl["v"])
+        kv = {"k": jnp.stack(ks), "v": jnp.stack(vs)}
+
+    # serving only samples the NEXT token: emit last-position logits only
+    # (full (B,S,V) f32 logits cost 2.5 GB/chip at 32k — §Perf iteration 1c)
+    x = L.apply_norm(cfg.norm, x[:, -1:], params["final_norm"])
+    if cfg.tie_embeddings:
+        logits = L.unembed(x, params["embed"]["table"], transpose=True)
+    else:
+        logits = L.unembed(x, params["lm_head"]["w"], transpose=False)
+    if cfg.logit_softcap is not None:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    cache = {"k": kv["k"], "v": kv["v"],
+             "length": jnp.asarray(S, jnp.int32)}
+    return logits, cache

@@ -1,0 +1,84 @@
+"""Vision-language model — covers internvl2-2b (InternViT + InternLM2).
+
+Per the mandate the ViT frontend is a STUB: the model consumes precomputed
+patch embeddings (B, n_patches, d_model) from ``input_specs`` and prepends
+them to the text-token embeddings before running the standard dense LM stack
+(the InternLM2 backbone is a GQA transformer, reused from
+``repro.models.transformer``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass(frozen=True)
+class VLMConfig(T.DenseLMConfig):
+    name: str = "vlm"
+    n_patches: int = 256  # stub frontend output length
+
+
+init = T.init  # same parameter structure as the dense LM backbone
+
+
+def forward(cfg: VLMConfig, params: dict, tokens: jax.Array,
+            patch_embeds: jax.Array) -> jax.Array:
+    """tokens (B, S_txt); patch_embeds (B, P, d_model) precomputed by the
+    (stubbed) ViT.  Returns logits over the FULL sequence (B, P+S_txt, V);
+    callers slice the text span."""
+    B, S = tokens.shape
+    P = patch_embeds.shape[1]
+    x_txt = L.embed(tokens, params["embed"]["table"])
+    x = jnp.concatenate([patch_embeds.astype(x_txt.dtype), x_txt], axis=1)
+    x = constrain(x, "batch", "seq_act", "embed")
+    total = P + S
+    positions = jnp.broadcast_to(jnp.arange(total, dtype=jnp.int32), (B, total))
+
+    block = T._maybe_remat(cfg, lambda p, h: T._block(cfg, p, h, positions))
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(lambda h, p: (block(p, h), None), x, params["blocks"])
+    else:
+        for i in range(cfg.n_layers):
+            x = block(params["blocks"][str(i)], x)
+
+    x = L.apply_norm(cfg.norm, x, params["final_norm"])
+    if cfg.tie_embeddings:
+        logits = L.unembed(x, params["embed"]["table"], transpose=True)
+    else:
+        logits = L.unembed(x, params["lm_head"]["w"], transpose=False)
+    return constrain(logits, "batch", "seq_act", "vocab")
+
+
+def loss_fn(cfg: VLMConfig, params: dict, batch: dict) -> jax.Array:
+    logits = forward(cfg, params, batch["tokens"], batch["patch_embeds"])
+    P = batch["patch_embeds"].shape[1]
+    txt_logits = logits[:, P:, :]
+    return L.softmax_cross_entropy(
+        txt_logits, batch["labels"], valid_vocab=cfg.vocab_size, mask=batch.get("mask")
+    )
+
+
+# Decode: after prefill (which includes the patch prefix), AR decode is
+# identical to the dense LM — reuse the transformer cache machinery.
+init_cache = T.init_cache
+decode_step = T.decode_step
+
+
+def prefill(cfg: VLMConfig, params: dict, tokens: jax.Array,
+            patch_embeds: jax.Array, max_len: int):
+    """Prefill patches + prompt: concatenated embeddings run the blocked
+    (flash-analogue) prefill path in one pass — O(block_q * S) live scores."""
+    B, S = tokens.shape
+    P = patch_embeds.shape[1]
+    x_txt = L.embed(tokens, params["embed"]["table"])
+    x = jnp.concatenate([patch_embeds.astype(x_txt.dtype), x_txt], axis=1)
+    total = P + S
+    positions = jnp.broadcast_to(jnp.arange(total, dtype=jnp.int32), (B, total))
+    return T.prefill_from_embeddings(cfg, params, x, positions, max_len)

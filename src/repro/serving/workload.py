@@ -1,0 +1,95 @@
+"""Bridge: workload definition -> scheduler Instances, with or without
+merging.
+
+``build_instances`` materialises store-key-level weight sets:
+  * unmerged: every instance owns private keys for all its layers;
+  * merged (Optimal): all architecturally identical layers across the
+    workload share one key (Fig 5/6 upper bound);
+  * merged (GEMEL): only the groups a :class:`PlanResult` committed share
+    keys (the deployable configuration).
+
+Keys here are *descriptor-level* (derived from layer specs), independent of
+live weights, so workload-scale experiments don't allocate memory.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.configs.vision_workloads import WORKLOADS
+from repro.core.groups import enumerate_groups
+from repro.core.signatures import records_from_spec
+from repro.models.vision import get_spec
+from repro.serving.costs import costs_for
+from repro.serving.scheduler import Instance
+
+
+def build_instances(
+    name: str,
+    merged: str = "none",  # none | optimal | groups
+    shared_groups: Optional[list] = None,  # LayerGroups actually merged
+    accuracies: Optional[dict] = None,  # instance_id -> accuracy multiplier
+    workloads: Optional[dict] = None,
+) -> list:
+    wl = (workloads or WORKLOADS)[name]
+    recs_by_inst = {}
+    for k, (mid, feed, obj) in enumerate(wl):
+        iid = f"{mid}#{k}"
+        recs_by_inst[iid] = [
+            r.__class__(iid, r.path, r.signature, r.bytes, r.position)
+            for r in records_from_spec(get_spec(mid))
+        ]
+
+    # (model, path) -> shared key, COLUMN-wise (across-model sharing only)
+    shared_keys: dict = {}
+    groups = None
+    if merged == "optimal":
+        all_recs = [r for rs in recs_by_inst.values() for r in rs]
+        groups = enumerate_groups(all_recs)
+    elif merged == "groups":
+        groups = shared_groups or []
+    if groups:
+        for g in groups:
+            base = f"shared:{abs(hash(g.signature)) % 10**12}"
+            for ci, col in enumerate(g.columns()):
+                if len(col) < 2:
+                    continue
+                for r in col:
+                    shared_keys[(r.model_id, r.path)] = f"{base}:c{ci}"
+
+    instances = []
+    for k, (mid, feed, obj) in enumerate(wl):
+        iid = f"{mid}#{k}"
+        keys = {}
+        for r in recs_by_inst[iid]:
+            key = shared_keys.get((iid, r.path), f"{iid}:{r.path}")
+            keys[key] = r.bytes
+        acc = (accuracies or {}).get(iid, 1.0)
+        instances.append(
+            Instance(iid, mid, frozenset(keys.keys()), keys, accuracy=acc)
+        )
+    return instances
+
+
+def workload_costs(name: str, workloads: Optional[dict] = None) -> dict:
+    wl = (workloads or WORKLOADS)[name]
+    return {mid: costs_for(mid) for mid, _, _ in wl}
+
+
+def memory_settings(name: str, workloads: Optional[dict] = None) -> dict:
+    """§2 memory settings derived from the paper's Table-1 cost model so the
+    scheduler and the settings agree: *min* = largest single model's
+    load+run at batch 1; *max* = all params resident + largest activation.
+    50%/75% are clamped to at least *min* (feasibility)."""
+    wl = (workloads or WORKLOADS)[name]
+    costs = workload_costs(name, workloads)
+    loads = [costs[mid].load_gb for mid, _, _ in wl]
+    acts = [costs[mid].activation_gb(1) for mid, _, _ in wl]
+    runs = [costs[mid].run_mem(1) for mid, _, _ in wl]
+    mn = max(runs) * 1e9
+    mx = (sum(loads) + max(acts)) * 1e9
+    return {
+        "min": int(mn),
+        "50%": int(max(mn, 0.5 * mx)),
+        "75%": int(max(mn, 0.75 * mx)),
+        "max": int(mx),
+    }

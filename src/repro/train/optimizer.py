@@ -1,0 +1,99 @@
+"""Minimal-but-real optimizers over arbitrary pytrees (no optax dependency).
+
+AdamW with decoupled weight decay and global-norm clipping; SGD+momentum for
+the small retraining experiments.  State is a pytree mirroring params, so it
+shards/checkpoints exactly like the model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Any = 1e-3  # float or callable(step) -> float
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: Optional[float] = 1.0
+
+    def init(self, params: Any) -> OptState:
+        zeros = lambda t: jax.tree_util.tree_map(
+            lambda x: jnp.zeros_like(x, dtype=jnp.float32), t
+        )
+        return OptState(jnp.zeros((), jnp.int32), zeros(params), zeros(params))
+
+    def _lr(self, step: jax.Array) -> jax.Array:
+        if callable(self.lr):
+            return self.lr(step)
+        return jnp.asarray(self.lr, jnp.float32)
+
+    def update(self, grads: Any, state: OptState, params: Any):
+        step = state.step + 1
+        if self.clip_norm is not None:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+            grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads
+        )
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads,
+        )
+        t = step.astype(jnp.float32)
+        mu_hat_scale = 1.0 / (1 - b1**t)
+        nu_hat_scale = 1.0 / (1 - b2**t)
+        lr = self._lr(step)
+
+        def upd(p, m, v):
+            u = (m * mu_hat_scale) / (jnp.sqrt(v * nu_hat_scale) + self.eps)
+            if self.weight_decay:
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree_util.tree_map(upd, params, mu, nu)
+        return new_params, OptState(step, mu, nu)
+
+
+@dataclasses.dataclass(frozen=True)
+class SGD:
+    lr: float = 0.05
+    momentum: float = 0.9
+    clip_norm: Optional[float] = 5.0
+
+    def init(self, params: Any) -> OptState:
+        zeros = jax.tree_util.tree_map(lambda x: jnp.zeros_like(x, jnp.float32), params)
+        return OptState(jnp.zeros((), jnp.int32), zeros, zeros)
+
+    def update(self, grads: Any, state: OptState, params: Any):
+        if self.clip_norm is not None:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+            grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+        mu = jax.tree_util.tree_map(
+            lambda m, g: self.momentum * m + g.astype(jnp.float32), state.mu, grads
+        )
+        new_params = jax.tree_util.tree_map(
+            lambda p, m: (p.astype(jnp.float32) - self.lr * m).astype(p.dtype), params, mu
+        )
+        return new_params, OptState(state.step + 1, mu, state.nu)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        return jnp.zeros(())
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))

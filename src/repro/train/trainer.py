@@ -1,0 +1,193 @@
+"""Distributed training step + single-host driver.
+
+``make_train_step`` builds the pjit-able step used by both the real trainer
+and the multi-pod dry-run:
+
+  * gradient accumulation over ``microbatches`` via ``lax.scan`` (bounds
+    activation memory — the (B, S) global batch never materialises at once);
+  * optional int8 gradient compression with error feedback (cross-pod DCN
+    bytes, DESIGN.md §5);
+  * optimizer update fused into the same jitted program (no host sync);
+  * logical-axis shardings applied to params / opt state / batch.
+
+``Trainer`` is the orchestration shell: checkpoint save/restore hooks,
+heartbeat + straggler monitors, data iterator, metrics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed.compression import Int8Compressor
+from repro.distributed.partitioning import param_shardings, param_specs
+from repro.distributed.sharding import LogicalRules, use_rules
+from repro.train.optimizer import AdamW, OptState
+
+
+def _split_microbatches(batch: dict, microbatches: int) -> dict:
+    def split(x):
+        b = x.shape[0]
+        assert b % microbatches == 0, f"batch {b} % microbatches {microbatches}"
+        return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+    return jax.tree_util.tree_map(split, batch)
+
+
+def make_train_step(
+    loss_fn: Callable,  # (params, batch) -> scalar
+    optimizer: Any,
+    rules: Optional[LogicalRules] = None,
+    microbatches: int = 1,
+    compress_grads: bool = False,
+):
+    """Returns ``step(state, batch) -> (state, metrics)`` where
+    ``state = {"params":…, "opt": OptState, "err": feedback|None, "step": i}``.
+
+    The function body is mesh-agnostic; callers jit it with in/out shardings
+    derived from :func:`state_shardings`.
+    """
+    compressor = Int8Compressor() if compress_grads else None
+
+    def step(state, batch):
+        params = state["params"]
+
+        if microbatches > 1:
+            mb = _split_microbatches(batch, microbatches)
+
+            def accum(carry, one):
+                gsum, lsum = carry
+                loss, grads = jax.value_and_grad(loss_fn)(params, one)
+                gsum = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32), gsum, grads
+                )
+                return (gsum, lsum + loss), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (gsum, lsum), _ = jax.lax.scan(accum, (zeros, 0.0), mb)
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+
+        err = state.get("err")
+        if compressor is not None:
+            grads, err = compressor.compress(grads, err)
+
+        new_params, opt_state = optimizer.update(grads, state["opt"], params)
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree_util.tree_leaves(grads))
+        )
+        new_state = {"params": new_params, "opt": opt_state, "step": state["step"] + 1}
+        if err is not None:
+            new_state["err"] = err
+        metrics = {"loss": loss, "grad_norm": gnorm}
+        return new_state, metrics
+
+    return step
+
+
+def init_state(params, optimizer, compress_grads: bool = False) -> dict:
+    state = {
+        "params": params,
+        "opt": optimizer.init(params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if compress_grads:
+        state["err"] = Int8Compressor().init(params)
+    return state
+
+
+def state_shardings(state, rules: Optional[LogicalRules]):
+    """Shardings for the train state: params via partitioning rules; opt
+    moments mirror params; scalars replicated."""
+    if rules is None:
+        return None
+    p_sh = param_shardings(state["params"], rules)
+    repl = NamedSharding(rules.mesh, P())
+
+    def like_params(tree):
+        return jax.tree_util.tree_map(
+            lambda _, s: s, tree, p_sh,
+        )
+
+    out = {
+        "params": p_sh,
+        "opt": OptState(repl, p_sh, p_sh),
+        "step": repl,
+    }
+    if "err" in state:
+        out["err"] = p_sh
+    return out
+
+
+def batch_shardings(batch, rules: Optional[LogicalRules]):
+    if rules is None:
+        return None
+
+    def one(x):
+        ndim = len(getattr(x, "shape", ()))
+        return rules.sharding(("batch",) + (None,) * (ndim - 1))
+
+    return jax.tree_util.tree_map(one, batch)
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Trainer:
+    loss_fn: Callable
+    optimizer: Any
+    rules: Optional[LogicalRules] = None
+    microbatches: int = 1
+    compress_grads: bool = False
+    ckpt_manager: Any = None  # repro.ckpt.manager.CheckpointManager
+    ckpt_every: int = 100
+    monitors: tuple = ()  # runtime monitors with .tick(step, metrics)
+
+    def fit(self, params, data_iter, steps: int, log_every: int = 10) -> dict:
+        step_fn = make_train_step(
+            self.loss_fn, self.optimizer, self.rules,
+            self.microbatches, self.compress_grads,
+        )
+        state = init_state(params, self.optimizer, self.compress_grads)
+        start = 0
+        if self.ckpt_manager is not None:
+            restored = self.ckpt_manager.restore_latest(state)
+            if restored is not None:
+                state = restored
+                start = int(state["step"])
+
+        jit_step = jax.jit(step_fn, donate_argnums=(0,))
+        history = []
+        ctx = use_rules(self.rules) if self.rules else None
+        if ctx:
+            ctx.__enter__()
+        try:
+            for i in range(start, steps):
+                batch = next(data_iter)
+                t0 = time.monotonic()
+                state, metrics = jit_step(state, batch)
+                dt = time.monotonic() - t0
+                for mon in self.monitors:
+                    mon.tick(i, {"step_time": dt, **{k: float(v) for k, v in metrics.items()}})
+                if i % log_every == 0 or i == steps - 1:
+                    history.append({"step": i, "loss": float(metrics["loss"]),
+                                    "grad_norm": float(metrics["grad_norm"])})
+                if self.ckpt_manager is not None and (i + 1) % self.ckpt_every == 0:
+                    self.ckpt_manager.save(state, step=i + 1)
+        finally:
+            if ctx:
+                ctx.__exit__(None, None, None)
+        return {"state": state, "history": history}

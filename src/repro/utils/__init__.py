@@ -1,0 +1,8 @@
+from repro.utils.tree import (
+    flatten_paths,
+    unflatten_paths,
+    leaf_bytes,
+    tree_bytes,
+    tree_param_count,
+    tree_map_with_path,
+)

@@ -1,0 +1,78 @@
+"""Pytree path utilities.
+
+The merging engine (repro.core) operates on *named* parameter leaves; every
+model in the zoo stores its parameters as nested ``dict``s so that each leaf
+has a stable, human-readable path like ``blocks/attn/wq``.  These helpers
+convert between the nested and the flat ``{path: leaf}`` representations and
+provide byte/param accounting used throughout the memory analyses.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SEP = "/"
+
+
+def flatten_paths(tree: Any, prefix: str = "") -> dict[str, Any]:
+    """Flatten a nested dict pytree into ``{"a/b/c": leaf}``."""
+    out: dict[str, Any] = {}
+    if isinstance(tree, Mapping):
+        for k in sorted(tree.keys()):
+            sub = flatten_paths(tree[k], f"{prefix}{k}{SEP}")
+            out.update(sub)
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(flatten_paths(v, f"{prefix}{i}{SEP}"))
+    elif tree is None:
+        pass
+    else:
+        out[prefix[: -len(SEP)]] = tree
+    return out
+
+
+def unflatten_paths(flat: Mapping[str, Any]) -> dict:
+    """Inverse of :func:`flatten_paths` (dict nodes only)."""
+    root: dict = {}
+    for path, leaf in flat.items():
+        parts = path.split(SEP)
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = leaf
+    return root
+
+
+def leaf_bytes(leaf: Any) -> int:
+    """Bytes of one array-like leaf (works on ShapeDtypeStruct too)."""
+    shape = getattr(leaf, "shape", ())
+    dtype = getattr(leaf, "dtype", np.dtype("float32"))
+    return int(np.prod(shape, dtype=np.int64)) * np.dtype(dtype).itemsize if shape != () else np.dtype(dtype).itemsize
+
+
+def tree_bytes(tree: Any) -> int:
+    return sum(leaf_bytes(l) for l in jax.tree_util.tree_leaves(tree))
+
+
+def tree_param_count(tree: Any) -> int:
+    total = 0
+    for l in jax.tree_util.tree_leaves(tree):
+        shape = getattr(l, "shape", ())
+        total += int(np.prod(shape, dtype=np.int64)) if shape != () else 1
+    return total
+
+
+def tree_map_with_path(fn: Callable[[str, Any], Any], tree: Any) -> Any:
+    """Map ``fn(path, leaf)`` over a nested-dict pytree, preserving structure."""
+    flat = flatten_paths(tree)
+    return unflatten_paths({p: fn(p, l) for p, l in flat.items()})
+
+
+def cast_tree(tree: Any, dtype) -> Any:
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if hasattr(x, "astype") and jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree,
+    )

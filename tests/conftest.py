@@ -1,0 +1,15 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests must see ONE device
+(the 512-device override is exclusively dryrun.py's, per the mandate)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def make_lm_batch(key, vocab, batch=2, seq=16):
+    toks = jax.random.randint(key, (batch, seq + 1), 0, vocab)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}

@@ -1,0 +1,94 @@
+"""Partitioning rules, collective parsing, gradient compression, drift."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.collectives import parse_collectives
+from repro.distributed.compression import Int8Compressor
+from repro.distributed.partitioning import leaf_logical_axes, param_specs
+from repro.distributed.sharding import LogicalRules
+
+
+def test_leaf_logical_axes_classification():
+    assert leaf_logical_axes("blocks/attn/wq", (8, 64, 128)) == \
+        ("layers", "embed_fsdp", "tensor")
+    assert leaf_logical_axes("blocks/mlp/w_down", (8, 256, 64)) == \
+        ("layers", "tensor", "embed_fsdp")
+    assert leaf_logical_axes("embed/table", (1000, 64)) == ("vocab", "embed_fsdp")
+    assert leaf_logical_axes("blocks/moe/experts/w_gate", (8, 16, 64, 32)) == \
+        ("layers", "expert", "embed_fsdp", None)
+    # tiny leaves replicate
+    assert leaf_logical_axes("blocks/ln1/scale", (64,)) == (None,)
+
+
+def test_param_specs_divisibility_guard():
+    mesh = jax.make_mesh((1,), ("model",))
+
+    class FakeMesh:
+        shape = {"data": 8, "model": 8}
+
+    rules = LogicalRules(FakeMesh(), {"embed_fsdp": "data", "tensor": "model",
+                                      "layers": None, "vocab": "model"})
+    params = {
+        "attn": {"wq": jax.ShapeDtypeStruct((12, 16), jnp.float32)},  # 12 % 8 != 0
+        "mlp": {"w_up": jax.ShapeDtypeStruct((16, 64), jnp.float32)},
+    }
+    specs = params and param_specs(params, rules)
+    assert specs["attn"]["wq"] == P(None, "model")  # fsdp dropped (12 % 8)
+    assert specs["mlp"]["w_up"][0] == "data"
+
+
+def test_collective_parser_counts_and_bytes():
+    hlo = """
+      %ag = f32[16,128]{1,0} all-gather(f32[2,128]{1,0} %p0), replica_groups={}
+      %ar = bf16[1024]{0} all-reduce(bf16[1024]{0} %x), to_apply=%add
+      %rs.1 = f32[8,64]{1,0} reduce-scatter(f32[64,64]{1,0} %y), dimensions={0}
+      %a2a = (f32[4,32]{1,0}) all-to-all(f32[4,32]{1,0} %z)
+      %done = f32[16,128]{1,0} all-gather-done(f32[16,128]{1,0} %ag)
+    """
+    stats = parse_collectives(hlo)
+    assert stats.by_kind_count["all-gather"] == 1
+    assert stats.by_kind_count["all-reduce"] == 1
+    assert stats.by_kind_bytes["all-gather"] == 16 * 128 * 4
+    assert stats.by_kind_bytes["all-reduce"] == 1024 * 2
+    # all-reduce costs 2x on the wire (ring RS+AG)
+    assert stats.wire_bytes >= stats.total_bytes
+
+
+def test_int8_compression_error_feedback(rng):
+    """Quantization error is carried, not lost: sum over steps converges."""
+    comp = Int8Compressor()
+    g_true = {"w": jax.random.normal(rng, (64,)) * 0.01}
+    err = comp.init(g_true)
+    acc = jnp.zeros((64,))
+    for _ in range(50):
+        g_q, err = comp.compress(g_true, err)
+        acc = acc + g_q["w"]
+    # mean compressed gradient ≈ true gradient (error feedback property)
+    np.testing.assert_allclose(np.asarray(acc / 50), np.asarray(g_true["w"]),
+                               atol=2e-4)
+
+
+def test_drift_monitor_reverts(rng):
+    from repro.core import ParamStore, RegisteredModel
+    from repro.core.drift import DriftMonitor
+
+    p1 = {"w": jnp.ones((4, 4))}
+    store = ParamStore.from_models({"a": p1})
+    # corrupt the deployed weights to force a breach
+    store.buffers["a:w"] = jnp.zeros((4, 4))
+
+    m = RegisteredModel(
+        "a", lambda p, b: 0.0,
+        lambda p, b: float(jnp.mean(p["w"])),  # accuracy = mean weight
+        lambda e: [], None, accuracy_target=0.9, original_accuracy=1.0,
+    )
+    mon = DriftMonitor(store, {"a": p1}, [m])
+    report = mon.check({"a": None})
+    assert report.breached == {"a"}
+    mon.revert(report)
+    assert report.reverted == {"a"}
+    np.testing.assert_array_equal(np.asarray(store.materialize("a")["w"]),
+                                  np.ones((4, 4)))

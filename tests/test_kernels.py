@@ -1,0 +1,113 @@
+"""Per-kernel validation: sweep shapes/dtypes, assert allclose vs the
+pure-jnp oracle (interpret mode executes the kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref as R
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mamba_scan import mamba_scan
+from repro.kernels.page_gather import page_gather
+from repro.kernels.rg_lru import rg_lru_scan
+
+TOL = dict(rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("S,Hq,Hkv,D,bq,bk", [
+    (128, 4, 4, 64, 64, 64),    # MHA
+    (256, 8, 2, 64, 128, 64),   # GQA 4:1
+    (128, 4, 1, 128, 32, 128),  # MQA, wide head
+])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 32), (False, None)])
+def test_flash_attention_sweep(dtype, S, Hq, Hkv, D, bq, bk, causal, window, rng):
+    ks = jax.random.split(rng, 3)
+    B = 2
+    q = jax.random.normal(ks[0], (B, S, Hq, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=bq, block_k=bk, interpret=True)
+    ref = R.flash_attention_ref(q, k, v, causal=causal, window=window)
+    tol = TOL if dtype == jnp.float32 else dict(rtol=2e-2, atol=2e-2)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("Smax,Hq,Hkv,D,bk", [
+    (256, 8, 2, 64, 128), (512, 4, 4, 128, 256), (128, 8, 1, 64, 64),
+])
+def test_decode_attention_sweep(dtype, Smax, Hq, Hkv, D, bk, rng):
+    ks = jax.random.split(rng, 3)
+    B = 3
+    q = jax.random.normal(ks[0], (B, Hq, D), dtype)
+    kc = jax.random.normal(ks[1], (B, Smax, Hkv, D), dtype)
+    vc = jax.random.normal(ks[2], (B, Smax, Hkv, D), dtype)
+    lengths = jnp.array([1, Smax // 3, Smax], jnp.int32)
+    out = decode_attention(q, kc, vc, lengths, block_k=bk, interpret=True)
+    ref = R.decode_attention_ref(q, kc, vc, lengths)
+    tol = TOL if dtype == jnp.float32 else dict(rtol=2e-2, atol=2e-2)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **tol)
+
+
+@pytest.mark.parametrize("S,d,chunk,bd", [(64, 128, 16, 128), (128, 256, 64, 128),
+                                          (32, 128, 32, 128)])
+def test_rg_lru_sweep(S, d, chunk, bd, rng):
+    ks = jax.random.split(rng, 3)
+    B = 2
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (B, S, d)))
+    b = jax.random.normal(ks[1], (B, S, d))
+    h0 = jax.random.normal(ks[2], (B, d))
+    y, hl = rg_lru_scan(a, b, h0, chunk=chunk, block_d=bd, interpret=True)
+    yr, hlr = R.rg_lru_ref(a, b, h0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), **TOL)
+    np.testing.assert_allclose(np.asarray(hl), np.asarray(hlr), **TOL)
+
+
+@pytest.mark.parametrize("S,di,n,chunk,bdi", [(64, 128, 16, 16, 128),
+                                              (32, 256, 8, 32, 128)])
+def test_mamba_scan_sweep(S, di, n, chunk, bdi, rng):
+    ks = jax.random.split(rng, 5)
+    B = 2
+    dt = jax.nn.softplus(jax.random.normal(ks[0], (B, S, di)))
+    dtx = jax.random.normal(ks[1], (B, S, di))
+    Bm = jax.random.normal(ks[2], (B, S, n))
+    Cm = jax.random.normal(ks[3], (B, S, n))
+    A = -jnp.exp(jax.random.normal(ks[4], (di, n)) * 0.5)
+    h0 = jnp.zeros((B, di, n))
+    y, hl = mamba_scan(dt, dtx, Bm, Cm, A, h0, chunk=chunk, block_di=bdi,
+                       interpret=True)
+    yr, hlr = R.mamba_scan_ref(dt, dtx, Bm, Cm, A, h0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-2, atol=1e-2)
+    np.testing.assert_allclose(np.asarray(hl), np.asarray(hlr), rtol=1e-2, atol=1e-2)
+
+
+@pytest.mark.parametrize("P,page,N", [(32, 128, 8), (64, 256, 64), (8, 512, 3)])
+def test_page_gather_sweep(P, page, N, rng):
+    pool = jax.random.normal(rng, (P, page))
+    table = jax.random.randint(rng, (N,), 0, P)
+    out = page_gather(pool, table, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(R.page_gather_ref(pool, table)))
+
+
+def test_model_uses_kernel_equivalence(rng):
+    """ops.flash_attention(mode=interpret) == the model's jnp attention."""
+    from repro.kernels import ops
+    from repro.models import layers as L
+
+    B, S, Hq, Hkv, D = 2, 128, 4, 2, 64
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, D))
+    k = jax.random.normal(ks[1], (B, S, Hkv, D))
+    v = jax.random.normal(ks[2], (B, S, Hkv, D))
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    model_attn = L.gqa_attention(q, k, v, L.attention_mask(pos, pos, True, None))
+    kern = ops.flash_attention(q, k, v, causal=True, mode="interpret",
+                               block_q=64, block_k=64)
+    np.testing.assert_allclose(np.asarray(kern), np.asarray(model_attn),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,269 @@
+"""Merging-engine invariants: signatures, groups, ParamStore, planner.
+
+Hypothesis property tests cover the system's core invariants:
+  * materialisation round-trips bindings exactly;
+  * resident bytes == sum of unique buffer bytes, and merging N appearances
+    of a layer saves exactly (N-1) x leaf_bytes;
+  * merge->unmerge restores per-model isolation (no aliasing leaks);
+  * group enumeration is memory-forward sorted and signature-sound.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    ParamStore, RegisteredModel, enumerate_groups, potential_savings,
+    records_from_params, records_from_spec, signature_match_fraction,
+)
+from repro.core.groups import LayerGroup
+from repro.models.vision import get_spec
+from repro.utils.tree import flatten_paths, tree_bytes
+
+# ---------------------------------------------------------------------------
+# Deterministic structural tests
+# ---------------------------------------------------------------------------
+
+
+def _mk_params(key, widths):
+    ks = jax.random.split(key, len(widths) + 1)
+    return {
+        f"layer{i}": {"w": jax.random.normal(ks[i], (w, w))}
+        for i, w in enumerate(widths)
+    }
+
+
+def test_identical_models_match_100pct(rng):
+    p = _mk_params(rng, [4, 8, 16])
+    ra = records_from_params(p, "a")
+    rb = records_from_params(p, "b")
+    assert signature_match_fraction(ra, rb) == 1.0
+
+
+def test_groups_sorted_memory_forward(rng):
+    recs = (records_from_spec(get_spec("r50"), "m1")
+            + records_from_spec(get_spec("r152"), "m2"))
+    groups = enumerate_groups(recs)
+    mems = [g.memory for g in groups]
+    assert mems == sorted(mems, reverse=True)
+    for g in groups:
+        assert len(g.records) >= 2
+        assert len({r.signature for r in g.records}) == 1
+
+
+def test_paper_commonality_ranges():
+    """Fig 4 qualitative bands: same model 100%; same family substantial;
+    cross-family spans near-zero to >85% (paper: up to 92.3%)."""
+    r50 = records_from_spec(get_spec("r50"))
+    r152 = records_from_spec(get_spec("r152"))
+    frcnn = records_from_spec(get_spec("frcnn-r50"))
+    vgg = records_from_spec(get_spec("vgg"))
+    assert signature_match_fraction(r50, r50) == 1.0
+    assert 0.2 < signature_match_fraction(r50, r152) < 0.6
+    assert signature_match_fraction(r50, frcnn) > 0.85
+    assert signature_match_fraction(r50, vgg) < 0.1
+
+
+def test_store_merge_saves_exactly(rng):
+    p1 = _mk_params(rng, [8, 8, 16])
+    p2 = _mk_params(jax.random.PRNGKey(1), [8, 8, 16])
+    store = ParamStore.from_models({"a": p1, "b": p2})
+    base = store.resident_bytes()
+    assert base == tree_bytes(p1) + tree_bytes(p2)
+
+    recs = records_from_params(p1, "a") + records_from_params(p2, "b")
+    groups = enumerate_groups(recs)
+    g = groups[0]
+    store.merge_group(g)
+    saved = base - store.resident_bytes()
+    assert saved == g.savings
+    # both models now materialise the SAME buffer for the merged path
+    pa = flatten_paths(store.materialize("a"))
+    pb = flatten_paths(store.materialize("b"))
+    path = g.records[0].path
+    assert pa[path] is pb[path]
+
+
+def test_store_unmerge_restores_isolation(rng):
+    p1 = _mk_params(rng, [8, 16])
+    p2 = _mk_params(jax.random.PRNGKey(1), [8, 16])
+    store = ParamStore.from_models({"a": p1, "b": p2})
+    recs = records_from_params(p1, "a") + records_from_params(p2, "b")
+    g = enumerate_groups(recs)[0]
+    base = store.resident_bytes()
+    store.merge_group(g)
+    store.unmerge(g)
+    assert store.resident_bytes() == base
+    pa = flatten_paths(store.materialize("a"))
+    pb = flatten_paths(store.materialize("b"))
+    path = g.records[0].path
+    pa[path] is not pb[path]
+    # mutating a's buffer must not affect b
+    store.buffers[store.bindings["a"][path]] = jnp.zeros_like(pa[path])
+    pb2 = flatten_paths(store.materialize("b"))
+    assert not np.allclose(np.asarray(pb2[path]), 0.0)
+
+
+def test_incremental_load_bytes(rng):
+    p1 = _mk_params(rng, [8, 16])
+    p2 = _mk_params(jax.random.PRNGKey(1), [8, 16])
+    store = ParamStore.from_models({"a": p1, "b": p2})
+    recs = records_from_params(p1, "a") + records_from_params(p2, "b")
+    for g in enumerate_groups(recs):
+        store.merge_group(g)
+    # with everything merged, loading b after a moves ZERO bytes
+    resident = store.keys_for("a")
+    assert store.incremental_load_bytes("b", resident) == 0
+
+
+def test_gradients_sum_into_shared_buffers(rng):
+    """grad wrt a shared buffer == sum of the two models' grads (A3)."""
+    p1 = {"w": jnp.ones((4, 4))}
+    p2 = {"w": jnp.ones((4, 4))}
+    store = ParamStore.from_models({"a": p1, "b": p2})
+    recs = records_from_params(p1, "a") + records_from_params(p2, "b")
+    store.merge_group(enumerate_groups(recs)[0])
+    x = jnp.arange(4.0)
+
+    def loss(buffers):
+        pa = store.materialize("a", buffers)
+        pb = store.materialize("b", buffers)
+        return jnp.sum(pa["w"] @ x) + jnp.sum((pb["w"] @ x) ** 2)
+
+    grads = jax.grad(loss)(dict(store.buffers))
+    (shared_key,) = store.shared_keys()
+    ga = jnp.broadcast_to(x, (4, 4))
+    gb = 2.0 * jnp.outer(jnp.ones(4) * jnp.sum(jnp.ones((4,)) * x), x)  # 2(w x) x^T
+    np.testing.assert_allclose(np.asarray(grads[shared_key]),
+                               np.asarray(ga + gb), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis property tests
+# ---------------------------------------------------------------------------
+
+leaf_shapes = st.lists(
+    st.sampled_from([(4, 4), (8, 8), (4, 8), (16,)]), min_size=1, max_size=5
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shapes_a=leaf_shapes, shapes_b=leaf_shapes, seed=st.integers(0, 2**16))
+def test_property_resident_bytes_unique_buffers(shapes_a, shapes_b, seed):
+    key = jax.random.PRNGKey(seed)
+
+    def mk(key, shapes):
+        ks = jax.random.split(key, len(shapes) + 1)
+        return {f"l{i}": jax.random.normal(ks[i], s) for i, s in enumerate(shapes)}
+
+    pa, pb = mk(key, shapes_a), mk(jax.random.PRNGKey(seed + 1), shapes_b)
+    store = ParamStore.from_models({"a": pa, "b": pb})
+    recs = records_from_params(pa, "a") + records_from_params(pb, "b")
+    groups = enumerate_groups(recs)
+    total_before = store.resident_bytes()
+    expected_savings = sum(g.savings for g in groups)
+    for g in groups:
+        store.merge_group(g)
+    assert store.resident_bytes() == total_before - expected_savings
+    # materialisation round-trips structure for both models
+    for mid, orig in (("a", pa), ("b", pb)):
+        mat = store.materialize(mid)
+        assert set(flatten_paths(mat)) == set(flatten_paths(orig))
+        for path, leaf in flatten_paths(mat).items():
+            assert leaf.shape == flatten_paths(orig)[path].shape
+
+
+@settings(max_examples=25, deadline=None)
+@given(n_models=st.integers(2, 5), seed=st.integers(0, 2**16))
+def test_property_potential_savings_bounds(n_models, seed):
+    """0 <= saved <= total*(n-1)/n for n identical models; == for identical."""
+    key = jax.random.PRNGKey(seed)
+    base = {f"l{i}": jax.random.normal(key, (8, 8)) for i in range(3)}
+    recs = []
+    for m in range(n_models):
+        recs += records_from_params(base, f"m{m}")
+    out = potential_savings(recs)
+    assert out["saved_bytes"] == out["total_bytes"] * (n_models - 1) // n_models
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16), drop_rounds=st.integers(0, 3))
+def test_property_aimd_halving_keeps_heaviest(seed, drop_rounds):
+    """drop_earliest_half always keeps the latest-position (heaviest) half."""
+    import random as pyrandom
+
+    r = pyrandom.Random(seed)
+    from repro.core.signatures import LayerRecord
+
+    recs = [
+        LayerRecord(f"m{i}", f"p{i}", ("k", (4, 4), 1), 64, r.random())
+        for i in range(r.randint(2, 16))
+    ]
+    g = LayerGroup(("k", (4, 4), 1), recs)
+    for _ in range(drop_rounds):
+        if len(g.records) < 2:
+            break
+        prev = sorted(r2.position for r2 in g.records)
+        g = g.drop_earliest_half()
+        kept = sorted(r2.position for r2 in g.records)
+        assert kept == prev[len(prev) // 2 :]
+
+
+# ---------------------------------------------------------------------------
+# End-to-end mini merge (fast surrogate trainer)
+# ---------------------------------------------------------------------------
+
+
+class SurrogateTrainer:
+    """Deterministic stand-in for MergeTrainer: succeeds iff the group's
+    appearances all sit past a position threshold (mimicking the paper's
+    'late layers merge, early layers often fail')."""
+
+    def __init__(self, threshold=0.3):
+        self.threshold = threshold
+        self.calls = 0
+
+    def train(self, store, models):
+        from repro.core.merging import MergeResult
+
+        self.calls += 1
+        ok = all(r.position >= self.threshold for r in self._group.records)
+        accs = {m.model_id: 1.0 if ok else 0.0 for m in models}
+        return MergeResult(ok, accs, set(), 1, 0.0, [])
+
+
+def test_planner_aimd_flow(rng):
+    from repro.core.planner import IncrementalMerger
+
+    p1 = _mk_params(rng, [8, 8, 16, 16])
+    p2 = _mk_params(jax.random.PRNGKey(1), [8, 8, 16, 16])
+    store = ParamStore.from_models({"a": p1, "b": p2})
+    recs = records_from_params(p1, "a") + records_from_params(p2, "b")
+
+    models = [
+        RegisteredModel(mid, lambda p, b: 0.0, lambda p, b: 1.0,
+                        lambda e: [], None, 0.9, 1.0)
+        for mid in ("a", "b")
+    ]
+    trainer = SurrogateTrainer(threshold=0.3)
+
+    class Hooked(IncrementalMerger):
+        def run(self):
+            # surrogate needs the group in scope
+            orig_merge = self.store.merge_group
+
+            def hook(group, *a, **kw):
+                trainer._group = group
+                return orig_merge(group, *a, **kw)
+
+            self.store.merge_group = hook
+            return super().run()
+
+    merger = Hooked(store, models, recs, trainer)
+    res = merger.run()
+    assert res.committed >= 1
+    assert res.saved_bytes > 0
+    # layers before the threshold stayed private
+    for path in ("layer0/w",):
+        assert store.bindings["a"][path] != store.bindings["b"][path]

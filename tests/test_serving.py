@@ -1,0 +1,113 @@
+"""Scheduler / profiler / simulator behaviour."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.costs import costs_for
+from repro.serving.profiler import cycle_time_ms, profile_workload
+from repro.serving.scheduler import Instance, Scheduler, merging_aware_order, shared_bytes
+from repro.serving.simulator import simulate
+from repro.serving.workload import build_instances, memory_settings, workload_costs
+
+GB = int(1e9)
+
+
+def _inst(iid, model_id, keys):
+    return Instance(iid, model_id, frozenset(keys), dict(keys))
+
+
+def test_merging_aware_order_groups_sharers():
+    a = _inst("a", "r50", {"s": 50, "a1": 10})
+    b = _inst("b", "r50", {"s": 50, "b1": 10})
+    c = _inst("c", "vgg", {"c1": 100})
+    order = merging_aware_order([a, b, c])
+    ids = [i.instance_id for i in order]
+    # a and b share 50 bytes; they must be adjacent
+    assert abs(ids.index("a") - ids.index("b")) == 1
+
+
+def test_scheduler_incremental_load_zero_for_shared():
+    costs = {"tiny-yolo": costs_for("tiny-yolo")}
+    a = _inst("a", "tiny-yolo", {"s": 10 * GB // 100})
+    b = _inst("b", "tiny-yolo", {"s": 10 * GB // 100})
+    sched = Scheduler([a, b], capacity_bytes=GB, costs=costs)
+    r1 = sched.load("a", 1)
+    r2 = sched.load("b", 1)
+    assert r1["loaded_bytes"] > 0
+    assert r2["loaded_bytes"] == 0  # fully shared: swap is free
+
+
+def test_scheduler_evicts_under_pressure():
+    costs = {"tiny-yolo": costs_for("tiny-yolo")}
+    cap = int(0.3 * GB)
+    a = _inst("a", "tiny-yolo", {"a": int(0.2 * GB)})
+    b = _inst("b", "tiny-yolo", {"b": int(0.2 * GB)})
+    sched = Scheduler([a, b], capacity_bytes=cap, costs=costs)
+    sched.load("a", 1)
+    r = sched.load("b", 1)
+    assert "a" in r["evicted"]
+    assert sched.mem.used_bytes <= cap
+
+
+def test_profiler_respects_sla():
+    name = "MP2"
+    costs = workload_costs(name)
+    insts = build_instances(name)
+    sched = Scheduler(insts, memory_settings(name)["min"], costs)
+    order = [i.instance_id for i in sched.order]
+    cost_by_inst = {i.instance_id: costs[i.model_id] for i in sched.order}
+    swap = sched.cycle_swap_bytes({i: 1 for i in order})
+    prof = profile_workload(order, cost_by_inst, swap, sla_ms=100.0)
+    assert prof.cycle_ms <= 100.0 or all(
+        b == 1 for b in prof.batch_sizes.values()
+    )  # degraded mode falls back to batch 1
+
+
+@pytest.mark.parametrize("name", ["LP2", "MP2"])
+def test_merging_never_hurts(name):
+    """Merged workload: accuracy >= unmerged, swap bytes <= unmerged."""
+    cap = memory_settings(name)["min"]
+    costs = workload_costs(name)
+    out = {}
+    for merged in ["none", "optimal"]:
+        insts = build_instances(name, merged=merged)
+        sched = Scheduler(insts, cap, costs, merged=(merged != "none"))
+        res = simulate(sched, {i.instance_id: 1 for i in insts},
+                       horizon_ms=10_000)
+        out[merged] = res
+    assert out["optimal"].swap_ms_total <= out["none"].swap_ms_total
+    assert out["optimal"].overall_accuracy >= out["none"].overall_accuracy - 1e-9
+
+
+def test_more_memory_less_swap():
+    name = "HP4"
+    costs = workload_costs(name)
+    ms = memory_settings(name)
+    swaps = []
+    for setting in ["min", "50%", "75%", "max"]:
+        insts = build_instances(name)
+        sched = Scheduler(insts, ms[setting], costs)
+        res = simulate(sched, {i.instance_id: 1 for i in insts}, horizon_ms=10_000)
+        swaps.append(res.swap_ms_total)
+    assert swaps[-1] <= swaps[0]  # max memory cannot swap more than min
+
+
+@settings(max_examples=20, deadline=None)
+@given(cap_frac=st.floats(0.2, 1.0), seed=st.integers(0, 100))
+def test_property_scheduler_memory_invariant(cap_frac, seed):
+    """Resident bytes never exceed capacity after any load sequence."""
+    import random
+
+    r = random.Random(seed)
+    costs = {"tiny-yolo": costs_for("tiny-yolo")}
+    insts = [
+        _inst(f"i{k}", "tiny-yolo",
+              {f"i{k}:{j}": r.randint(1, 50) * 1_000_000 for j in range(3)})
+        for k in range(5)
+    ]
+    total = sum(i.param_bytes for i in insts)
+    cap = int(cap_frac * total) + 200_000_000  # + activation headroom
+    sched = Scheduler(insts, cap, costs)
+    for _ in range(20):
+        iid = f"i{r.randint(0, 4)}"
+        sched.load(iid, 1)
+        assert sched.mem.used_bytes <= cap

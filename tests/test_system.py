@@ -1,0 +1,135 @@
+"""End-to-end behaviour of the GEMEL system: register → merge → deploy →
+serve, plus the LM-scale merging path (beyond-paper)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    IncrementalMerger, ParamStore, RegisteredModel, enumerate_groups,
+    records_from_params,
+)
+from repro.core.merging import MergeTrainer
+from repro.data.synthetic import VisionStream
+from repro.models import vision as VI
+from repro.serving.costs import costs_for
+from repro.serving.scheduler import Instance, Scheduler
+from repro.serving.simulator import simulate
+from repro.train.optimizer import AdamW
+
+
+def _pretrain(cfg, params, stream, steps=280, lr=3e-3):
+    opt = AdamW(lr=lr)
+    st = opt.init(params)
+
+    @jax.jit
+    def step(p, s, b):
+        l, g = jax.value_and_grad(lambda pp: VI.small_cnn_loss(cfg, pp, b))(p)
+        p, s = opt.update(g, s, p)
+        return p, s, l
+
+    it = iter(stream)
+    for _ in range(steps):
+        params, st, _ = step(params, st, next(it))
+    return params
+
+
+@pytest.mark.slow
+def test_end_to_end_merge_then_serve(rng):
+    """Two pretrained same-architecture models -> incremental merging finds
+    >= 1 shareable group under a 90% accuracy target -> the merged workload
+    swaps fewer bytes in the scheduler."""
+    cfg = VI.SmallCNNConfig(task="classification", n_classes=4, depth=1,
+                            width=8, n_stages=2)
+    streams = {m: VisionStream(4, 32, seed=s) for m, s in (("A", 7), ("B", 8))}
+    models_params = {}
+    for mid, stream in streams.items():
+        p0 = VI.init_small_cnn(cfg, jax.random.PRNGKey(ord(mid)))
+        models_params[mid] = _pretrain(cfg, p0, stream)
+
+    val = {m: s.batch_at(10_000) for m, s in streams.items()}
+    orig_acc = {
+        m: float(VI.small_cnn_accuracy(cfg, models_params[m], val[m]))
+        for m in models_params
+    }
+    assert min(orig_acc.values()) > 0.5, "pretraining failed"
+
+    store = ParamStore.from_models(models_params)
+    regs = [
+        RegisteredModel(
+            m, lambda p, b: VI.small_cnn_loss(cfg, p, b),
+            lambda p, b: VI.small_cnn_accuracy(cfg, p, b),
+            lambda e, s=streams[m]: s.epoch(e, n_batches=4),
+            val[m], accuracy_target=0.9, original_accuracy=orig_acc[m],
+        )
+        for m in models_params
+    ]
+    recs = sum((records_from_params(models_params[m], m) for m in models_params), [])
+    merger = IncrementalMerger(
+        store, regs, recs,
+        MergeTrainer(max_epochs=20, optimizer=AdamW(lr=2e-3)),
+        min_group_bytes=4096,
+    )
+    result = merger.run()
+    assert result.committed >= 1, "no group merged"
+    assert result.saved_bytes > 0
+    # accuracy targets hold on the deployed configuration
+    from repro.core.validation import meets_targets, validate
+
+    accs = validate(store, regs)
+    assert meets_targets(accs, regs)
+
+    # the merged pair swaps fewer bytes than the unmerged pair
+    costs = {"tiny-yolo": costs_for("tiny-yolo")}
+
+    def swap_bytes(s):
+        a = Instance("A", "tiny-yolo", frozenset(s.keys_for("A")),
+                     {k: 1000 for k in s.keys_for("A")})
+        b = Instance("B", "tiny-yolo", frozenset(s.keys_for("B")),
+                     {k: 1000 for k in s.keys_for("B")})
+        sched = Scheduler([a, b], capacity_bytes=10**7, costs=costs)
+        sched.load("A", 1)
+        return sched.load("B", 1)["loaded_bytes"]
+
+    unmerged_store = ParamStore.from_models(models_params)
+    assert swap_bytes(store) < swap_bytes(unmerged_store)
+
+
+def test_lm_merging_beyond_paper(rng):
+    """Two fine-tuned variants of one LM arch share 100% of signatures;
+    merging the top (power-law head) group saves exactly its leaf bytes."""
+    from repro.models import transformer as T
+
+    cfg = T.DenseLMConfig(n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+                          head_dim=16, d_ff=64, vocab_size=1000,
+                          scan_layers=False)
+    pa = T.init(cfg, jax.random.PRNGKey(0))
+    pb = T.init(cfg, jax.random.PRNGKey(1))
+    ra = records_from_params(pa, "a")
+    rb = records_from_params(pb, "b")
+    from repro.core import signature_match_fraction
+
+    assert signature_match_fraction(ra, rb) == 1.0
+    store = ParamStore.from_models({"a": pa, "b": pb})
+    groups = enumerate_groups(ra + rb)
+    top = groups[0]
+    assert top.leaf_bytes >= max(g.leaf_bytes for g in groups)
+    base = store.resident_bytes()
+    store.merge_group(top)
+    assert base - store.resident_bytes() == top.savings
+
+
+def test_simulated_gemel_vs_nexus_accuracy():
+    """Fig 10 direction: merged accuracy >= unmerged at min memory."""
+    from repro.serving.workload import build_instances, memory_settings, workload_costs
+
+    name = "MP2"
+    cap = memory_settings(name)["min"]
+    costs = workload_costs(name)
+    accs = {}
+    for merged in ["none", "optimal"]:
+        insts = build_instances(name, merged=merged)
+        sched = Scheduler(insts, cap, costs, merged=(merged != "none"))
+        res = simulate(sched, {i.instance_id: 2 for i in insts}, horizon_ms=15_000)
+        accs[merged] = res.overall_accuracy
+    assert accs["optimal"] > accs["none"]
