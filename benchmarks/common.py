@@ -9,12 +9,16 @@ from typing import Any, Optional
 ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts", "benchmarks")
 
 
-def emit(name: str, rows: list, derived: Optional[dict] = None) -> dict:
-    """Print a compact CSV block and persist JSON."""
+def emit(name: str, rows: list, derived: Optional[dict] = None,
+         quiet: bool = False) -> dict:
+    """Print a compact CSV block and persist JSON.  ``quiet`` skips the
+    human-readable print (machine consumers reading stdout)."""
     os.makedirs(ARTIFACTS, exist_ok=True)
     out = {"name": name, "rows": rows, "derived": derived or {}}
     with open(os.path.join(ARTIFACTS, f"{name}.json"), "w") as f:
         json.dump(out, f, indent=2, default=str)
+    if quiet:
+        return out
     print(f"\n== {name} ==")
     if rows:
         cols = list(rows[0].keys())

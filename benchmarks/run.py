@@ -19,7 +19,7 @@ def main(argv=None):
         ablation_ordering, fig3_nexus, fig4_commonality, fig5_potential,
         fig9_powerlaw, fig10_e2e, fig11_savings, fig12_baselines,
         fig13_incremental, fig14_bandwidth, lm_merging, roofline,
-        table1_memory, table2_times, table3_sweeps,
+        serve_throughput, table1_memory, table2_times, table3_sweeps,
     )
 
     modules = [
@@ -35,6 +35,7 @@ def main(argv=None):
         ("fig13_incremental", fig13_incremental),
         ("fig14_bandwidth", fig14_bandwidth),
         ("table3_sweeps", table3_sweeps),
+        ("serve_throughput", serve_throughput),
         ("lm_merging", lm_merging),
         ("ablation_ordering", ablation_ordering),
         ("roofline", roofline),

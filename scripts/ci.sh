@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# Lightweight CI: tier-1 tests + the serving benchmark artifact, on CPU with
+# the pure-jnp kernel oracles.  Run from the repo root.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export REPRO_KERNEL_MODE=ref
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+python -m pytest -x -q
+
+# serving engine vs seed path; fails loudly if the artifact can't be built
+python benchmarks/serve_throughput.py --json --requests 240
+
+test -f artifacts/benchmarks/BENCH_serve.json
+echo "CI OK"

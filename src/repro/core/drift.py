@@ -53,4 +53,6 @@ class DriftMonitor:
                 self.store.bindings[mid][path] = key
             report.reverted.add(mid)
         self.store._gc_unreferenced()
+        if report.breached:
+            self.store.bump_epoch()  # reverts rebind: invalidate cached pytrees
         return report

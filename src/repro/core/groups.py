@@ -10,10 +10,23 @@ would be earlier in the list than a 120 MB layer that appears 3 times".
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from collections import defaultdict
 from typing import Iterable, Optional
 
 from repro.core.signatures import LayerRecord
+
+
+def stable_group_id(signature: tuple) -> str:
+    """Deterministic shared-buffer id for a group signature.
+
+    ``hash()`` of a tuple varies with PYTHONHASHSEED, so ids built from it
+    differ across processes — stores would not be reproducible and two
+    builders (ParamStore.merge_group, workload.build_instances) could not
+    agree on key names.  blake2b of the signature repr is stable everywhere.
+    """
+    digest = hashlib.blake2b(repr(signature).encode(), digest_size=8).hexdigest()
+    return f"shared:{digest}"
 
 
 @dataclasses.dataclass

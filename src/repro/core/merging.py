@@ -115,7 +115,7 @@ class MergeTrainer:
             for i in range(n_steps):
                 batch_dict = {mid: streams[mid][i % len(streams[mid])] for mid in streams}
                 buffers, opt_state, loss = step(buffers, opt_state, batch_dict)
-            store.buffers.update(buffers)
+            store.update_buffers(buffers)  # commit + invalidate cached pytrees
             epoch += 1
 
             accs = validate(store, active)

@@ -86,6 +86,7 @@ class IncrementalMerger:
 
     def _restore(self, snap):
         self.store.buffers, self.store.bindings = snap[0], snap[1]
+        self.store.bump_epoch()  # rollback rebinds: invalidate cached pytrees
 
     def _involved(self, group: LayerGroup) -> list:
         return [self.models[mid] for mid in sorted(group.models) if mid in self.models]

@@ -13,6 +13,15 @@ buffers — joint retraining needs no parameter-server machinery.
 
 The store also gives exact memory accounting: resident bytes = unique
 buffers, which is precisely what merging saves on the edge box.
+
+Serving additionally relies on **cached materialisation**: bindings change
+only at merge/unmerge time (and buffer *values* only at training-commit
+time), so the serve loop can reuse one pytree object per model per *binding
+epoch* instead of rebuilding the dict/unflatten on every request.  The
+``epoch`` counter is bumped by every mutation that could invalidate a
+previously returned pytree; :meth:`materialize_cached` is the hot-path
+entry point and :attr:`materializations` counts actual rebuilds (one per
+model per epoch when the cache works).
 """
 from __future__ import annotations
 
@@ -22,7 +31,7 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
-from repro.core.groups import LayerGroup
+from repro.core.groups import LayerGroup, stable_group_id
 from repro.utils.tree import flatten_paths, leaf_bytes, unflatten_paths
 
 
@@ -34,6 +43,23 @@ def _private_key(model_id: str, path: str) -> str:
 class ParamStore:
     buffers: dict  # store_key -> array
     bindings: dict  # model_id -> {path: store_key}
+    epoch: int = 0  # bumped on every rebinding / buffer-commit
+    materializations: dict = dataclasses.field(default_factory=dict)
+    _cache: dict = dataclasses.field(default_factory=dict, repr=False)
+
+    # -- cache bookkeeping ----------------------------------------------------
+
+    def bump_epoch(self) -> int:
+        """Invalidate all cached pytrees (bindings or buffer values changed)."""
+        self.epoch += 1
+        self._cache.clear()
+        return self.epoch
+
+    def update_buffers(self, new: dict) -> None:
+        """Commit new buffer values (e.g. after joint retraining) and
+        invalidate cached pytrees that reference the old arrays."""
+        self.buffers.update(new)
+        self.bump_epoch()
 
     # -- construction ---------------------------------------------------------
 
@@ -61,7 +87,16 @@ class ParamStore:
         internal duplicates stay distinct.  The first record of each column
         donates the initial weights (§5.3 'from a random model').  Returns
         the shared keys created."""
-        base = group_id or f"shared:{abs(hash(group.signature)) % 10**12}"
+        base = group_id or stable_group_id(group.signature)
+        # Disambiguate repeat merges of the same signature (e.g. two disjoint
+        # model pairs each sharing their own copy of one architecture): reusing
+        # the base id would silently rebind the first group's members onto the
+        # second group's buffers.  Deterministic given deterministic merge order.
+        if any(k.startswith(base + ":") for k in self.buffers):
+            n = 1
+            while any(k.startswith(f"{base}~{n}:") for k in self.buffers):
+                n += 1
+            base = f"{base}~{n}"
         keys = []
         for ci, col in enumerate(group.columns()):
             if len(col) < 2:
@@ -76,6 +111,8 @@ class ParamStore:
                 if old != gid:
                     self._gc_key(old)
             keys.append(gid)
+        if keys:
+            self.bump_epoch()
         return keys
 
     def unmerge(self, group: LayerGroup) -> None:
@@ -86,10 +123,8 @@ class ParamStore:
             priv = _private_key(r.model_id, r.path)
             self.buffers[priv] = self.buffers[cur]
             self.bindings[r.model_id][r.path] = priv
-        # shared buffer may now be orphaned
-        for r in group.records:
-            self._gc_unreferenced()
-            break
+        self._gc_unreferenced()  # shared buffers may now be orphaned
+        self.bump_epoch()
 
     def _gc_key(self, key: str) -> None:
         for binding in self.bindings.values():
@@ -111,6 +146,19 @@ class ParamStore:
         buffers = self.buffers if buffers is None else buffers
         binding = self.bindings[model_id]
         return unflatten_paths({p: buffers[k] for p, k in binding.items()})
+
+    def materialize_cached(self, model_id: str) -> dict:
+        """Serve-path materialisation: returns the *same* pytree object for a
+        model until the next binding epoch (merge/unmerge/buffer commit), so
+        per-request cost is one dict lookup instead of a full unflatten.
+        Callers must treat the result as read-only."""
+        hit = self._cache.get(model_id)
+        if hit is not None:
+            return hit
+        tree = self.materialize(model_id)
+        self._cache[model_id] = tree
+        self.materializations[model_id] = self.materializations.get(model_id, 0) + 1
+        return tree
 
     # -- accounting -----------------------------------------------------------
 
@@ -140,3 +188,12 @@ class ParamStore:
 
     def keys_for(self, model_id: str) -> set:
         return set(self.bindings[model_id].values())
+
+    def binding_signature(self, model_id: str, paths: Optional[set] = None) -> tuple:
+        """Hashable fingerprint of (path -> store key) for a subset of paths.
+        Two models whose fingerprints over a prefix's paths are equal execute
+        that prefix on *identical* weights — the shared-stem detection used by
+        the serving engine's batched prefix execution."""
+        b = self.bindings[model_id]
+        use = sorted(paths) if paths is not None else sorted(b.keys())
+        return tuple((p, b[p]) for p in use)

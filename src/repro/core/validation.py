@@ -29,7 +29,8 @@ def validate(store, models: list, buffers=None) -> dict:
     """Per-model accuracy of the *current* store weights."""
     out = {}
     for m in models:
-        params = store.materialize(m.model_id, buffers)
+        params = (store.materialize_cached(m.model_id) if buffers is None
+                  else store.materialize(m.model_id, buffers))
         out[m.model_id] = float(m.accuracy_fn(params, m.val_batch))
     return out
 

@@ -473,9 +473,9 @@ def _conv(x, p, stride=1):
     return y
 
 
-def small_cnn_forward(cfg: SmallCNNConfig, params: dict, images: jax.Array) -> jax.Array:
-    """images (B, 32, 32, 3).  Classification: logits (B, n_classes).
-    Detection: (B, H', W', n_anchors*(4+n_classes)) dense predictions."""
+def small_cnn_features(cfg: SmallCNNConfig, params: dict, images: jax.Array) -> jax.Array:
+    """Trunk (stem + stages) only — the *prefix* the serving engine runs once
+    per micro-batch when the trunk's weights are merged across models."""
     x = jax.nn.relu(_conv(images, params["stem"]))
     for s in range(cfg.n_stages):
         for d in range(cfg.depth):
@@ -491,14 +491,31 @@ def small_cnn_forward(cfg: SmallCNNConfig, params: dict, images: jax.Array) -> j
                     sc = sc[:, ::stride, ::stride, :]
                 h = h + sc
             x = jax.nn.relu(h)
+    return x
+
+
+def small_cnn_head(cfg: SmallCNNConfig, params: dict, feats: jax.Array) -> jax.Array:
+    """Task head over trunk features — the private *suffix* fan-out."""
     if cfg.task == "classification":
-        feat = jnp.mean(x, axis=(1, 2))
+        feat = jnp.mean(feats, axis=(1, 2))
         h = jax.nn.relu(feat @ params["head"]["fc1"]["w"] + params["head"]["fc1"]["b"])
         return h @ params["head"]["fc2"]["w"] + params["head"]["fc2"]["b"]
-    h = jax.nn.relu(_conv(x, params["head"]["conv"]))
+    h = jax.nn.relu(_conv(feats, params["head"]["conv"]))
     loc = _conv(h, params["head"]["loc"])
     conf = _conv(h, params["head"]["conf"])
     return jnp.concatenate([loc, conf], axis=-1)
+
+
+def small_cnn_prefix_paths(cfg: SmallCNNConfig, params: dict) -> frozenset:
+    """Flat param paths read by :func:`small_cnn_features` (everything
+    outside ``head/``) — what the engine checks for shared-key binding."""
+    return frozenset(p for p in flatten_paths(params) if not p.startswith("head/"))
+
+
+def small_cnn_forward(cfg: SmallCNNConfig, params: dict, images: jax.Array) -> jax.Array:
+    """images (B, 32, 32, 3).  Classification: logits (B, n_classes).
+    Detection: (B, H', W', n_anchors*(4+n_classes)) dense predictions."""
+    return small_cnn_head(cfg, params, small_cnn_features(cfg, params, images))
 
 
 def small_cnn_loss(cfg: SmallCNNConfig, params: dict, batch: dict) -> jax.Array:

@@ -1,10 +1,21 @@
-"""Real (non-simulated) edge executor: runs jitted forwards for the models
-in a ParamStore, driving the same Scheduler policy objects as the simulator.
+"""Real (non-simulated) edge executors: jitted forwards for the models in a
+ParamStore, driving the same Scheduler policy objects as the simulator.
 
-This is the path exercised by examples/merge_and_serve.py — small models,
-real inference, real per-request latencies; the DMA delay is modelled (the
-host has no PCIe-attached accelerator) but residency, eviction and
-merging-aware incremental loads are all real key-set operations.
+Two serve paths share the policy layer:
+
+* :class:`EdgeExecutor` — the straightforward per-request loop (one forward
+  per request, synchronous DMA).  Kept as the baseline the benchmarks compare
+  against.
+* :class:`MergeAwareEngine` — the merge-aware hot path (DESIGN.md S1):
+  cached materialisation (``ParamStore.materialize_cached``), shared-prefix
+  batched execution (one stem run per micro-batch for models whose prefix
+  weights are bound to the same store keys), deadline-sorted micro-batches,
+  and async DMA prefetch (the next group's incremental load overlaps the
+  current group's compute instead of stalling the accelerator).
+
+The DMA delay is modelled (the host has no PCIe-attached accelerator) but
+residency, eviction and merging-aware incremental loads are all real key-set
+operations.
 """
 from __future__ import annotations
 
@@ -14,9 +25,11 @@ from collections import deque
 from typing import Any, Callable, Optional
 
 import jax
+import jax.numpy as jnp
 
 from repro.core.store import ParamStore
 from repro.serving.scheduler import Instance, Scheduler
+from repro.serving.workload import deadline_microbatches, pad_stack
 
 
 @dataclasses.dataclass
@@ -50,6 +63,7 @@ class EdgeExecutor:
         costs: dict,
         dma_gbps: float = 16.0,
         simulate_dma: bool = True,
+        idle_sleep_s: float = 2e-4,
     ):
         self.store = store
         self.scheduler = Scheduler(instances, capacity_bytes, costs)
@@ -58,6 +72,7 @@ class EdgeExecutor:
         }
         self.dma_gbps = dma_gbps
         self.simulate_dma = simulate_dma
+        self.idle_sleep_s = idle_sleep_s
         self.queues = {i.instance_id: deque() for i in instances}
         self.completions: list = []
         self.skipped: int = 0
@@ -71,19 +86,22 @@ class EdgeExecutor:
                 q.popleft()
                 self.skipped += 1
 
-    def serve(self, horizon_s: float, batch: int = 1, warmup: Any = None) -> dict:
-        """Round-robin over instances until the horizon; returns stats.
+    def serve(self, horizon_s: float, batch: int = 1, warmup: Any = None,
+              drain: bool = False) -> dict:
+        """Round-robin over instances until the horizon (or, with
+        ``drain=True``, until every queue is empty); returns stats.
         ``warmup`` payload (optional) compiles each instance's forward before
         the SLA clock starts — deployments always pre-compile."""
         order = [i.instance_id for i in self.scheduler.order]
         if warmup is not None:
             for iid in order:
-                params = self.store.materialize(
+                params = self.store.materialize_cached(
                     iid.split("#")[0] if "#" in iid else iid
                 )
                 jax.block_until_ready(self.forward[iid](params, warmup))
         t0 = time.monotonic()
         idx = 0
+        empty_streak = 0
         while time.monotonic() - t0 < horizon_s:
             iid = order[idx % len(order)]
             idx += 1
@@ -91,11 +109,22 @@ class EdgeExecutor:
             self._drop_expired(now)
             q = self.queues[iid]
             if not q:
+                if drain and not any(self.queues.values()):
+                    break
+                empty_streak += 1
+                if empty_streak >= len(order):
+                    # every queue was empty for a full pass: yield instead of
+                    # busy-spinning on the monotonic clock
+                    time.sleep(self.idle_sleep_s)
+                    empty_streak = 0
                 continue
+            empty_streak = 0
             r = self.scheduler.load(iid, batch)
             if self.simulate_dma and r["loaded_bytes"]:
                 time.sleep(r["loaded_bytes"] / 1e9 / self.dma_gbps)
-            params = self.store.materialize(iid.split("#")[0] if "#" in iid else iid)
+            params = self.store.materialize_cached(
+                iid.split("#")[0] if "#" in iid else iid
+            )
             taken = [q.popleft() for _ in range(min(batch, len(q)))]
             for req in taken:
                 out = self.forward[iid](params, req.payload)
@@ -110,4 +139,297 @@ class EdgeExecutor:
             "met_sla": met,
             "skipped": self.skipped,
             "sla_fraction": met / max(total, 1),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Merge-aware engine
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ModelProgram:
+    """How the engine runs one instance.  ``forward`` is the whole model;
+    when ``prefix``/``suffix`` are given the model is split so the engine can
+    execute a merged stem once per micro-batch and fan out only the private
+    head.  ``prefix_paths`` are the flat param paths the prefix reads — the
+    engine checks against ``ParamStore.binding_signature`` that every path is
+    bound to the same store key across candidate group members before it ever
+    shares a prefix run."""
+
+    instance_id: str
+    model_id: str  # ParamStore bindings key
+    forward: Callable  # (params, batched_x) -> batched_out
+    prefix: Optional[Callable] = None  # (params, batched_x) -> batched_feats
+    suffix: Optional[Callable] = None  # (params, batched_feats) -> batched_out
+    prefix_paths: Optional[frozenset] = None
+
+
+class AsyncDMA:
+    """Models an async host->device copy engine: ``start`` begins a transfer
+    (wall-clock timestamped), ``wait`` blocks only for the portion that did
+    not overlap the compute issued in between.  With ``simulate=False`` the
+    bookkeeping still runs (stall/hidden stats) but nothing sleeps — the path
+    a real DMA queue would take."""
+
+    def __init__(self, gbps: float, simulate: bool = True):
+        self.gbps = gbps
+        self.simulate = simulate
+        self._inflight: dict = {}  # key -> (t_start, duration_s)
+        self.stall_s = 0.0
+        self.hidden_s = 0.0
+        self.transfers = 0
+
+    def seconds_for(self, nbytes: int) -> float:
+        return nbytes / 1e9 / self.gbps
+
+    def start(self, key, nbytes: int) -> None:
+        self._inflight[key] = (time.monotonic(), self.seconds_for(nbytes))
+        if nbytes:
+            self.transfers += 1
+
+    def wait(self, key, nbytes: int) -> float:
+        """Block until the transfer for ``key`` is done; returns the visible
+        stall.  A key never started (cold miss) pays the full transfer."""
+        entry = self._inflight.pop(key, None)
+        now = time.monotonic()
+        if entry is None:
+            remaining = self.seconds_for(nbytes)
+            if nbytes:
+                self.transfers += 1
+        else:
+            t_start, dur = entry
+            elapsed = now - t_start
+            remaining = Scheduler.overlapped_load_ms(dur * 1e3, elapsed * 1e3) / 1e3
+            self.hidden_s += min(dur, elapsed)
+        self.stall_s += remaining
+        if self.simulate and remaining > 0:
+            time.sleep(remaining)
+        return remaining
+
+
+class MergeAwareEngine:
+    """Batched, prefetching serve loop over a merged ParamStore.
+
+    Execution plan (recomputed whenever the store's binding epoch moves):
+    instances whose ``prefix_paths`` all bind to identical store keys form a
+    *shared-prefix group* — their stems are one physical set of weights, so
+    one prefix run serves every member's requests in a micro-batch; private
+    suffixes fan out per instance.  Groups are visited in the scheduler's
+    merging-aware round-robin order and the next group's incremental load is
+    prefetched during the current group's compute.
+    """
+
+    def __init__(
+        self,
+        store: ParamStore,
+        instances: list,
+        programs: list,
+        capacity_bytes: int,
+        costs: dict,
+        dma_gbps: float = 16.0,
+        simulate_dma: bool = True,
+        buckets: tuple = (1, 2, 4, 8),
+        idle_sleep_s: float = 2e-4,
+    ):
+        self.store = store
+        self.scheduler = Scheduler(instances, capacity_bytes, costs)
+        self.programs = {p.instance_id: p for p in programs}
+        missing = set(self.programs) ^ {i.instance_id for i in instances}
+        if missing:
+            raise ValueError(f"programs/instances mismatch: {missing}")
+        self._fwd = {p.instance_id: jax.jit(p.forward) for p in programs}
+        self._prefix = {p.instance_id: (jax.jit(p.prefix) if p.prefix else None)
+                        for p in programs}
+        self._suffix = {p.instance_id: (jax.jit(p.suffix) if p.suffix else None)
+                        for p in programs}
+        self.dma = AsyncDMA(dma_gbps, simulate=simulate_dma)
+        self.buckets = tuple(sorted(buckets))
+        self.idle_sleep_s = idle_sleep_s
+        self.queues = {i.instance_id: deque() for i in instances}
+        self.completions: list = []
+        self.skipped = 0
+        self.stats = {
+            "prefix_runs": 0, "suffix_runs": 0, "forward_runs": 0,
+            "microbatches": 0, "param_lookups": 0, "idle_sleeps": 0,
+        }
+        self._groups: list = []
+        self._groups_epoch = -1
+
+    # -- plan -----------------------------------------------------------------
+
+    def prefix_groups(self) -> list:
+        """Shared-prefix groups as lists of instance ids, ordered by first
+        appearance in the merging-aware round-robin order.  Cached per store
+        binding epoch: an unmerge splits a group on the next serve pass."""
+        if self._groups_epoch == self.store.epoch:
+            return self._groups
+        groups: list = []
+        by_sig: dict = {}
+        for inst in self.scheduler.order:
+            iid = inst.instance_id
+            p = self.programs[iid]
+            if not (p.prefix and p.suffix and p.prefix_paths):
+                groups.append([iid])
+                continue
+            sig = self.store.binding_signature(p.model_id, p.prefix_paths)
+            if sig in by_sig:
+                by_sig[sig].append(iid)
+            else:
+                by_sig[sig] = member = [iid]
+                groups.append(member)
+        self._groups = groups
+        self._groups_epoch = self.store.epoch
+        return groups
+
+    # -- queue plumbing --------------------------------------------------------
+
+    def submit(self, req: Request):
+        self.queues[req.instance_id].append(req)
+
+    def _drop_expired(self, now: float):
+        for q in self.queues.values():
+            while q and now > q[0].deadline_s:
+                q.popleft()
+                self.skipped += 1
+
+    def _params(self, iid: str):
+        self.stats["param_lookups"] += 1
+        return self.store.materialize_cached(self.programs[iid].model_id)
+
+    # -- execution -------------------------------------------------------------
+
+    def _run_group(self, group: list, reqs: list, t0: float):
+        """One group visit: deadline-sorted micro-batches over the union of
+        the group's drained requests; shared groups run the prefix once per
+        batch, singletons run the whole forward batched."""
+        mbs = deadline_microbatches(reqs, self.buckets)
+        shared = len(group) > 1
+        for mb in mbs:
+            self.stats["microbatches"] += 1
+            batch, n = pad_stack([r.payload for r in mb.requests], mb.bucket)
+            rows_by_iid: dict = {}
+            for j, r in enumerate(mb.requests):
+                rows_by_iid.setdefault(r.instance_id, []).append(j)
+            if shared:
+                lead = group[0]
+                feats = self._prefix[lead](self._params(lead), batch)
+                self.stats["prefix_runs"] += 1
+                outs, pos = {}, {}
+                for iid, idx in rows_by_iid.items():
+                    if len(idx) == mb.bucket:
+                        sub = feats  # whole batch belongs to this instance
+                    else:
+                        # fan out only this instance's rows, padded back onto
+                        # the bucket ladder so suffix shapes stay bounded
+                        sb = next(b for b in self.buckets if len(idx) <= b)
+                        take = idx + [idx[-1]] * (sb - len(idx))
+                        sub = feats[jnp.asarray(take)]
+                    outs[iid] = self._suffix[iid](self._params(iid), sub)
+                    pos[iid] = {g: k for k, g in enumerate(idx)}
+                    self.stats["suffix_runs"] += 1
+            else:
+                (iid,) = group
+                outs = {iid: self._fwd[iid](self._params(iid), batch)}
+                pos = {iid: {j: j for j in range(len(mb.requests))}}
+                self.stats["forward_runs"] += 1
+            for o in outs.values():
+                jax.block_until_ready(o)
+            done = time.monotonic() - t0
+            for j, r in enumerate(mb.requests):
+                row = pos[r.instance_id][j]
+                self.completions.append(Completion(r, outs[r.instance_id][row], done))
+
+    def _warmup(self, payload) -> None:
+        """Pre-compile every (group, bucket) shape before the SLA clock
+        starts — deployments always pre-compile.  ``payload`` follows the
+        request-payload contract (a single frame, optionally with a leading
+        batch-1 axis) and goes through the same :func:`pad_stack` as the
+        serve path, so exactly the serving shapes are compiled."""
+        for group in self.prefix_groups():
+            for b in self.buckets:
+                batch, _ = pad_stack([payload] * b, b)
+                if len(group) > 1:
+                    feats = self._prefix[group[0]](self._params(group[0]), batch)
+                    for iid in group:
+                        jax.block_until_ready(
+                            self._suffix[iid](self._params(iid), feats))
+                else:
+                    (iid,) = group
+                    jax.block_until_ready(self._fwd[iid](self._params(iid), batch))
+
+    def serve(self, horizon_s: float, warmup: Any = None, drain: bool = True) -> dict:
+        """Serve until the horizon (or until the queues are drained, with
+        ``drain=True``).  Returns stats including cache/prefetch health."""
+        if warmup is not None:
+            self._warmup(warmup)
+        # per-call accounting: every counter below is reported as the delta
+        # over this serve() call (the instance-level counters keep cumulating)
+        mat_before = dict(self.store.materializations)
+        stats_before = dict(self.stats)
+        done_before = len(self.completions)
+        skipped_before = self.skipped
+        epoch_start = self.store.epoch
+        groups = self.prefix_groups()
+        t0 = time.monotonic()
+        gi = 0
+        empty_streak = 0
+        while time.monotonic() - t0 < horizon_s:
+            groups = self.prefix_groups()  # re-plan if an epoch moved
+            now = time.monotonic() - t0
+            self._drop_expired(now)
+            if not any(self.queues.values()):
+                if drain:
+                    break
+                self.stats["idle_sleeps"] += 1
+                time.sleep(self.idle_sleep_s)
+                continue
+            group = groups[gi % len(groups)]
+            nxt = groups[(gi + 1) % len(groups)]
+            gi += 1
+            reqs = []
+            for iid in group:
+                q = self.queues[iid]
+                while q:
+                    reqs.append(q.popleft())
+            if not reqs:
+                empty_streak += 1
+                if empty_streak >= len(groups):
+                    self.stats["idle_sleeps"] += 1
+                    time.sleep(self.idle_sleep_s)
+                    empty_streak = 0
+                continue
+            empty_streak = 0
+            max_batch = min(len(reqs), self.buckets[-1])
+            loaded = sum(self.scheduler.load(iid, max_batch)["loaded_bytes"]
+                         for iid in group)
+            self.dma.wait(tuple(group), loaded)
+            # prefetch the NEXT group's incremental bytes; the transfer's
+            # clock runs while this group computes (§3.2 pipelining, made
+            # real).  Sized by peek (pre-eviction estimate).
+            if tuple(nxt) != tuple(group):
+                pre = sum(self.scheduler.peek_load_bytes(iid) for iid in nxt)
+                self.dma.start(tuple(nxt), pre)
+            self._run_group(group, reqs, t0)
+        new = self.completions[done_before:]
+        met = sum(1 for c in new if c.met_sla)
+        skipped = self.skipped - skipped_before
+        total = len(new) + skipped
+        lookups = self.stats["param_lookups"] - stats_before["param_lookups"]
+        rebuilds = sum(self.store.materializations.get(m, 0) - mat_before.get(m, 0)
+                       for m in self.store.materializations)
+        last = max((c.finished_s for c in new), default=0.0)
+        return {
+            "completed": len(new),
+            "met_sla": met,
+            "skipped": skipped,
+            "sla_fraction": met / max(total, 1),
+            "elapsed_s": last,
+            "requests_per_s": len(new) / max(last, 1e-9),
+            "cache_hit_rate": 1.0 - rebuilds / max(lookups, 1),
+            "materializations": rebuilds,
+            "binding_epochs": self.store.epoch - epoch_start + 1,
+            "dma_stall_s": self.dma.stall_s,
+            "dma_hidden_s": self.dma.hidden_s,
+            **{k: v - stats_before[k] for k, v in self.stats.items()},
         }

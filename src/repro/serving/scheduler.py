@@ -141,6 +141,31 @@ class Scheduler:
     def run_time_ms(self, instance_id: str, batch: int) -> float:
         return self.costs[self.instances[instance_id].model_id].run_time(batch)
 
+    # -- prefetch support -------------------------------------------------------
+
+    def next_after(self, instance_id: str) -> Instance:
+        """The instance visited after ``instance_id`` in round-robin order —
+        the prefetch target: its incremental load can start while
+        ``instance_id`` is still computing (§3.2 pipelining)."""
+        ids = [i.instance_id for i in self.order]
+        return self.order[(ids.index(instance_id) + 1) % len(self.order)]
+
+    def peek_load_bytes(self, instance_id: str) -> int:
+        """Incremental bytes a load of ``instance_id`` would transfer right
+        now, WITHOUT mutating residency/LRU state.  Used to size an async
+        prefetch; the authoritative accounting still happens in :meth:`load`
+        when the instance actually runs."""
+        inst = self.instances[instance_id]
+        return sum(inst.key_bytes[k] for k in inst.keys
+                   if k not in self.mem.resident)
+
+    @staticmethod
+    def overlapped_load_ms(load_ms: float, hidden_ms: float) -> float:
+        """Visible stall of a load that overlaps ``hidden_ms`` of compute —
+        the single pipelining rule shared by the discrete-event simulator and
+        the real engine's async-DMA prefetch (policy parity)."""
+        return max(load_ms - hidden_ms, 0.0)
+
     # -- static accounting ------------------------------------------------------
 
     def cycle_swap_bytes(self, batches: dict) -> dict:

@@ -85,7 +85,7 @@ def simulate(
         r = scheduler.load(inst_id, b)
         load_ms = r["load_ms"]
         swap_hidden = max(prev_exec_end - t, 0.0)
-        effective_load = max(load_ms - swap_hidden, 0.0)
+        effective_load = Scheduler.overlapped_load_ms(load_ms, swap_hidden)
         swap_total += load_ms
         t += effective_load
 

@@ -13,10 +13,11 @@ live weights, so workload-scale experiments don't allocate memory.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional
 
 from repro.configs.vision_workloads import WORKLOADS
-from repro.core.groups import enumerate_groups
+from repro.core.groups import enumerate_groups, stable_group_id
 from repro.core.signatures import records_from_spec
 from repro.models.vision import get_spec
 from repro.serving.costs import costs_for
@@ -49,7 +50,7 @@ def build_instances(
         groups = shared_groups or []
     if groups:
         for g in groups:
-            base = f"shared:{abs(hash(g.signature)) % 10**12}"
+            base = stable_group_id(g.signature)
             for ci, col in enumerate(g.columns()):
                 if len(col) < 2:
                     continue
@@ -68,6 +69,63 @@ def build_instances(
             Instance(iid, mid, frozenset(keys.keys()), keys, accuracy=acc)
         )
     return instances
+
+
+# -- request micro-batching ---------------------------------------------------
+#
+# The serving engine drains queues into deadline-sorted micro-batches instead
+# of one forward per request.  Batches are padded up to a fixed bucket ladder
+# so jit sees a bounded set of batch shapes (one trace per bucket, not one per
+# queue length).
+
+
+@dataclasses.dataclass
+class Microbatch:
+    requests: list  # deadline-sorted slice of the drained queue
+    bucket: int  # padded batch size actually executed (>= len(requests))
+
+    def __len__(self) -> int:
+        return len(self.requests)
+
+
+def bucket_for(n: int, buckets: tuple = (1, 2, 4, 8)) -> int:
+    """Smallest bucket >= n (the largest bucket caps the batch size)."""
+    for b in buckets:
+        if n <= b:
+            return b
+    return buckets[-1]
+
+
+def deadline_microbatches(
+    requests: list, buckets: tuple = (1, 2, 4, 8)
+) -> list:
+    """Chunk drained requests into EDF micro-batches: sort by deadline
+    (earliest first, ties broken by arrival) and cut greedy chunks of at most
+    ``max(buckets)`` requests, each padded to its bucket.  Earliest-deadline
+    frames therefore ride the first batch out — SLA fraction is no worse than
+    FIFO draining at equal throughput."""
+    if not requests:
+        return []
+    ordered = sorted(requests, key=lambda r: (r.deadline_s, r.arrival_s))
+    cap = buckets[-1]
+    out = []
+    for i in range(0, len(ordered), cap):
+        chunk = ordered[i : i + cap]
+        out.append(Microbatch(chunk, bucket_for(len(chunk), buckets)))
+    return out
+
+
+def pad_stack(payloads: list, bucket: int):
+    """Stack per-request payloads (each an unbatched or batch-1 array) into
+    one (bucket, ...) batch, repeating the last payload as padding.  Returns
+    the batch and the number of real rows."""
+    import jax.numpy as jnp
+
+    rows = [p[0] if getattr(p, "ndim", 0) >= 1 and p.shape[0] == 1 else p
+            for p in payloads]
+    n = len(rows)
+    rows = rows + [rows[-1]] * (bucket - n)
+    return jnp.stack(rows, axis=0), n
 
 
 def workload_costs(name: str, workloads: Optional[dict] = None) -> dict:

@@ -1,0 +1,351 @@
+"""Merge-aware serving engine: cached materialisation epochs, stable group
+ids, unmerge GC, shared-prefix batched execution, micro-batching, and async
+DMA prefetch."""
+import os
+import subprocess
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ParamStore, enumerate_groups, records_from_params
+from repro.core.groups import stable_group_id
+from repro.models import vision as VI
+from repro.serving.costs import costs_for
+from repro.serving.executor import (
+    AsyncDMA, EdgeExecutor, MergeAwareEngine, ModelProgram, Request,
+)
+from repro.serving.scheduler import Instance, Scheduler
+from repro.serving.workload import (
+    bucket_for, deadline_microbatches, pad_stack,
+)
+from repro.utils.tree import flatten_paths
+
+CFG = VI.SmallCNNConfig(task="classification", n_classes=4, depth=1,
+                        width=8, n_stages=2)
+
+
+def _mk_params(seed):
+    return VI.init_small_cnn(CFG, jax.random.PRNGKey(seed))
+
+
+def _trunk_groups(store, params_by_mid):
+    recs = sum((records_from_params(p, m) for m, p in params_by_mid.items()), [])
+    return [g for g in enumerate_groups(recs)
+            if not any(r.path.startswith("head/") for r in g.records)]
+
+
+def _mk_store(mids=("A", "B"), merge_trunk=True):
+    params = {m: _mk_params(i) for i, m in enumerate(mids)}
+    store = ParamStore.from_models(params)
+    groups = _trunk_groups(store, params)
+    if merge_trunk:
+        for g in groups:
+            store.merge_group(g)
+    return store, params, groups
+
+
+def _instances(store, mids):
+    return [Instance(m, "tiny-yolo", frozenset(store.keys_for(m)),
+                     {k: 1000 for k in store.keys_for(m)}) for m in mids]
+
+
+def _programs(mids, share=True):
+    paths = VI.small_cnn_prefix_paths(CFG, _mk_params(0))
+    return [
+        ModelProgram(
+            m, m,
+            forward=lambda p, x: VI.small_cnn_forward(CFG, p, x),
+            prefix=(lambda p, x: VI.small_cnn_features(CFG, p, x)) if share else None,
+            suffix=(lambda p, f: VI.small_cnn_head(CFG, p, f)) if share else None,
+            prefix_paths=paths if share else None,
+        )
+        for m in mids
+    ]
+
+
+def _engine(store, mids, capacity=10**9, **kw):
+    return MergeAwareEngine(
+        store, _instances(store, mids), _programs(mids),
+        capacity_bytes=capacity, costs={"tiny-yolo": costs_for("tiny-yolo")},
+        **kw,
+    )
+
+
+# ---------------------------------------------------------------------------
+# stable group ids (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_stable_group_id_is_deterministic_across_processes():
+    sig = ("conv", (3, 3, 8, 8), "float32")
+    here = stable_group_id(sig)
+    env = dict(os.environ)
+    env["PYTHONHASHSEED"] = "271828"  # would change hash()-derived ids
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-c",
+         "from repro.core.groups import stable_group_id;"
+         f"print(stable_group_id({sig!r}))"],
+        env=env, capture_output=True, text=True, check=True,
+    )
+    assert out.stdout.strip() == here
+    assert here.startswith("shared:")
+
+
+def test_merge_group_uses_stable_ids():
+    s1, p1, g1 = _mk_store()
+    s2, p2, g2 = _mk_store()
+    # two independent stores over the same models bind identical key names
+    assert s1.bindings == s2.bindings
+
+
+def test_same_signature_groups_do_not_alias():
+    """Two disjoint pairs with identical architecture: pair-local merges must
+    create distinct shared buffers, not rebind pair 1 onto pair 2."""
+    params = {m: _mk_params(i) for i, m in enumerate("ABCD")}
+    store = ParamStore.from_models(params)
+    for pair in (("A", "B"), ("C", "D")):
+        sub = {m: params[m] for m in pair}
+        for g in _trunk_groups(store, sub):
+            store.merge_group(g)
+    stem_a = store.bindings["A"]["stem/w"]
+    stem_c = store.bindings["C"]["stem/w"]
+    assert store.bindings["B"]["stem/w"] == stem_a
+    assert store.bindings["D"]["stem/w"] == stem_c
+    assert stem_a != stem_c
+    assert store.buffers[stem_a] is not store.buffers[stem_c]
+
+
+# ---------------------------------------------------------------------------
+# unmerge GC (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_unmerge_collects_orphaned_shared_buffers():
+    store, params, groups = _mk_store(merge_trunk=False)
+    base = store.resident_bytes()
+    n_buffers = len(store.buffers)
+    for g in groups:
+        store.merge_group(g)
+    assert any(k.startswith("shared:") for k in store.buffers)
+    for g in groups:
+        store.unmerge(g)
+    # every shared buffer is orphaned after unmerge and must be collected
+    assert not any(k.startswith("shared:") for k in store.buffers)
+    assert len(store.buffers) == n_buffers
+    assert store.resident_bytes() == base
+
+
+# ---------------------------------------------------------------------------
+# cached materialisation (tentpole part 1)
+# ---------------------------------------------------------------------------
+
+
+def test_materialize_cached_same_object_until_epoch_moves():
+    store, params, groups = _mk_store(merge_trunk=False)
+    t1 = store.materialize_cached("A")
+    assert store.materialize_cached("A") is t1
+    assert store.materializations == {"A": 1}
+
+    epoch = store.epoch
+    store.merge_group(groups[0])
+    assert store.epoch > epoch
+    t2 = store.materialize_cached("A")
+    assert t2 is not t1
+    assert store.materializations == {"A": 2}
+
+    store.unmerge(groups[0])
+    t3 = store.materialize_cached("A")
+    assert t3 is not t2
+    assert store.materializations == {"A": 3}
+
+    # buffer-value commits (post-retraining) also invalidate
+    store.update_buffers({store.bindings["A"]["stem/w"]:
+                          jnp.zeros_like(t3["stem"]["w"])})
+    t4 = store.materialize_cached("A")
+    assert t4 is not t3
+    assert float(jnp.sum(jnp.abs(t4["stem"]["w"]))) == 0.0
+
+
+def test_cache_invalidation_merge_serve_unmerge_serve_under_jit():
+    """merge -> serve -> unmerge -> serve must observe each rebind through
+    the cache, including when the forward is jitted (retraces/donated trace
+    reuse must see the NEW buffers, never a stale pytree)."""
+    store, params, groups = _mk_store(merge_trunk=False)
+    g = groups[0]
+    x = jax.random.normal(jax.random.PRNGKey(9), (1, 32, 32, 3))
+    fwd = jax.jit(lambda p, xx: VI.small_cnn_forward(CFG, p, xx))
+
+    out_b0 = np.asarray(fwd(store.materialize_cached("B"), x))
+    store.merge_group(g)  # donor is A: B's merged layer now runs A's weights
+    out_b1 = np.asarray(fwd(store.materialize_cached("B"), x))
+    assert not np.allclose(out_b0, out_b1)
+
+    store.unmerge(g)
+    out_b2 = np.asarray(fwd(store.materialize_cached("B"), x))
+    np.testing.assert_allclose(out_b1, out_b2, rtol=1e-6)  # weights copied out
+
+    # now divergent training of the private copy must be visible immediately
+    key = store.bindings["B"][g.records[0].path]
+    store.update_buffers({key: jnp.zeros_like(store.buffers[key])})
+    out_b3 = np.asarray(fwd(store.materialize_cached("B"), x))
+    assert not np.allclose(out_b2, out_b3)
+    # and A is isolated again
+    out_a = np.asarray(fwd(store.materialize_cached("A"), x))
+    assert not np.allclose(out_a, out_b3)
+
+
+# ---------------------------------------------------------------------------
+# micro-batching helpers
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_for_ladder():
+    assert [bucket_for(n) for n in (1, 2, 3, 5, 8, 99)] == [1, 2, 4, 8, 8, 8]
+
+
+def test_deadline_microbatches_sorts_and_buckets():
+    reqs = [Request("A", None, arrival_s=i * 0.01, deadline_s=1.0 - i * 0.1)
+            for i in range(6)]
+    mbs = deadline_microbatches(reqs, buckets=(1, 2, 4))
+    assert [len(m) for m in mbs] == [4, 2]
+    assert [m.bucket for m in mbs] == [4, 2]
+    deadlines = [r.deadline_s for m in mbs for r in m.requests]
+    assert deadlines == sorted(deadlines)  # EDF order across batches
+
+
+def test_pad_stack_repeats_last_row():
+    rows = [jnp.ones((1, 3)) * i for i in range(3)]
+    batch, n = pad_stack(rows, 4)
+    assert batch.shape == (4, 3)
+    assert n == 3
+    np.testing.assert_allclose(np.asarray(batch[3]), np.asarray(batch[2]))
+
+
+# ---------------------------------------------------------------------------
+# shared-prefix grouping + batched execution (tentpole part 2)
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_groups_follow_binding_epochs():
+    mids = ("A", "B", "C")
+    params = {m: _mk_params(i) for i, m in enumerate(mids)}
+    store = ParamStore.from_models(params)
+    pair = {m: params[m] for m in ("A", "B")}
+    groups = _trunk_groups(store, pair)
+    for g in groups:
+        store.merge_group(g)  # A+B share a trunk; C stays private
+    eng = _engine(store, mids)
+    assert eng.prefix_groups() == [["A", "B"], ["C"]]
+    for g in groups:
+        store.unmerge(g)
+    # epoch moved: the plan splits without rebuilding the engine
+    assert eng.prefix_groups() == [["A"], ["B"], ["C"]]
+
+
+def test_engine_outputs_match_per_request_forward():
+    store, params, _ = _mk_store()
+    eng = _engine(store, ("A", "B"), buckets=(1, 2, 4))
+    imgs = [jax.random.normal(jax.random.PRNGKey(i), (1, 32, 32, 3))
+            for i in range(7)]  # odd count: exercises padded partial buckets
+    for i, im in enumerate(imgs):
+        eng.submit(Request("A" if i % 2 == 0 else "B", im, 0.0, 30.0))
+    stats = eng.serve(horizon_s=30.0, warmup=imgs[0])
+    assert stats["completed"] == 7
+    assert stats["prefix_runs"] >= 1 and stats["forward_runs"] == 0
+    for c in eng.completions:
+        mid = c.request.instance_id
+        direct = VI.small_cnn_forward(CFG, store.materialize(mid),
+                                      c.request.payload)
+        np.testing.assert_allclose(np.asarray(c.result), np.asarray(direct[0]),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_engine_cache_rebinds_between_serves():
+    store, params, groups = _mk_store()
+    eng = _engine(store, ("A", "B"))
+    img = jax.random.normal(jax.random.PRNGKey(3), (1, 32, 32, 3))
+    for i in range(8):
+        eng.submit(Request("A" if i % 2 else "B", img, 0.0, 30.0))
+    s1 = eng.serve(horizon_s=30.0, warmup=img)
+    assert s1["cache_hit_rate"] == 1.0
+    assert s1["materializations"] <= s1["binding_epochs"]
+    out_merged = np.asarray(eng.completions[-1].result)
+
+    for g in groups:
+        store.unmerge(g)
+    key = store.bindings["B"]["stem/w"]
+    store.update_buffers({key: jnp.zeros_like(store.buffers[key])})
+    eng.completions.clear()
+    for _ in range(4):
+        eng.submit(Request("B", img, 0.0, 30.0))
+    s2 = eng.serve(horizon_s=30.0)
+    assert s2["forward_runs"] >= 1  # plan degraded to singleton whole-forward
+    assert s2["completed"] == 4  # stats are per-call, not cumulative
+    assert s2["cache_hit_rate"] < 1.0  # the rebind forced real rebuilds
+    out_after = np.asarray(eng.completions[-1].result)
+    assert not np.allclose(out_merged, out_after)  # rebind observed, no stale tree
+    # rebuild count stays bounded by epochs, not by request count
+    assert all(n <= store.epoch for n in store.materializations.values())
+
+
+# ---------------------------------------------------------------------------
+# async DMA prefetch + scheduler peek (tentpole part 3)
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_peek_does_not_mutate():
+    costs = {"tiny-yolo": costs_for("tiny-yolo")}
+    a = Instance("a", "tiny-yolo", frozenset({"k1"}), {"k1": 10_000_000})
+    b = Instance("b", "tiny-yolo", frozenset({"k2"}), {"k2": 20_000_000})
+    sched = Scheduler([a, b], capacity_bytes=10**9, costs=costs)
+    assert sched.peek_load_bytes("a") == 10_000_000
+    assert sched.peek_load_bytes("a") == 10_000_000  # unchanged: no admission
+    assert sched.mem.used_bytes == 0
+    sched.load("a", 1)
+    assert sched.peek_load_bytes("a") == 0
+    nxt = sched.next_after(sched.order[0].instance_id)
+    assert nxt.instance_id == sched.order[1].instance_id
+    assert sched.next_after(sched.order[-1].instance_id) is sched.order[0]
+
+
+def test_async_dma_overlap_hides_prefetched_load():
+    dma = AsyncDMA(gbps=0.001, simulate=True)  # 1 MB -> 1 s at this bw
+    nbytes = 40_000  # 40 ms transfer
+    dma.start("g2", nbytes)
+    time.sleep(0.06)  # "compute" of the current group, longer than the DMA
+    t0 = time.monotonic()
+    stall = dma.wait("g2", nbytes)
+    assert time.monotonic() - t0 < 0.02
+    assert stall == 0.0
+    assert dma.hidden_s >= 0.03
+    # cold wait (never prefetched) pays the full transfer
+    t0 = time.monotonic()
+    stall = dma.wait("g3", nbytes)
+    assert stall > 0.03
+    assert time.monotonic() - t0 >= 0.03
+
+
+def test_overlapped_load_ms_parity_rule():
+    assert Scheduler.overlapped_load_ms(10.0, 4.0) == 6.0
+    assert Scheduler.overlapped_load_ms(3.0, 4.0) == 0.0
+
+
+def test_executor_idle_does_not_busy_spin_or_hang():
+    store, params, _ = _mk_store()
+    ex = EdgeExecutor(
+        store, _instances(store, ("A", "B")),
+        {m: (lambda p, x: VI.small_cnn_forward(CFG, p, x)) for m in ("A", "B")},
+        capacity_bytes=10**9, costs={"tiny-yolo": costs_for("tiny-yolo")},
+    )
+    stats = ex.serve(horizon_s=0.05)  # empty queues: must return, not spin hot
+    assert stats["completed"] == 0
+
+    eng = _engine(store, ("A", "B"))
+    stats = eng.serve(horizon_s=0.05, drain=False)
+    assert stats["completed"] == 0
+    assert stats["idle_sleeps"] > 0
