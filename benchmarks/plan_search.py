@@ -1,0 +1,197 @@
+"""Plan-search efficiency: similarity-prefiltered staged planner vs the seed
+memory-forward planner on a multi-model vision workload.
+
+    PYTHONPATH=src python benchmarks/plan_search.py [--json]
+
+Workload: five small CNNs with mixed provenance — (A, B) and (D, E) are
+common-provenance pairs (near-identical weights, the paper's same-pipeline
+case), C is an independently initialised outlier with identical
+architecture.  Ground-truth mergeability is *functional coherence*: a shared
+column survives joint retraining iff its members' calibration-batch
+activations are mutually similar (linear CKA, arXiv 2410.11233).  The
+surrogate trainer enforces exactly that criterion and reports incoherent
+models as early failures, so each planner pays one "retraining attempt" per
+``train`` call and the benchmark isolates SEARCH cost:
+
+  * memory-forward (seed §5.3) discovers incoherent members by *paying* a
+    failed retraining attempt, then AIMD-shrinking;
+  * the similarity prefilter runs the same calibration batches through each
+    model up front and prunes/refines candidates *before* any retraining.
+
+Both planners run with the simulator-in-the-loop objective (commits are
+scored by ``simulate(...).overall_accuracy`` at Table-1-scale byte
+accounting).  Records retrain attempts, wall time, fraction_saved and the
+simulated overall accuracy into ``BENCH_plan.json``, and verifies the
+MergePlan artifact: exported → JSON → fresh store ``apply_plan`` must
+reproduce every model's forward outputs bitwise.
+"""
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+
+MODEL_TARGET_GB = 0.242  # Table 1: yolo load size — what each model "weighs"
+MIN_SIMILARITY = 0.5
+ORDER = ("A", "B", "C", "D", "E")
+
+
+def _cfg():
+    from repro.models import vision as VI
+
+    return VI.SmallCNNConfig(task="classification", n_classes=4, depth=1,
+                             width=8, n_stages=2)
+
+
+def _perturb(params, seed, scale=0.01):
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    ks = jax.random.split(jax.random.PRNGKey(seed), len(leaves))
+    return jax.tree_util.tree_unflatten(
+        treedef, [l + scale * jax.random.normal(k, l.shape)
+                  for l, k in zip(leaves, ks)])
+
+
+def _zoo(cfg):
+    from repro.models import vision as VI
+
+    a = VI.init_small_cnn(cfg, jax.random.PRNGKey(0))
+    d = VI.init_small_cnn(cfg, jax.random.PRNGKey(5))
+    return {
+        "A": a, "B": _perturb(a, 1),
+        "C": VI.init_small_cnn(cfg, jax.random.PRNGKey(42)),
+        "D": d, "E": _perturb(d, 2),
+    }
+
+
+def _activations(cfg, zoo):
+    from repro.models import vision as VI
+
+    cal = jax.random.normal(jax.random.PRNGKey(7), (32, 32, 32, 3))
+    return {m: VI.small_cnn_layer_activations(cfg, p, cal) for m, p in zoo.items()}
+
+
+def _build(scorer_name, activations):
+    """One planner run; returns (PlanResult, trainer_calls, wall_s, store)."""
+    from repro.core import (
+        MemoryForwardScorer, ParamStore, RegisteredModel,
+        RepresentationSimilarityScorer, StagedPlanner, records_from_params,
+    )
+    from repro.core.policy import CoherenceSurrogateTrainer
+    from repro.serving.costs import costs_for
+    from repro.serving.simulator import effective_accuracy_objective
+    from repro.serving.workload import instances_from_store
+
+    cfg = _cfg()
+    zoo = _zoo(cfg)
+    store = ParamStore.from_models(zoo)
+    recs = sum((records_from_params(p, m) for m, p in zoo.items()), [])
+    regs = [RegisteredModel(m, lambda p, b: 0.0, lambda p, b: 1.0,
+                            lambda e: [], None, 0.9, 1.0) for m in zoo]
+    scorer = (MemoryForwardScorer() if scorer_name == "memory-forward"
+              else RepresentationSimilarityScorer(activations, MIN_SIMILARITY))
+
+    # Table-1-scale byte accounting for the simulator objective: each model
+    # "weighs" the paper's yolo footprint; capacity fits ~2 models, so the
+    # plan's sharing directly moves swap stalls and effective accuracy.
+    scale = MODEL_TARGET_GB * 1e9 / store.model_bytes("A")
+    kb_fn = lambda k, nb: max(int(nb * scale), 1)  # noqa: E731
+    costs = {"tiny-yolo": costs_for("tiny-yolo")}
+    objective = effective_accuracy_objective(
+        lambda st, groups: instances_from_store(st, "tiny-yolo",
+                                                key_bytes_fn=kb_fn),
+        costs, capacity_bytes=int(2.2 * MODEL_TARGET_GB * 1e9),
+    )
+
+    trainer = CoherenceSurrogateTrainer(activations, MIN_SIMILARITY)
+    planner = StagedPlanner(store, regs, recs, trainer, scorer=scorer,
+                            objective=objective)
+    t0 = time.monotonic()
+    res = planner.run()
+    return res, trainer.calls, time.monotonic() - t0, store, objective
+
+
+def _roundtrip_bitwise(res, store) -> dict:
+    """Export → JSON → fresh store apply_plan: forwards must match bitwise."""
+    from repro.core import MergePlan, ParamStore
+    from repro.models import vision as VI
+
+    cfg = _cfg()
+    payload = res.plan.to_json()
+    plan = MergePlan.from_json(payload)
+    fresh = ParamStore.from_models(_zoo(cfg))
+    epoch0 = fresh.epoch
+    fresh.apply_plan(plan)
+    frame = jax.random.normal(jax.random.PRNGKey(3), (2, 32, 32, 3))
+    bitwise = all(
+        np.array_equal(
+            np.asarray(VI.small_cnn_forward(cfg, store.materialize(m), frame)),
+            np.asarray(VI.small_cnn_forward(cfg, fresh.materialize(m), frame)),
+        )
+        for m in ORDER
+    )
+    return {
+        "plan_bytes": len(payload),
+        "plan_groups": len(plan.groups),
+        "bindings_equal": fresh.bindings == store.bindings,
+        "single_epoch_bump": fresh.epoch == epoch0 + 1,
+        "outputs_bitwise_identical": bitwise,
+    }
+
+
+def run(quiet: bool = False) -> dict:
+    cfg = _cfg()
+    activations = _activations(cfg, _zoo(cfg))
+
+    mem, mem_calls, mem_wall, mem_store, objective = _build(
+        "memory-forward", activations)
+    sim, sim_calls, sim_wall, sim_store, _ = _build(
+        "similarity", activations)
+    baseline_acc = objective(mem_store.__class__.from_models(_zoo(cfg)), [])
+    mem_acc = objective(mem_store, [])
+    sim_acc = objective(sim_store, [])
+    rt = _roundtrip_bitwise(sim, sim_store)
+
+    rows = [
+        {"planner": "memory-forward", "retrain_attempts": mem_calls,
+         "committed": mem.committed, "discarded": mem.discarded,
+         "pruned_prefilter": mem.pruned,
+         "fraction_saved": mem.fraction_saved,
+         "wall_s": mem_wall, "sim_overall_accuracy": mem_acc},
+        {"planner": "similarity-prefilter", "retrain_attempts": sim_calls,
+         "committed": sim.committed, "discarded": sim.discarded,
+         "pruned_prefilter": sim.pruned,
+         "fraction_saved": sim.fraction_saved,
+         "wall_s": sim_wall, "sim_overall_accuracy": sim_acc},
+    ]
+    derived = {
+        "attempts_strictly_fewer": sim_calls < mem_calls,
+        "fraction_saved_no_worse": sim.fraction_saved >= mem.fraction_saved - 1e-12,
+        "attempts_saved": mem_calls - sim_calls,
+        "sim_overall_accuracy_unmerged": baseline_acc,
+        "accuracy_no_worse": sim_acc >= mem_acc - 1e-9,
+        **{f"roundtrip_{k}": v for k, v in rt.items()},
+    }
+    return emit("BENCH_plan", rows, derived, quiet=quiet)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", action="store_true",
+                    help="print ONLY the artifact JSON to stdout (pipeable); "
+                         "the artifact is always written either way")
+    args = ap.parse_args(argv)
+    out = run(quiet=args.json)
+    if args.json:
+        print(json.dumps(out, indent=2, default=str))
+    ok = (out["derived"]["attempts_strictly_fewer"]
+          and out["derived"]["fraction_saved_no_worse"]
+          and out["derived"]["roundtrip_outputs_bitwise_identical"])
+    if not ok:
+        raise SystemExit("plan_search acceptance criteria not met")
+
+
+if __name__ == "__main__":
+    main()

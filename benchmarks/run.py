@@ -18,7 +18,7 @@ def main(argv=None):
     from benchmarks import (
         ablation_ordering, fig3_nexus, fig4_commonality, fig5_potential,
         fig9_powerlaw, fig10_e2e, fig11_savings, fig12_baselines,
-        fig13_incremental, fig14_bandwidth, lm_merging, roofline,
+        fig13_incremental, fig14_bandwidth, lm_merging, plan_search, roofline,
         serve_throughput, table1_memory, table2_times, table3_sweeps,
     )
 
@@ -36,6 +36,7 @@ def main(argv=None):
         ("fig14_bandwidth", fig14_bandwidth),
         ("table3_sweeps", table3_sweeps),
         ("serve_throughput", serve_throughput),
+        ("plan_search", plan_search),
         ("lm_merging", lm_merging),
         ("ablation_ordering", ablation_ordering),
         ("roofline", roofline),

@@ -8,10 +8,17 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export REPRO_KERNEL_MODE=ref
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
-python -m pytest -x -q
+# fast lane first: tier-1 feedback without the retraining-heavy slow tests,
+# then the slow remainder so the full suite still gates the build
+python -m pytest -x -q -m "not slow"
+python -m pytest -q -m "slow"
 
 # serving engine vs seed path; fails loudly if the artifact can't be built
-python benchmarks/serve_throughput.py --json --requests 240
+# (-m so the `benchmarks` package resolves from the repo root)
+python -m benchmarks.serve_throughput --json --requests 240
+# staged-planner search: similarity prefilter vs memory-forward + plan round-trip
+python -m benchmarks.plan_search --json
 
 test -f artifacts/benchmarks/BENCH_serve.json
+test -f artifacts/benchmarks/BENCH_plan.json
 echo "CI OK"

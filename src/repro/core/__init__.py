@@ -1,10 +1,19 @@
 """GEMEL's contribution: model merging for memory-constrained multi-model
 inference — signatures, layer groups, the ParamStore weight-unification
-substrate, the incremental AIMD planner, joint retraining, validation and
-drift tracking."""
+substrate, the pluggable staged merge planner (policy.py), joint retraining,
+validation and drift tracking."""
 from repro.core.groups import LayerGroup, enumerate_groups, potential_savings
 from repro.core.merging import MergeResult, MergeTrainer
-from repro.core.planner import IncrementalMerger, MergeEvent, PlanResult
+from repro.core.planner import IncrementalMerger
+from repro.core.policy import (
+    CandidateScorer,
+    MemoryForwardScorer,
+    MergeEvent,
+    MergePlan,
+    PlanResult,
+    RepresentationSimilarityScorer,
+    StagedPlanner,
+)
 from repro.core.signatures import (
     LayerRecord,
     records_from_params,
@@ -15,9 +24,10 @@ from repro.core.store import ParamStore
 from repro.core.validation import RegisteredModel, meets_targets, validate
 
 __all__ = [
-    "LayerGroup", "LayerRecord", "ParamStore", "RegisteredModel",
-    "IncrementalMerger", "MergeEvent", "MergeResult", "MergeTrainer",
-    "PlanResult", "enumerate_groups", "potential_savings",
-    "records_from_params", "records_from_spec", "signature_match_fraction",
-    "meets_targets", "validate",
+    "CandidateScorer", "LayerGroup", "LayerRecord", "MemoryForwardScorer",
+    "ParamStore", "RegisteredModel", "RepresentationSimilarityScorer",
+    "IncrementalMerger", "MergeEvent", "MergePlan", "MergeResult",
+    "MergeTrainer", "PlanResult", "StagedPlanner", "enumerate_groups",
+    "potential_savings", "records_from_params", "records_from_spec",
+    "signature_match_fraction", "meets_targets", "validate",
 ]

@@ -33,7 +33,9 @@ class DriftMonitor:
         checked, breached = {}, set()
         for mid, batch in sampled_batches.items():
             m = self.models[mid]
-            merged_params = self.store.materialize(mid)
+            # read-only check on the serve path's cached pytree: drift checks
+            # must neither bump binding epochs nor force a re-materialisation
+            merged_params = self.store.materialize_cached(mid)
             acc = float(m.accuracy_fn(merged_params, batch))
             checked[mid] = acc
             if acc < m.absolute_target:

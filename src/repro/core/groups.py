@@ -29,6 +29,22 @@ def stable_group_id(signature: tuple) -> str:
     return f"shared:{digest}"
 
 
+def disambiguate_base(base: str, in_use) -> str:
+    """Repeat merges of the same signature (e.g. two disjoint model pairs
+    each sharing their own copy of one architecture) must not alias onto one
+    buffer: append ``~n`` until no existing key starts with the base.
+    ``in_use(prefix)`` reports whether any existing key starts with
+    ``prefix``.  Shared by ``ParamStore.merge_group`` and
+    ``MergePlan.from_groups`` so live stores and descriptor-scale plans
+    agree on key names."""
+    if in_use(base + ":"):
+        n = 1
+        while in_use(f"{base}~{n}:"):
+            n += 1
+        base = f"{base}~{n}"
+    return base
+
+
 @dataclasses.dataclass
 class LayerGroup:
     signature: tuple

@@ -1,152 +1,33 @@
-"""Incremental AIMD merging planner (§5.3).
+"""Incremental AIMD merging planner (§5.3) — compatibility surface.
 
-Process:
-  1. enumerate layer groups across the workload, sort memory-forward;
-  2. take the next group, attempt to share it across *all* appearances;
-  3. retrain jointly (merging.MergeTrainer or injected surrogate);
-  4. on success: commit (weights stay in the store), log savings, ship to
-     edge (event log records bandwidth), move to next group;
-  5. on failure: prune early-failed models if reported; otherwise halve the
-     group dropping the earliest-position appearances.  Retry while the
-     remainder's memory exceeds the next group's, else discard.  Retraining
-     always resumes from the last *successful* iteration's weights.
+The planning stack now lives in :mod:`repro.core.policy` as a staged,
+pluggable subsystem (enumerate -> score/prefilter -> attempt ->
+commit/rollback) with a ``CandidateScorer`` interface, an optional
+simulator-in-the-loop objective, injectable timing, and a serializable
+:class:`~repro.core.policy.MergePlan` output.
+
+:class:`IncrementalMerger` is the historical entry point: a
+:class:`~repro.core.policy.StagedPlanner` with the paper's memory-forward
+scorer by default.  Existing callers (tests, examples, benchmarks) keep
+working unchanged; new callers should parameterise ``scorer=`` /
+``objective=`` directly.
 
 The planner never touches accuracy guarantees itself — the trainer's
 validation is the gate (observation "violations only delay, never breach").
 """
 from __future__ import annotations
 
-import copy
-import dataclasses
-import time
-from typing import Callable, Optional
-
-from repro.core.groups import LayerGroup, enumerate_groups
-from repro.core.store import ParamStore
-from repro.core.validation import RegisteredModel
-from repro.utils.tree import leaf_bytes
-
-
-@dataclasses.dataclass
-class MergeEvent:
-    """One committed merging iteration — drives Figs 13 (savings over time)
-    and 14 (cloud→edge bandwidth: weights for all involved models ship)."""
-
-    time: float  # seconds since merging started
-    group_signature: tuple
-    n_appearances: int
-    saved_bytes: int  # incremental savings from this group
-    cumulative_saved: int
-    shipped_bytes: int  # weights shipped to the edge for this update
-    accuracies: dict
+from repro.core.policy import (  # noqa: F401  (re-exported compat names)
+    MemoryForwardScorer,
+    MergeEvent,
+    MergePlan,
+    PlanResult,
+    RepresentationSimilarityScorer,
+    StagedPlanner,
+)
 
 
-@dataclasses.dataclass
-class PlanResult:
-    store: ParamStore
-    events: list
-    attempted: int
-    committed: int
-    discarded: int
-    baseline_bytes: int
-    final_bytes: int
-
-    @property
-    def saved_bytes(self) -> int:
-        return self.baseline_bytes - self.final_bytes
-
-    @property
-    def fraction_saved(self) -> float:
-        return self.saved_bytes / max(self.baseline_bytes, 1)
-
-
-class IncrementalMerger:
-    def __init__(
-        self,
-        store: ParamStore,
-        models: list,  # list[RegisteredModel]
-        records: list,  # list[LayerRecord] for the workload
-        trainer=None,  # object with .train(store, models) -> MergeResult
-        time_budget_s: Optional[float] = None,
-        min_group_bytes: int = 1,
-        on_commit: Optional[Callable] = None,
-    ):
-        self.store = store
-        self.models = {m.model_id: m for m in models}
-        self.groups = enumerate_groups(records)
-        self.trainer = trainer
-        self.time_budget_s = time_budget_s
-        self.min_group_bytes = min_group_bytes
-        self.on_commit = on_commit
-
-    def _snapshot(self):
-        return dict(self.store.buffers), {
-            m: dict(b) for m, b in self.store.bindings.items()
-        }
-
-    def _restore(self, snap):
-        self.store.buffers, self.store.bindings = snap[0], snap[1]
-        self.store.bump_epoch()  # rollback rebinds: invalidate cached pytrees
-
-    def _involved(self, group: LayerGroup) -> list:
-        return [self.models[mid] for mid in sorted(group.models) if mid in self.models]
-
-    def run(self) -> PlanResult:
-        t0 = time.monotonic()
-        baseline = self.store.resident_bytes()
-        events: list = []
-        attempted = committed = discarded = 0
-        cumulative_saved = 0
-
-        queue = list(self.groups)
-        qi = 0
-        while qi < len(queue):
-            if self.time_budget_s is not None and time.monotonic() - t0 > self.time_budget_s:
-                break
-            group = queue[qi]
-            next_mem = queue[qi + 1].memory if qi + 1 < len(queue) else 0
-
-            while True:  # AIMD retry loop on this group
-                if len(group.records) < 2 or group.savings < self.min_group_bytes:
-                    discarded += 1
-                    break
-                attempted += 1
-                snap = self._snapshot()
-                before = self.store.resident_bytes()
-                self.store.merge_group(group)
-                result = self.trainer.train(self.store, self._involved(group))
-
-                if result.success:
-                    committed += 1
-                    after = self.store.resident_bytes()
-                    saved = before - after
-                    cumulative_saved += saved
-                    shipped = sum(
-                        self.store.model_bytes(mid) for mid in sorted(group.models)
-                    )
-                    ev = MergeEvent(
-                        time.monotonic() - t0, group.signature, len(group.records),
-                        saved, cumulative_saved, shipped, result.accuracies,
-                    )
-                    events.append(ev)
-                    if self.on_commit:
-                        self.on_commit(ev, self.store)
-                    break
-
-                # failure: roll back weights/bindings to last successful state
-                self._restore(snap)
-                if result.failed_models:
-                    group = group.without_models(result.failed_models)
-                else:
-                    group = group.drop_earliest_half()
-                # keep retrying only while the shrunken group still out-ranks
-                # the next group in the sorted list (§5.3)
-                if group.memory <= next_mem or len(group.records) < 2:
-                    discarded += 1
-                    break
-            qi += 1
-
-        return PlanResult(
-            self.store, events, attempted, committed, discarded,
-            baseline, self.store.resident_bytes(),
-        )
+class IncrementalMerger(StagedPlanner):
+    """Drop-in name for the seed planner: memory-forward order, full AIMD
+    retry loop, now returning a :class:`PlanResult` whose ``plan`` field is
+    the serializable MergePlan artifact."""

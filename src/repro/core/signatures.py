@@ -38,6 +38,33 @@ class LayerRecord:
         return (self.model_id, self.path)
 
 
+def signature_to_json(sig: Any) -> Any:
+    """Signatures are nested tuples of ints/strings; JSON has no tuple, so
+    encode recursively as lists and restore with :func:`signature_from_json`
+    (round-trip equality is what makes serialized MergePlans comparable)."""
+    if isinstance(sig, (tuple, list)):
+        return [signature_to_json(s) for s in sig]
+    return sig
+
+
+def signature_from_json(obj: Any) -> Any:
+    if isinstance(obj, list):
+        return tuple(signature_from_json(o) for o in obj)
+    return obj
+
+
+def record_to_json(r: "LayerRecord") -> dict:
+    """Appearance payload for a serialized plan (the signature is stored
+    once per group, not per record)."""
+    return {"model_id": r.model_id, "path": r.path,
+            "bytes": r.bytes, "position": r.position}
+
+
+def record_from_json(obj: dict, signature: tuple) -> "LayerRecord":
+    return LayerRecord(obj["model_id"], obj["path"], signature,
+                       obj["bytes"], obj["position"])
+
+
 def _kind_from_path(path: str) -> str:
     """Semantic layer kind = path with numeric segments stripped, so
     ``blocks/3/attn/wq`` and ``blocks/7/attn/wq`` share a kind while

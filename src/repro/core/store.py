@@ -31,7 +31,7 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
-from repro.core.groups import LayerGroup, stable_group_id
+from repro.core.groups import LayerGroup, disambiguate_base, stable_group_id
 from repro.utils.tree import flatten_paths, leaf_bytes, unflatten_paths
 
 
@@ -87,16 +87,10 @@ class ParamStore:
         internal duplicates stay distinct.  The first record of each column
         donates the initial weights (§5.3 'from a random model').  Returns
         the shared keys created."""
-        base = group_id or stable_group_id(group.signature)
-        # Disambiguate repeat merges of the same signature (e.g. two disjoint
-        # model pairs each sharing their own copy of one architecture): reusing
-        # the base id would silently rebind the first group's members onto the
-        # second group's buffers.  Deterministic given deterministic merge order.
-        if any(k.startswith(base + ":") for k in self.buffers):
-            n = 1
-            while any(k.startswith(f"{base}~{n}:") for k in self.buffers):
-                n += 1
-            base = f"{base}~{n}"
+        base = disambiguate_base(
+            group_id or stable_group_id(group.signature),
+            lambda p: any(k.startswith(p) for k in self.buffers),
+        )
         keys = []
         for ci, col in enumerate(group.columns()):
             if len(col) < 2:
@@ -137,6 +131,110 @@ class ParamStore:
         for k in list(self.buffers.keys()):
             if k not in live:
                 del self.buffers[k]
+
+    # -- plan round-trip (cloud -> edge) ---------------------------------------
+
+    def export_plan(self, groups: list, provenance: Optional[dict] = None,
+                    include_weights: bool = False):
+        """Build a serializable ``MergePlan`` from committed groups and the
+        store's *current* bindings: for each column actually bound to one
+        shared (non-private) key, record the key, the donor appearance
+        (``merge_group``'s rule: first record of the column) and the member
+        records.  Columns that no longer share (e.g. drift-reverted) are
+        dropped — the plan reflects store reality, not planner intent.
+        ``include_weights`` additionally carries the shared-buffer values so
+        a retrained configuration reproduces bitwise on a fresh store."""
+        from repro.core.policy import (
+            ColumnBinding, MergePlan, PlanGroup, encode_weights,
+        )
+
+        pgs = []
+        shared: list = []
+        for g in groups:
+            cols = []
+            for col in g.columns():
+                if len(col) < 2:
+                    continue
+                key = self.bindings[col[0].model_id][col[0].path]
+                if key == _private_key(col[0].model_id, col[0].path):
+                    continue  # not shared
+                if any(self.bindings[r.model_id][r.path] != key for r in col):
+                    continue  # column split since commit (revert/unmerge)
+                cols.append(ColumnBinding(key, (col[0].model_id, col[0].path),
+                                          tuple(col)))
+                shared.append(key)
+            if cols:
+                pgs.append(PlanGroup(g.signature, tuple(cols)))
+        weights = encode_weights(self, shared) if include_weights else None
+        return MergePlan(1, tuple(pgs), provenance or {}, weights)
+
+    def _plan_key_remap(self, plan) -> dict:
+        """Guard against the same aliasing ``merge_group`` disambiguates:
+        a plan key may already exist in this store bound to a *different*
+        group's members (e.g. two disjoint same-architecture pairs merged by
+        independent plans).  Remap such a plan group's keys to a fresh
+        ``~n`` base; keys whose current owners are all members of the plan's
+        own column stay as-is (re-apply / update of the same logical
+        buffer)."""
+        owners: dict = {}
+        for mid, binding in self.bindings.items():
+            for path, key in binding.items():
+                owners.setdefault(key, set()).add((mid, path))
+        taken = set(self.buffers)
+        remap: dict = {}
+        for pg in plan.groups:
+            members_by_key = {
+                c.key: {(r.model_id, r.path) for r in c.members}
+                for c in pg.columns
+            }
+            foreign = any(owners.get(k, set()) - members_by_key[k]
+                          for k in members_by_key)
+            if not foreign:
+                taken.update(members_by_key)
+                continue
+            base = next(iter(members_by_key)).rsplit(":", 1)[0]
+            new_base = disambiguate_base(
+                base, lambda p: any(k.startswith(p) for k in taken))
+            for k in members_by_key:
+                remap[k] = new_base + ":" + k.rsplit(":", 1)[1]
+                taken.add(remap[k])
+        return remap
+
+    def apply_plan(self, plan) -> list:
+        """Replay a ``MergePlan`` onto this store: stage every column rebind
+        (shared-key value = carried weights if the plan ships them, else the
+        recorded donor's current buffer), then commit atomically with ONE
+        epoch bump — a live engine re-plans exactly once, and in-flight
+        cached pytrees are invalidated in a single step.  Reproduces the
+        bindings ``merge_group`` would have built group-by-group; plan keys
+        colliding with a foreign group's shared buffers are remapped, never
+        silently aliased."""
+        from repro.core.policy import decode_weight
+
+        carried = plan.shared_weights or {}
+        remap = self._plan_key_remap(plan)
+        staged: list = []  # (key, value, [(model_id, path), ...])
+        for pg in plan.groups:
+            for col in pg.columns:
+                if col.key in carried:
+                    val = jax.numpy.asarray(decode_weight(carried[col.key]))
+                else:
+                    dm, dp = col.donor
+                    val = self.buffers[self.bindings[dm][dp]]
+                staged.append(
+                    (remap.get(col.key, col.key), val,
+                     [(r.model_id, r.path) for r in col.members])
+                )
+        keys = []
+        for key, val, members in staged:
+            self.buffers[key] = val
+            for mid, path in members:
+                self.bindings[mid][path] = key
+            keys.append(key)
+        self._gc_unreferenced()
+        if keys:
+            self.bump_epoch()
+        return keys
 
     # -- materialisation ------------------------------------------------------
 

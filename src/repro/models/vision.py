@@ -473,20 +473,34 @@ def _conv(x, p, stride=1):
     return y
 
 
-def small_cnn_features(cfg: SmallCNNConfig, params: dict, images: jax.Array) -> jax.Array:
+def small_cnn_features(cfg: SmallCNNConfig, params: dict, images: jax.Array,
+                       taps: Optional[dict] = None) -> jax.Array:
     """Trunk (stem + stages) only — the *prefix* the serving engine runs once
-    per micro-batch when the trunk's weights are merged across models."""
+    per micro-batch when the trunk's weights are merged across models.
+    ``taps``, when given, collects each layer's response keyed by param-path
+    prefix ("stem", "stage0/0/conv1", ...) — the calibration probes the
+    representation-similarity scorer consumes.  The tap is the value the
+    layer's params directly produce: post-relu for stem/conv1, the raw conv
+    output for conv2/proj (pre-residual, pre-relu) — what changes when THAT
+    layer's weights are swapped."""
     x = jax.nn.relu(_conv(images, params["stem"]))
+    if taps is not None:
+        taps["stem"] = x
     for s in range(cfg.n_stages):
         for d in range(cfg.depth):
             p = params[f"stage{s}"][str(d)]
             stride = 2 if d == 0 and s > 0 else 1
-            h = jax.nn.relu(_conv(x, p["conv1"], stride))
-            h = _conv(h, p["conv2"])
+            h1 = jax.nn.relu(_conv(x, p["conv1"], stride))
+            h = _conv(h1, p["conv2"])
+            if taps is not None:
+                taps[f"stage{s}/{d}/conv1"] = h1
+                taps[f"stage{s}/{d}/conv2"] = h
             if cfg.family == "resnet":
                 sc = x
                 if "proj" in p:
                     sc = _conv(sc, p["proj"], stride)
+                    if taps is not None:
+                        taps[f"stage{s}/{d}/proj"] = sc
                 elif stride != 1:
                     sc = sc[:, ::stride, ::stride, :]
                 h = h + sc
@@ -494,16 +508,35 @@ def small_cnn_features(cfg: SmallCNNConfig, params: dict, images: jax.Array) -> 
     return x
 
 
-def small_cnn_head(cfg: SmallCNNConfig, params: dict, feats: jax.Array) -> jax.Array:
+def small_cnn_head(cfg: SmallCNNConfig, params: dict, feats: jax.Array,
+                   taps: Optional[dict] = None) -> jax.Array:
     """Task head over trunk features — the private *suffix* fan-out."""
     if cfg.task == "classification":
         feat = jnp.mean(feats, axis=(1, 2))
         h = jax.nn.relu(feat @ params["head"]["fc1"]["w"] + params["head"]["fc1"]["b"])
-        return h @ params["head"]["fc2"]["w"] + params["head"]["fc2"]["b"]
+        out = h @ params["head"]["fc2"]["w"] + params["head"]["fc2"]["b"]
+        if taps is not None:
+            taps["head/fc1"], taps["head/fc2"] = h, out
+        return out
     h = jax.nn.relu(_conv(feats, params["head"]["conv"]))
     loc = _conv(h, params["head"]["loc"])
     conf = _conv(h, params["head"]["conf"])
+    if taps is not None:
+        taps["head/conv"], taps["head/loc"], taps["head/conf"] = h, loc, conf
     return jnp.concatenate([loc, conf], axis=-1)
+
+
+def small_cnn_layer_activations(cfg: SmallCNNConfig, params: dict,
+                                images: jax.Array) -> dict:
+    """Calibration-batch activations for every layer, keyed by param-path
+    prefix — feed ``{model_id: small_cnn_layer_activations(...)}`` to
+    :class:`repro.core.policy.RepresentationSimilarityScorer`.  Run the same
+    ``images`` through every candidate model so similarities compare
+    responses to identical inputs."""
+    taps: dict = {}
+    feats = small_cnn_features(cfg, params, images, taps=taps)
+    small_cnn_head(cfg, params, feats, taps=taps)
+    return {k: np.asarray(v) for k, v in taps.items()}
 
 
 def small_cnn_prefix_paths(cfg: SmallCNNConfig, params: dict) -> frozenset:

@@ -10,8 +10,10 @@ Two serve paths share the policy layer:
   cached materialisation (``ParamStore.materialize_cached``), shared-prefix
   batched execution (one stem run per micro-batch for models whose prefix
   weights are bound to the same store keys), deadline-sorted micro-batches,
-  and async DMA prefetch (the next group's incremental load overlaps the
-  current group's compute instead of stalling the accelerator).
+  async DMA prefetch (the next group's incremental load overlaps the
+  current group's compute instead of stalling the accelerator), and hot
+  MergePlan swap (``apply_plan``: a cloud-shipped plan lands on the live
+  engine with one epoch bump and no dropped requests — DESIGN.md P1).
 
 The DMA delay is modelled (the host has no PCIe-attached accelerator) but
 residency, eviction and merging-aware incremental loads are all real key-set
@@ -282,6 +284,48 @@ class MergeAwareEngine:
         self._groups_epoch = self.store.epoch
         return groups
 
+    # -- hot plan swap ---------------------------------------------------------
+
+    def apply_plan(self, plan, key_bytes_fn=None) -> dict:
+        """Apply a MergePlan on the LIVE engine (DESIGN.md P1 hot swap):
+
+        1. ``ParamStore.apply_plan`` stages every column rebind and commits
+           with a *single* epoch bump — the prefix-group plan and every
+           cached pytree invalidate exactly once;
+        2. scheduler instances are rebuilt from the store's post-plan
+           bindings (cost id and accuracy carried over per instance) and
+           swapped in via ``Scheduler.rebind``, which preserves residency
+           for keys the plan kept;
+        3. queues are untouched — in-flight requests are served against the
+           new bindings on the next pass (the serve loop re-reads
+           ``prefix_groups()`` every iteration).
+        """
+        from repro.utils.tree import leaf_bytes
+
+        epoch0 = self.store.epoch
+        shared = self.store.apply_plan(plan)
+        old = self.scheduler.instances
+        kb_by_model: dict = {}  # store model -> {key: bytes}, computed once
+        insts = []
+        for iid, inst in old.items():
+            mid = self.programs[iid].model_id
+            if mid not in kb_by_model:
+                kb_by_model[mid] = {
+                    k: (key_bytes_fn(k, leaf_bytes(self.store.buffers[k]))
+                        if key_bytes_fn else leaf_bytes(self.store.buffers[k]))
+                    for k in self.store.keys_for(mid)
+                }
+            kb = kb_by_model[mid]
+            insts.append(Instance(iid, inst.model_id, frozenset(kb), kb,
+                                  inst.accuracy))
+        rebind = self.scheduler.rebind(insts)
+        return {
+            "shared_keys": shared,
+            "epoch_bumps": self.store.epoch - epoch0,
+            "pending_requests": sum(len(q) for q in self.queues.values()),
+            **rebind,
+        }
+
     # -- queue plumbing --------------------------------------------------------
 
     def submit(self, req: Request):
@@ -369,8 +413,8 @@ class MergeAwareEngine:
         stats_before = dict(self.stats)
         done_before = len(self.completions)
         skipped_before = self.skipped
+        stall_before, hidden_before = self.dma.stall_s, self.dma.hidden_s
         epoch_start = self.store.epoch
-        groups = self.prefix_groups()
         t0 = time.monotonic()
         gi = 0
         empty_streak = 0
@@ -429,7 +473,7 @@ class MergeAwareEngine:
             "cache_hit_rate": 1.0 - rebuilds / max(lookups, 1),
             "materializations": rebuilds,
             "binding_epochs": self.store.epoch - epoch_start + 1,
-            "dma_stall_s": self.dma.stall_s,
-            "dma_hidden_s": self.dma.hidden_s,
+            "dma_stall_s": self.dma.stall_s - stall_before,
+            "dma_hidden_s": self.dma.hidden_s - hidden_before,
             **{k: v - stats_before[k] for k, v in self.stats.items()},
         }

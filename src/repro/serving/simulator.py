@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Optional
+from typing import Callable, Optional
 
 from repro.serving.scheduler import Scheduler
 
@@ -39,6 +39,33 @@ class SimResult:
         tot_p = sum(self.processed.values())
         tot = tot_p + sum(self.skipped.values())
         return tot_p / max(tot, 1)
+
+
+def effective_accuracy_objective(
+    instances_fn: Callable,  # (store, committed_groups) -> list[Instance]
+    costs: dict,
+    capacity_bytes: int,
+    batches: Optional[dict] = None,
+    horizon_ms: float = 20_000.0,
+    fps: float = 30.0,
+    sla_ms: float = 100.0,
+) -> Callable:
+    """Simulator-in-the-loop plan objective for the staged planner: returns
+    ``objective(store, committed_groups) -> simulate(...).overall_accuracy``
+    (the Fig 6/10 quantity).  The planner then optimises what the edge box
+    actually serves under the memory/latency cost model — a commit that
+    saves bytes but *hurts* effective accuracy (e.g. by worsening the swap
+    schedule) is rolled back — rather than raw bytes saved (MAFAT's point:
+    drive the search with the cost model)."""
+
+    def objective(store, committed_groups) -> float:
+        insts = instances_fn(store, committed_groups)
+        sched = Scheduler(insts, capacity_bytes, costs)
+        b = batches or {i.instance_id: 1 for i in insts}
+        return simulate(sched, b, horizon_ms=horizon_ms, fps=fps,
+                        sla_ms=sla_ms).overall_accuracy
+
+    return objective
 
 
 def simulate(
@@ -119,6 +146,13 @@ def simulate(
         # tiny scheduling overhead to guarantee progress on empty queues
         if ran == 0:
             t += 0.01
+            if not any(queues[i] for i in order):
+                # fully idle: nothing can happen before the next frame
+                # arrives, so fast-forward instead of spinning the
+                # round-robin in 0.01 ms steps (a merged store's near-zero
+                # loads otherwise turn 20 s of idle horizon into ~10^6
+                # event-loop iterations)
+                t = max(t, min(next_frame[i] for i in order))
 
     # account frames that never got a chance
     expire(horizon_ms)

@@ -6,10 +6,18 @@ merging.
   * merged (Optimal): all architecturally identical layers across the
     workload share one key (Fig 5/6 upper bound);
   * merged (GEMEL): only the groups a :class:`PlanResult` committed share
-    keys (the deployable configuration).
+    keys (the deployable configuration);
+  * merged (plan): the binding deltas of a serialized
+    :class:`~repro.core.policy.MergePlan` — the cloud→edge artifact — are
+    applied verbatim, so instance key sets come from the *plan*, not from
+    ad-hoc group re-derivation.
 
-Keys here are *descriptor-level* (derived from layer specs), independent of
-live weights, so workload-scale experiments don't allocate memory.
+``instances_from_store`` builds Instances straight from a live ParamStore's
+bindings (real buffer bytes) — the path the serving engine's hot plan swap
+and the plan-search benchmark use.
+
+Descriptor-level keys (derived from layer specs) are independent of live
+weights, so workload-scale experiments don't allocate memory.
 """
 from __future__ import annotations
 
@@ -26,10 +34,11 @@ from repro.serving.scheduler import Instance
 
 def build_instances(
     name: str,
-    merged: str = "none",  # none | optimal | groups
+    merged: str = "none",  # none | optimal | groups | plan
     shared_groups: Optional[list] = None,  # LayerGroups actually merged
     accuracies: Optional[dict] = None,  # instance_id -> accuracy multiplier
     workloads: Optional[dict] = None,
+    plan=None,  # MergePlan consumed when merged == "plan"
 ) -> list:
     wl = (workloads or WORKLOADS)[name]
     recs_by_inst = {}
@@ -48,6 +57,10 @@ def build_instances(
         groups = enumerate_groups(all_recs)
     elif merged == "groups":
         groups = shared_groups or []
+    elif merged == "plan":
+        if plan is None:
+            raise ValueError("merged='plan' requires plan=")
+        shared_keys = plan.binding_deltas()  # the artifact IS the contract
     if groups:
         for g in groups:
             base = stable_group_id(g.signature)
@@ -69,6 +82,31 @@ def build_instances(
             Instance(iid, mid, frozenset(keys.keys()), keys, accuracy=acc)
         )
     return instances
+
+
+def instances_from_store(
+    store,
+    cost_ids,  # str (one cost-table id for all) or {model_id: cost_id}
+    model_ids: Optional[list] = None,
+    accuracies: Optional[dict] = None,
+    key_bytes_fn=None,  # (key, real_bytes) -> bytes (e.g. paper-scale rescale)
+) -> list:
+    """Scheduler Instances straight from a live ParamStore: each model's key
+    set is its *current* bindings (so a just-applied MergePlan is reflected
+    immediately) and key bytes are the real buffer sizes unless
+    ``key_bytes_fn`` rescales them."""
+    from repro.utils.tree import leaf_bytes
+
+    ids = model_ids if model_ids is not None else sorted(store.bindings)
+    out = []
+    for mid in ids:
+        keys = store.keys_for(mid)
+        kb = {k: (key_bytes_fn(k, leaf_bytes(store.buffers[k])) if key_bytes_fn
+                  else leaf_bytes(store.buffers[k])) for k in keys}
+        cost = cost_ids if isinstance(cost_ids, str) else cost_ids[mid]
+        out.append(Instance(mid, cost, frozenset(kb), kb,
+                            accuracy=(accuracies or {}).get(mid, 1.0)))
+    return out
 
 
 # -- request micro-batching ---------------------------------------------------

@@ -142,6 +142,7 @@ def test_mamba_chunked_scan_matches_unchunked(rng):
     )
 
 
+@pytest.mark.slow
 def test_griffin_ring_buffer_long_decode(rng):
     """Decode far past the window: ring buffer must match a fresh forward."""
     from repro.models import griffin as G

@@ -1,0 +1,474 @@
+"""Pluggable merge-policy subsystem: scorer interface, training-free
+similarity prefilter, simulator-in-the-loop objective, MergePlan
+serialization + cloud→edge round-trip, and the engine's hot plan swap."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    MemoryForwardScorer, MergePlan, ParamStore, RegisteredModel,
+    RepresentationSimilarityScorer, StagedPlanner, enumerate_groups,
+    records_from_params,
+)
+from repro.core.drift import DriftMonitor
+from repro.core.merging import MergeResult
+from repro.core.policy import CoherenceSurrogateTrainer, linear_cka
+from repro.models import vision as VI
+from repro.serving.costs import costs_for
+from repro.serving.executor import MergeAwareEngine, ModelProgram, Request
+from repro.serving.workload import build_instances, instances_from_store
+
+CFG = VI.SmallCNNConfig(task="classification", n_classes=4, depth=1,
+                        width=8, n_stages=2)
+
+
+def _perturb(params, seed, scale=0.01):
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    ks = jax.random.split(jax.random.PRNGKey(seed), len(leaves))
+    return jax.tree_util.tree_unflatten(
+        treedef, [l + scale * jax.random.normal(k, l.shape)
+                  for l, k in zip(leaves, ks)])
+
+
+def _zoo():
+    """A, B: common provenance (near-identical); C: independent init."""
+    base = VI.init_small_cnn(CFG, jax.random.PRNGKey(0))
+    return {"A": base, "B": _perturb(base, 1), "C": VI.init_small_cnn(CFG, jax.random.PRNGKey(42))}
+
+
+def _calibration():
+    return jax.random.normal(jax.random.PRNGKey(7), (32, 32, 32, 3))
+
+
+def _activations(params_by_mid):
+    cal = _calibration()
+    return {m: VI.small_cnn_layer_activations(CFG, p, cal)
+            for m, p in params_by_mid.items()}
+
+
+def _registered(mids):
+    return [RegisteredModel(m, lambda p, b: 0.0, lambda p, b: 1.0,
+                            lambda e: [], None, 0.9, 1.0) for m in mids]
+
+
+# ---------------------------------------------------------------------------
+# scorers
+# ---------------------------------------------------------------------------
+
+
+def test_memory_forward_scorer_reproduces_seed_order():
+    zoo = _zoo()
+    recs = sum((records_from_params(p, m) for m, p in zoo.items()), [])
+    groups = enumerate_groups(recs)
+    assert MemoryForwardScorer().order(groups) == groups  # §5.3 order intact
+
+
+def test_linear_cka_bounds():
+    x = np.random.default_rng(0).normal(size=(16, 8))
+    assert linear_cka(x, x) == pytest.approx(1.0)
+    assert linear_cka(x, 2.5 * x) == pytest.approx(1.0)  # scale invariant
+    assert 0.0 <= linear_cka(x, np.random.default_rng(1).normal(size=(16, 8))) <= 1.0
+
+
+def test_similarity_scorer_refines_dissimilar_member():
+    zoo = _zoo()
+    acts = _activations(zoo)
+    recs = sum((records_from_params(p, m) for m, p in zoo.items()), [])
+    groups = enumerate_groups(recs)
+    scorer = RepresentationSimilarityScorer(acts, min_similarity=0.5)
+    kept, pruned = scorer.prefilter(groups)
+
+    fc_groups = [g for g in kept if g.records[0].path.startswith("head/fc")]
+    assert fc_groups, "fc candidates must survive (refined)"
+    for g in fc_groups:
+        assert g.models == {"A", "B"}  # C's head diverges -> dropped upfront
+    trunk = [g for g in kept if not g.records[0].path.startswith("head/")]
+    for g in trunk:
+        assert g.models == {"A", "B", "C"}  # trunk convs stay coherent
+    assert scorer.pruned_members > 0
+
+
+def test_refine_preserves_column_alignment_on_repeated_signatures():
+    """A model pruned from column k must not have its later appearances
+    shift into earlier columns (pairings the scorer never scored): its
+    whole appearance chain is dropped from k onward."""
+    from repro.core import LayerRecord
+
+    sig = ("blk/w", (8,), "float32")
+    recs = [LayerRecord(m, f"blk/{i}/w", sig, 32, i / 2.0)
+            for m in ("A", "B", "C") for i in (0, 1)]
+    rng_ = np.random.default_rng(0)
+    base0, base1 = rng_.normal(size=(16, 64)), rng_.normal(size=(16, 64))
+    acts = {
+        "A": {"blk/0": base0, "blk/1": base1},
+        "B": {"blk/0": base0 + 1e-3 * rng_.normal(size=(16, 64)),
+              "blk/1": base1 + 1e-3 * rng_.normal(size=(16, 64))},
+        # C: first appearance incoherent, second coherent — without the
+        # alignment guard C's blk/1 would slide into column 0
+        "C": {"blk/0": rng_.normal(size=(16, 64)),
+              "blk/1": base1 + 1e-3 * rng_.normal(size=(16, 64))},
+    }
+    scorer = RepresentationSimilarityScorer(acts, min_similarity=0.9)
+    from repro.core import LayerGroup
+
+    refined, _ = scorer.refine(LayerGroup(sig, recs))
+    assert refined is not None
+    assert refined.models == {"A", "B"}  # C dropped from BOTH columns
+    cols = refined.columns()
+    assert [sorted(r.path for r in c) for c in cols] == [
+        ["blk/0/w", "blk/0/w"], ["blk/1/w", "blk/1/w"]]
+
+
+def test_similarity_prefilter_fewer_attempts_no_less_savings():
+    """The acceptance property at test scale: prefiltered search reaches >=
+    the memory-forward fraction_saved with strictly fewer retrain attempts."""
+    acts = _activations(_zoo())
+
+    def run(scorer):
+        zoo = _zoo()
+        store = ParamStore.from_models(zoo)
+        recs = sum((records_from_params(p, m) for m, p in zoo.items()), [])
+        trainer = CoherenceSurrogateTrainer(acts, min_similarity=0.5)
+        res = StagedPlanner(store, _registered(zoo), recs, trainer,
+                            scorer=scorer).run()
+        return res, trainer.calls
+
+    mem, mem_calls = run(MemoryForwardScorer())
+    sim, sim_calls = run(RepresentationSimilarityScorer(acts, min_similarity=0.5))
+    assert sim.fraction_saved >= mem.fraction_saved
+    assert sim_calls < mem_calls
+    assert sim.attempted == sim_calls and mem.attempted == mem_calls
+
+
+# ---------------------------------------------------------------------------
+# MergePlan serialization + store round-trip
+# ---------------------------------------------------------------------------
+
+
+def _merged_store():
+    zoo = _zoo()
+    store = ParamStore.from_models(zoo)
+    recs = sum((records_from_params(p, m) for m, p in zoo.items()), [])
+    groups = [g for g in enumerate_groups(recs)
+              if not any(r.path.startswith("head/") for r in g.records)]
+    for g in groups:
+        store.merge_group(g)
+    return zoo, store, groups
+
+
+def test_mergeplan_json_roundtrip_equality():
+    _, store, groups = _merged_store()
+    plan = store.export_plan(groups, provenance={"scorer": "memory-forward"},
+                             include_weights=True)
+    back = MergePlan.from_json(plan.to_json())
+    assert back == plan  # signatures, records, weights payload — everything
+    assert back.binding_deltas() == plan.binding_deltas()
+
+
+def test_mergeplan_from_groups_matches_live_export():
+    """Descriptor-scale plan building (no store) names keys identically to
+    a live store that merged the same groups in the same order."""
+    _, store, groups = _merged_store()
+    live = store.export_plan(groups)
+    offline = MergePlan.from_groups(groups)
+    assert offline.binding_deltas() == live.binding_deltas()
+    assert [pg.signature for pg in offline.groups] == [pg.signature for pg in live.groups]
+
+
+def test_apply_plan_reproduces_merge_group_bindings_one_epoch():
+    zoo, store, groups = _merged_store()
+    plan = store.export_plan(groups)
+
+    fresh = ParamStore.from_models(_zoo())
+    epoch0 = fresh.epoch
+    fresh.apply_plan(plan)
+    assert fresh.epoch == epoch0 + 1  # staged rebind, single bump
+    assert fresh.bindings == store.bindings
+    assert set(fresh.buffers) == set(store.buffers)
+    assert fresh.resident_bytes() == store.resident_bytes()
+    for mid in zoo:
+        a = VI.small_cnn_forward(CFG, fresh.materialize(mid), _calibration())
+        b = VI.small_cnn_forward(CFG, store.materialize(mid), _calibration())
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_apply_plan_carries_retrained_weights():
+    """A plan exported after training-commits ships the shared values, so a
+    fresh store reproduces them bitwise without retraining."""
+    _, store, groups = _merged_store()
+    (key, *_rest) = sorted(store.shared_keys())
+    store.update_buffers({key: jnp.full_like(store.buffers[key], 0.125)})
+    plan = store.export_plan(groups, include_weights=True)
+
+    fresh = ParamStore.from_models(_zoo())
+    fresh.apply_plan(plan)
+    assert np.array_equal(np.asarray(fresh.buffers[key]),
+                          np.asarray(store.buffers[key]))
+
+
+def test_apply_plan_does_not_alias_foreign_same_signature_groups():
+    """A plan for one model pair applied to a store where a DIFFERENT
+    same-architecture pair already shares the identically-named keys must
+    remap, not silently rebind the first pair onto the second's buffers
+    (mirror of test_same_signature_groups_do_not_alias for merge_group)."""
+    params = {m: VI.init_small_cnn(CFG, jax.random.PRNGKey(i))
+              for i, m in enumerate("ABCD")}
+
+    def trunk_groups(pair):
+        recs = sum((records_from_params(params[m], m) for m in pair), [])
+        return [g for g in enumerate_groups(recs)
+                if not any(r.path.startswith("head/") for r in g.records)]
+
+    # plan built for (C, D) alone — its keys carry no pair identity
+    cloud = ParamStore.from_models({m: params[m] for m in ("C", "D")})
+    cd = trunk_groups(("C", "D"))
+    for g in cd:
+        cloud.merge_group(g)
+    plan = MergePlan.from_json(cloud.export_plan(cd).to_json())
+
+    # edge store already merged (A, B), whose keys use the SAME base names
+    store = ParamStore.from_models(params)
+    for g in trunk_groups(("A", "B")):
+        store.merge_group(g)
+    stem_ab = store.bindings["A"]["stem/w"]
+    a_stem = np.asarray(store.buffers[stem_ab])
+
+    store.apply_plan(plan)
+    stem_cd = store.bindings["C"]["stem/w"]
+    assert store.bindings["B"]["stem/w"] == stem_ab  # A/B pair untouched
+    assert store.bindings["D"]["stem/w"] == stem_cd
+    assert stem_cd != stem_ab  # remapped, not aliased
+    np.testing.assert_array_equal(np.asarray(store.buffers[stem_ab]), a_stem)
+    # C's shared stem carries C's (donor) weights, not A's
+    assert not np.array_equal(np.asarray(store.buffers[stem_cd]), a_stem)
+
+
+def test_build_instances_plan_mode_matches_groups_mode():
+    wl = {"W": [("r18", "A1", "people"), ("r18", "A2", "people")]}
+    from repro.configs.vision_workloads import workload_records
+
+    recs = []
+    for k, (mid, feed, obj) in enumerate(wl["W"]):
+        from repro.core.signatures import records_from_spec
+        from repro.models.vision import get_spec
+
+        recs += [r.__class__(f"{mid}#{k}", r.path, r.signature, r.bytes,
+                             r.position) for r in records_from_spec(get_spec(mid))]
+    groups = enumerate_groups(recs)
+    plan = MergePlan.from_groups(groups)
+    via_groups = build_instances("W", merged="groups", shared_groups=groups,
+                                 workloads=wl)
+    via_plan = build_instances("W", merged="plan", plan=plan, workloads=wl)
+    for a, b in zip(via_groups, via_plan):
+        assert a.instance_id == b.instance_id
+        assert a.keys == b.keys
+        assert a.key_bytes == b.key_bytes
+
+
+# ---------------------------------------------------------------------------
+# planner: injectable clock, objective gate
+# ---------------------------------------------------------------------------
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        self.t += 1.0
+        return self.t
+
+
+class AlwaysSucceed:
+    def __init__(self):
+        self.calls = 0
+
+    def train(self, store, models):
+        self.calls += 1
+        return MergeResult(True, {m.model_id: 1.0 for m in models}, set(), 1,
+                           0.0, [])
+
+
+def test_planner_clock_injectable_deterministic_events():
+    def run():
+        zoo = _zoo()
+        store = ParamStore.from_models(zoo)
+        recs = sum((records_from_params(p, m) for m, p in zoo.items()), [])
+        res = StagedPlanner(store, _registered(zoo), recs, AlwaysSucceed(),
+                            clock=FakeClock()).run()
+        return [e.time for e in res.events]
+
+    t1, t2 = run(), run()
+    assert t1 == t2 and len(t1) > 0
+    assert all(t == int(t) for t in t1)  # fake ticks, no wall-clock leakage
+
+
+def test_planner_time_budget_uses_injected_clock():
+    class JumpClock(FakeClock):
+        def __call__(self):
+            self.t += 100.0
+            return self.t
+
+    zoo = _zoo()
+    store = ParamStore.from_models(zoo)
+    recs = sum((records_from_params(p, m) for m, p in zoo.items()), [])
+    trainer = AlwaysSucceed()
+    res = StagedPlanner(store, _registered(zoo), recs, trainer,
+                        time_budget_s=50.0, clock=JumpClock()).run()
+    assert res.committed == 0 and trainer.calls == 0  # budget gone on tick 1
+
+
+def test_objective_rolls_back_regressing_commit():
+    zoo = _zoo()
+    store = ParamStore.from_models(zoo)
+    recs = sum((records_from_params(p, m) for m, p in zoo.items()), [])
+
+    def objective(st, committed_groups):
+        return 1.0 if not committed_groups else 0.25  # every commit "hurts"
+
+    res = StagedPlanner(store, _registered(zoo), recs, AlwaysSucceed(),
+                        objective=objective).run()
+    assert res.committed == 0
+    assert res.discarded > 0
+    assert not store.shared_keys()  # rollbacks restored private bindings
+    assert res.plan.groups == ()
+
+
+def test_objective_recorded_on_events():
+    zoo = _zoo()
+    store = ParamStore.from_models(zoo)
+    recs = sum((records_from_params(p, m) for m, p in zoo.items()), [])
+    res = StagedPlanner(store, _registered(zoo), recs, AlwaysSucceed(),
+                        objective=lambda st, gs: 0.9).run()
+    assert res.committed > 0
+    assert all(e.objective == 0.9 for e in res.events)
+
+
+# ---------------------------------------------------------------------------
+# drift satellite: checks ride the serve cache, never invalidate it
+# ---------------------------------------------------------------------------
+
+
+def test_drift_check_does_not_bump_epoch_or_rematerialize():
+    zoo, store, _ = _merged_store()
+    regs = [
+        RegisteredModel(m, lambda p, b: 0.0,
+                        lambda p, b: VI.small_cnn_accuracy(CFG, p, b),
+                        lambda e: [], None, 0.9, 1.0)
+        for m in zoo
+    ]
+    monitor = DriftMonitor(store, zoo, regs)
+    batch = {"images": _calibration(),
+             "labels": jnp.zeros((32,), dtype=jnp.int32)}
+    for mid in zoo:  # warm the serve cache, as a running engine would
+        store.materialize_cached(mid)
+    epoch0, mats0 = store.epoch, dict(store.materializations)
+
+    report = monitor.check({m: batch for m in zoo})
+    assert set(report.checked) == set(zoo)
+    assert store.epoch == epoch0  # no binding-epoch bump
+    assert store.materializations == mats0  # no re-materialisation either
+
+
+# ---------------------------------------------------------------------------
+# engine hot plan swap
+# ---------------------------------------------------------------------------
+
+
+def _programs(mids):
+    paths = VI.small_cnn_prefix_paths(CFG, VI.init_small_cnn(CFG, jax.random.PRNGKey(0)))
+    return [
+        ModelProgram(
+            m, m,
+            forward=lambda p, x: VI.small_cnn_forward(CFG, p, x),
+            prefix=lambda p, x: VI.small_cnn_features(CFG, p, x),
+            suffix=lambda p, f: VI.small_cnn_head(CFG, p, f),
+            prefix_paths=paths,
+        )
+        for m in mids
+    ]
+
+
+def _engine(store, mids):
+    insts = instances_from_store(store, "tiny-yolo", model_ids=list(mids))
+    return MergeAwareEngine(store, insts, _programs(mids),
+                            capacity_bytes=10**9,
+                            costs={"tiny-yolo": costs_for("tiny-yolo")},
+                            buckets=(1, 2, 4))
+
+
+def _reqs(n=6):
+    return [Request("A" if i % 2 == 0 else "B",
+                    jax.random.normal(jax.random.PRNGKey(i), (1, 32, 32, 3)),
+                    0.0, 30.0) for i in range(n)]
+
+
+def test_engine_hot_swap_pending_requests_survive_single_epoch():
+    zoo = {m: p for m, p in _zoo().items() if m in ("A", "B")}
+    # cloud: merge the trunk on a twin store, export the plan
+    cloud = ParamStore.from_models({m: p for m, p in _zoo().items() if m in ("A", "B")})
+    recs = sum((records_from_params(p, m) for m, p in zoo.items()), [])
+    trunk = [g for g in enumerate_groups(recs)
+             if not any(r.path.startswith("head/") for r in g.records)]
+    for g in trunk:
+        cloud.merge_group(g)
+    plan = cloud.export_plan(trunk)
+
+    # edge: live engine over an UNMERGED store with requests already queued
+    store = ParamStore.from_models(zoo)
+    eng = _engine(store, ("A", "B"))
+    warm = _reqs(1)[0].payload
+    for r in _reqs(6):
+        eng.submit(r)
+    assert eng.prefix_groups() == [["A"], ["B"]]
+
+    epoch0 = store.epoch
+    swap = eng.apply_plan(plan)
+    assert swap["epoch_bumps"] == 1  # staged rebind: one bump total
+    assert swap["pending_requests"] == 6  # nothing dropped
+    assert eng.prefix_groups() == [["A", "B"]]  # re-planned from the epoch
+
+    stats = eng.serve(horizon_s=30.0, warmup=warm)
+    assert stats["completed"] == 6
+    assert stats["prefix_runs"] >= 1 and stats["forward_runs"] == 0
+    for c in eng.completions:  # parity vs direct forward on post-plan params
+        direct = VI.small_cnn_forward(CFG, store.materialize(c.request.instance_id),
+                                      c.request.payload)
+        np.testing.assert_allclose(np.asarray(c.result), np.asarray(direct[0]),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_plan_shipped_engine_outputs_bitwise_identical():
+    """The acceptance criterion: a plan exported from one store and applied
+    to a fresh store + live engine serves BITWISE the same outputs as the
+    engine over the original merged store."""
+    mids = ("A", "B")
+
+    def fresh_zoo():
+        return {m: p for m, p in _zoo().items() if m in mids}
+
+    cloud = ParamStore.from_models(fresh_zoo())
+    recs = sum((records_from_params(p, m) for m, p in fresh_zoo().items()), [])
+    trunk = [g for g in enumerate_groups(recs)
+             if not any(r.path.startswith("head/") for r in g.records)]
+    for g in trunk:
+        cloud.merge_group(g)
+    plan = MergePlan.from_json(cloud.export_plan(trunk).to_json())  # ship it
+
+    edge = ParamStore.from_models(fresh_zoo())
+    eng_edge = _engine(edge, mids)
+    eng_edge.apply_plan(plan)
+    eng_cloud = _engine(cloud, mids)
+
+    warm = _reqs(1)[0].payload
+    for r in _reqs(6):
+        eng_cloud.submit(r)
+    for r in _reqs(6):
+        eng_edge.submit(r)
+    eng_cloud.serve(horizon_s=30.0, warmup=warm)
+    eng_edge.serve(horizon_s=30.0, warmup=warm)
+    assert len(eng_cloud.completions) == len(eng_edge.completions) == 6
+    for a, b in zip(eng_cloud.completions, eng_edge.completions):
+        assert a.request.instance_id == b.request.instance_id
+        assert np.array_equal(np.asarray(a.result), np.asarray(b.result))
