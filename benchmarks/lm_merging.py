@@ -1,18 +1,51 @@
-"""Beyond-paper: GEMEL merging applied to the LM zoo (pod-scale serving).
+"""Beyond-paper: GEMEL merging applied to the LM zoo — sizing AND serving.
 
-Scenario: an inference pod hosts fine-tuned VARIANTS of the assigned
-architectures (the LM analogue of the paper's per-feed vision models).
-Signature analysis runs on eval_shape parameter trees — no allocation —
-and reports per-workload memory savings at Optimal and GEMEL(cap) levels,
-plus the cross-architecture overlap matrix.
+    PYTHONPATH=src python -m benchmarks.lm_merging [--json] [--retrain]
+
+Two parts, both speaking the ``MergeableAdapter`` contract (DESIGN.md P3):
+
+1. **Pod sizing** (descriptor scale, no allocation): an inference pod hosts
+   fine-tuned VARIANTS of the assigned architectures (the LM analogue of the
+   paper's per-feed vision models).  Signature analysis runs on
+   ``adapter.eval_params`` trees and reports per-workload memory savings at
+   Optimal and GEMEL(cap) levels, plus the cross-architecture overlap matrix
+   (artifact ``lm_merging.json``).
+
+2. **Merge-and-serve** (runnable, tiny scale): three transformer fine-tune
+   variants — (A, B) common provenance with divergent heads, C independent —
+   go through the full pipeline: CKA-prefiltered ``StagedPlanner`` search
+   over the trunk (heads stay private, the paper's shared-stem case),
+   serialized ``MergePlan``, hot swap into a live ``MergeAwareEngine`` on a
+   fresh store, shared-prefix batched decode steps.  The prefilter keeps the
+   whole (A, B) trunk — one prefix run serves both variants' requests — and
+   prunes foreign C down to its projection-invariant layers (embedding, norm
+   scales: linear-CKA cannot distinguish random projections of identical
+   inputs, so those columns legitimately survive at signature granularity).
+   Records memory saved and merged-vs-unmerged throughput into
+   ``BENCH_lm_serve.json`` and verifies that merged serving outputs are
+   BITWISE identical to direct per-model forwards on the same bindings.
+
+``--retrain`` swaps the calibration-coherence surrogate for the real joint
+``MergeTrainer`` — a *plumbing* proof that the family-agnostic retraining
+loop works end-to-end (gradients from every variant sum into the shared
+buffers and the trained values ship in the plan), NOT an accuracy gate:
+targets are deliberately lenient (``accuracy_target=0.0``) because accuracy
+on synthetic random tokens is noise and would gate nothing meaningful.  It
+is the slow path — the fast lane (run.py default, ci.sh) uses the
+surrogate, and tests/test_adapters.py exercises the retraining loop under
+the ``slow`` marker.
 """
+import argparse
+import json
+
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import all_arch_ids, load_arch
-from repro.core.groups import enumerate_groups, potential_savings
-from repro.core.signatures import records_from_params, signature_match_fraction
-from repro.models.registry import get_family
+from repro.core.groups import LayerGroup, enumerate_groups, potential_savings
+from repro.core.signatures import signature_match_fraction
+from repro.models.registry import get_adapter
 
 from benchmarks.common import emit
 
@@ -26,16 +59,20 @@ POD_WORKLOAD = {
     "stablelm-1.6b": 3,
 }
 
+MIN_SIMILARITY = 0.7
+MIDS = ("lm-A", "lm-B", "lm-C")
+BUCKETS = (1, 2, 4)
+REQS_PER_MODEL = 4
+
 
 def _records_for(arch, variant):
     mod = load_arch(arch)
     cfg = mod.full_config()
-    fam = get_family(mod.FAMILY)
-    shapes = jax.eval_shape(lambda: fam.init(cfg, jax.random.PRNGKey(0)))
-    return records_from_params(shapes, f"{arch}@{variant}")
+    adapter = get_adapter(mod.FAMILY)
+    return adapter.records(cfg, adapter.eval_params(cfg), f"{arch}@{variant}")
 
 
-def run():
+def pod_sizing() -> list:
     rows = []
     # 1) pod workload savings
     recs = []
@@ -61,8 +98,6 @@ def run():
         if any(shared[m] + c > cap for m, c in counts.items()):
             continue
         shared.update(counts)
-        from repro.core.groups import LayerGroup
-
         saved += LayerGroup(g.signature, active).savings
         committed += 1
     rows.append({
@@ -86,11 +121,221 @@ def run():
             "optimal_saved_pct": "", "gemel_saved_pct": "",
             "groups_committed": f"{a}|{b}: {100*frac:.1f}% identical",
         })
-    return emit("lm_merging", rows, {
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# merge-and-serve: transformer fine-tune variants through the full pipeline
+# ---------------------------------------------------------------------------
+
+
+def _perturb(params, seed, scale, select=None):
+    """Gaussian-perturb leaves (optionally only paths accepted by
+    ``select``) — emulates fine-tuning divergence without a training run."""
+    from repro.utils.tree import flatten_paths, unflatten_paths
+
+    flat = flatten_paths(params)
+    ks = jax.random.split(jax.random.PRNGKey(seed), len(flat))
+    out = {}
+    for (path, leaf), k in zip(sorted(flat.items()), ks):
+        if select is None or select(path):
+            leaf = leaf + scale * jax.random.normal(k, leaf.shape, leaf.dtype)
+        out[path] = leaf
+    return unflatten_paths(out)
+
+
+def lm_zoo(adapter, cfg) -> dict:
+    """(A, B): common trunk provenance, independently 'fine-tuned' heads.
+    C: independent init — architecturally identical, functionally foreign."""
+    base = adapter.init(cfg, jax.random.PRNGKey(0))
+    head = lambda p: p.startswith(("final_norm/", "lm_head/"))  # noqa: E731
+    b = _perturb(base, 1, 0.01, select=lambda p: not head(p))  # shared trunk
+    b = _perturb(b, 2, 1.0, select=head)  # divergent head
+    return {"lm-A": base, "lm-B": b,
+            "lm-C": adapter.init(cfg, jax.random.PRNGKey(42))}
+
+
+def plan_variants(adapter, cfg, retrain: bool = False):
+    """CKA-prefiltered staged search over the variants; returns (PlanResult,
+    cloud store)."""
+    from repro.core import ParamStore, RepresentationSimilarityScorer, StagedPlanner
+    from repro.core.merging import MergeTrainer
+    from repro.core.policy import CoherenceSurrogateTrainer, calibration_activations
+
+    zoo = lm_zoo(adapter, cfg)
+    store = ParamStore.from_models(zoo)
+    # trunk-only candidates: heads stay private (the vision benchmarks'
+    # "merge the trunk only" precedent — suffixes fan out per model anyway)
+    trunk = adapter.split(cfg).prefix_paths
+    recs = [r for m, p in zoo.items()
+            for r in adapter.records(cfg, p, m) if r.path in trunk]
+    members = {m: (adapter, cfg, p) for m, p in zoo.items()}
+    batch = adapter.calibration_batch(cfg, jax.random.PRNGKey(7), 32)
+    acts = calibration_activations(members, batch)
+    scorer = RepresentationSimilarityScorer(acts, MIN_SIMILARITY)
+    # accuracy_target=0.0: synthetic random-token accuracy cannot vet a
+    # merge, so --retrain proves the joint-training PLUMBING (see module
+    # docstring), never rejecting on the noise metric
+    regs = [adapter.registered(cfg, m, jax.random.PRNGKey(i + 10),
+                               accuracy_target=0.0)
+            for i, m in enumerate(sorted(zoo))]
+    trainer = (MergeTrainer(max_epochs=2) if retrain
+               else CoherenceSurrogateTrainer(acts, MIN_SIMILARITY))
+    res = StagedPlanner(store, regs, recs, trainer, scorer=scorer).run()
+    return res, store
+
+
+def lm_engine(store, adapter, cfg, mids):
+    from repro.serving.costs import costs_for
+    from repro.serving.executor import MergeAwareEngine, ModelProgram
+    from repro.serving.workload import instances_from_store
+
+    programs = [ModelProgram.from_adapter(adapter, m, cfg=cfg) for m in mids]
+    # cost table: tiny-yolo as a stand-in (scheduler accounting only — the
+    # LM zoo has no Table-1 entry; bytes come from the real store buffers)
+    return MergeAwareEngine(
+        store, instances_from_store(store, "tiny-yolo", model_ids=list(mids)),
+        programs, capacity_bytes=10**9,
+        costs={"tiny-yolo": costs_for("tiny-yolo")}, buckets=BUCKETS,
+    )
+
+
+def lm_requests(cfg, mids):
+    """REQS_PER_MODEL decode-step requests per variant; deadlines group each
+    variant's requests into one full bucket (EDF order == submission order)
+    so direct forwards can replay the exact batched shapes."""
+    from repro.serving.executor import Request
+
+    reqs = []
+    for i, m in enumerate(mids):
+        for j in range(REQS_PER_MODEL):
+            toks = jax.random.randint(jax.random.PRNGKey(100 + 7 * i + j),
+                                      (1, 8), 0, cfg.vocab_size)
+            reqs.append(Request(m, toks, 0.0, 10.0 * (i + 1) + 1e-3 * j))
+    return reqs
+
+
+def _serve(store, adapter, cfg, mids):
+    eng = lm_engine(store, adapter, cfg, mids)
+    reqs = lm_requests(cfg, mids)
+    warm = reqs[0].payload
+    for r in reqs:
+        eng.submit(r)
+    stats = eng.serve(horizon_s=60.0, warmup=warm)
+    return eng, stats
+
+
+def verify_bitwise(eng, store, adapter, cfg) -> bool:
+    """Merged serving outputs vs direct per-model forwards on the same
+    bindings: shared groups replay through fresh jits of the same split
+    callables, singletons through a fresh jit of the composed forward —
+    every row must match BITWISE."""
+    from repro.serving.workload import pad_stack
+
+    sp = adapter.split(cfg)
+    by_mid: dict = {}
+    for c in eng.completions:
+        by_mid.setdefault(c.request.instance_id, []).append(c)
+    shared = {m for g in eng.prefix_groups() if len(g) > 1 for m in g}
+    ok = True
+    for mid, comps in by_mid.items():
+        batch, n = pad_stack([c.request.payload for c in comps], REQS_PER_MODEL)
+        params = store.materialize(mid)
+        if mid in shared:
+            direct = jax.jit(sp.suffix)(params, jax.jit(sp.prefix)(params, batch))
+        else:
+            direct = jax.jit(adapter.bound_forward(cfg))(params, batch)
+        for row, c in enumerate(comps[:n]):
+            ok &= np.array_equal(np.asarray(c.result), np.asarray(direct[row]))
+    return ok
+
+
+def merge_and_serve(retrain: bool = False) -> tuple:
+    from repro.core import MergePlan, ParamStore
+
+    adapter = get_adapter("dense")
+    cfg = adapter.default_config()
+
+    # CLOUD: plan over the variants, ship JSON
+    res, cloud = plan_variants(adapter, cfg, retrain=retrain)
+    payload = res.plan.to_json()
+    plan = MergePlan.from_json(payload)
+    cross = [pg for pg in plan.groups
+             if any(len(c.members) >= 2 for c in pg.columns)]
+
+    # EDGE baseline: unmerged twin serves the same trace
+    edge_unmerged = ParamStore.from_models(lm_zoo(adapter, cfg))
+    base_resident = edge_unmerged.resident_bytes()
+    _, base_stats = _serve(edge_unmerged, adapter, cfg, MIDS)
+
+    # EDGE merged: live engine + hot plan swap, then the same trace
+    edge = ParamStore.from_models(lm_zoo(adapter, cfg))
+    eng = lm_engine(edge, adapter, cfg, MIDS)
+    swap = eng.apply_plan(plan)
+    merged_resident = edge.resident_bytes()
+    reqs = lm_requests(cfg, MIDS)
+    for r in reqs:
+        eng.submit(r)
+    merged_stats = eng.serve(horizon_s=60.0, warmup=reqs[0].payload)
+    bitwise = verify_bitwise(eng, edge, adapter, cfg)
+
+    rows = [
+        {"path": "unmerged", "resident_bytes": base_resident,
+         "completed": base_stats["completed"],
+         "requests_per_s": base_stats["requests_per_s"],
+         "prefix_runs": base_stats["prefix_runs"],
+         "sla_fraction": base_stats["sla_fraction"]},
+        {"path": "merged-plan", "resident_bytes": merged_resident,
+         "completed": merged_stats["completed"],
+         "requests_per_s": merged_stats["requests_per_s"],
+         "prefix_runs": merged_stats["prefix_runs"],
+         "sla_fraction": merged_stats["sla_fraction"]},
+    ]
+    derived = {
+        "trainer": "merge-trainer" if retrain else "coherence-surrogate",
+        "plan_bytes": len(payload),
+        "committed_groups": res.committed,
+        "cross_variant_groups": len(cross),
+        "retrain_attempts": res.attempted,
+        "pruned_prefilter": res.pruned,
+        "memory_saved_bytes": base_resident - merged_resident,
+        "memory_saved_pct": 100 * (base_resident - merged_resident) / base_resident,
+        "shared_keys": len(swap["shared_keys"]),
+        "epoch_bumps": swap["epoch_bumps"],
+        "prefix_jits": merged_stats["prefix_jits_total"],
+        "outputs_bitwise_identical": bitwise,
+        "throughput_ratio": (merged_stats["requests_per_s"]
+                             / max(base_stats["requests_per_s"], 1e-9)),
+    }
+    return rows, derived
+
+
+def run(quiet: bool = False, retrain: bool = False) -> dict:
+    emit("lm_merging", pod_sizing(), {
         "note": "fine-tuned variants of one arch share 100% of signatures; "
                 "cross-arch overlap mirrors the paper's same/cross-family split",
-    })
+    }, quiet=quiet)
+    rows, derived = merge_and_serve(retrain=retrain)
+    return emit("BENCH_lm_serve", rows, derived, quiet=quiet)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", action="store_true",
+                    help="print ONLY the artifact JSON to stdout (pipeable); "
+                         "the artifact is always written either way")
+    ap.add_argument("--retrain", action="store_true",
+                    help="use the real joint MergeTrainer (slow path) instead "
+                         "of the calibration-coherence surrogate")
+    args = ap.parse_args(argv)
+    out = run(quiet=args.json, retrain=args.retrain)
+    if args.json:
+        print(json.dumps(out, indent=2, default=str))
+    d = out["derived"]
+    if not (d["cross_variant_groups"] >= 1 and d["outputs_bitwise_identical"]
+            and d["memory_saved_bytes"] > 0):
+        raise SystemExit("lm_serve acceptance criteria not met")
 
 
 if __name__ == "__main__":
-    run()
+    main()

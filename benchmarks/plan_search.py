@@ -39,11 +39,14 @@ MIN_SIMILARITY = 0.5
 ORDER = ("A", "B", "C", "D", "E")
 
 
-def _cfg():
-    from repro.models import vision as VI
+def _adapter():
+    from repro.models.registry import get_adapter
 
-    return VI.SmallCNNConfig(task="classification", n_classes=4, depth=1,
-                             width=8, n_stages=2)
+    return get_adapter("small_cnn")
+
+
+def _cfg():
+    return _adapter().default_config()
 
 
 def _perturb(params, seed, scale=0.01):
@@ -55,22 +58,23 @@ def _perturb(params, seed, scale=0.01):
 
 
 def _zoo(cfg):
-    from repro.models import vision as VI
-
-    a = VI.init_small_cnn(cfg, jax.random.PRNGKey(0))
-    d = VI.init_small_cnn(cfg, jax.random.PRNGKey(5))
+    init = _adapter().init
+    a = init(cfg, jax.random.PRNGKey(0))
+    d = init(cfg, jax.random.PRNGKey(5))
     return {
         "A": a, "B": _perturb(a, 1),
-        "C": VI.init_small_cnn(cfg, jax.random.PRNGKey(42)),
+        "C": init(cfg, jax.random.PRNGKey(42)),
         "D": d, "E": _perturb(d, 2),
     }
 
 
 def _activations(cfg, zoo):
-    from repro.models import vision as VI
+    from repro.core.policy import calibration_activations
 
-    cal = jax.random.normal(jax.random.PRNGKey(7), (32, 32, 32, 3))
-    return {m: VI.small_cnn_layer_activations(cfg, p, cal) for m, p in zoo.items()}
+    adapter = _adapter()
+    batch = adapter.calibration_batch(cfg, jax.random.PRNGKey(7), 32)
+    return calibration_activations(
+        {m: (adapter, cfg, p) for m, p in zoo.items()}, batch)
 
 
 def _build(scorer_name, activations):
@@ -116,8 +120,8 @@ def _build(scorer_name, activations):
 def _roundtrip_bitwise(res, store) -> dict:
     """Export → JSON → fresh store apply_plan: forwards must match bitwise."""
     from repro.core import MergePlan, ParamStore
-    from repro.models import vision as VI
 
+    adapter = _adapter()
     cfg = _cfg()
     payload = res.plan.to_json()
     plan = MergePlan.from_json(payload)
@@ -127,8 +131,8 @@ def _roundtrip_bitwise(res, store) -> dict:
     frame = jax.random.normal(jax.random.PRNGKey(3), (2, 32, 32, 3))
     bitwise = all(
         np.array_equal(
-            np.asarray(VI.small_cnn_forward(cfg, store.materialize(m), frame)),
-            np.asarray(VI.small_cnn_forward(cfg, fresh.materialize(m), frame)),
+            np.asarray(adapter.forward(cfg, store.materialize(m), frame)),
+            np.asarray(adapter.forward(cfg, fresh.materialize(m), frame)),
         )
         for m in ORDER
     )

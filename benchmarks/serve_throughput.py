@@ -35,19 +35,19 @@ BUCKETS = (1, 2, 4)
 
 
 def _build():
-    from repro.core import ParamStore, enumerate_groups, records_from_params
-    from repro.models import vision as VI
+    from repro.core import ParamStore, enumerate_groups
+    from repro.models.registry import get_adapter
     from repro.serving.costs import costs_for
     from repro.serving.scheduler import Instance
     from repro.utils.tree import leaf_bytes
 
-    cfg = VI.SmallCNNConfig(task="classification", n_classes=4, depth=1,
-                            width=8, n_stages=2)
-    params = {m: VI.init_small_cnn(cfg, jax.random.PRNGKey(i))
+    adapter = get_adapter("small_cnn")
+    cfg = adapter.default_config()
+    params = {m: adapter.init(cfg, jax.random.PRNGKey(i))
               for i, m in enumerate(ORDER)}
     store = ParamStore.from_models(params)
     for pair in PAIRS:  # merge trunks within each pair; heads stay private
-        recs = sum((records_from_params(params[m], m) for m in pair), [])
+        recs = sum((adapter.records(cfg, params[m], m) for m in pair), [])
         for g in enumerate_groups(recs):
             if not any(r.path.startswith("head/") for r in g.records):
                 store.merge_group(g)
@@ -68,7 +68,7 @@ def _build():
                       for k in insts[0].keys | insts[1].keys}.values())
     act = int(costs["tiny-yolo"].activation_gb(max(BUCKETS)) * 1e9)
     capacity = pair_bytes + act + int(0.05e9)
-    return cfg, store, insts, costs, capacity, params["A"]
+    return adapter, cfg, store, insts, costs, capacity
 
 
 def _frame():
@@ -85,13 +85,12 @@ def _trace(n_requests: int, deadline_s: float):
 
 
 def _run_seed(n_requests, horizon_s, deadline_s):
-    from repro.models import vision as VI
     from repro.serving.executor import EdgeExecutor, Request
 
-    cfg, store, insts, costs, capacity, _ = _build()
+    adapter, cfg, store, insts, costs, capacity = _build()
     ex = EdgeExecutor(
         store, insts,
-        {m: (lambda p, x, c=cfg: VI.small_cnn_forward(c, p, x)) for m in ORDER},
+        {m: adapter.bound_forward(cfg) for m in ORDER},
         capacity_bytes=capacity, costs=costs,
     )
     trace = _trace(n_requests, deadline_s)
@@ -105,21 +104,10 @@ def _run_seed(n_requests, horizon_s, deadline_s):
 
 
 def _run_engine(n_requests, horizon_s, deadline_s):
-    from repro.models import vision as VI
     from repro.serving.executor import MergeAwareEngine, ModelProgram, Request
 
-    cfg, store, insts, costs, capacity, pa = _build()
-    prefix_paths = VI.small_cnn_prefix_paths(cfg, pa)
-    programs = [
-        ModelProgram(
-            m, m,
-            forward=lambda p, x, c=cfg: VI.small_cnn_forward(c, p, x),
-            prefix=lambda p, x, c=cfg: VI.small_cnn_features(c, p, x),
-            suffix=lambda p, f, c=cfg: VI.small_cnn_head(c, p, f),
-            prefix_paths=prefix_paths,
-        )
-        for m in ORDER
-    ]
+    adapter, cfg, store, insts, costs, capacity = _build()
+    programs = [ModelProgram.from_adapter(adapter, m, cfg=cfg) for m in ORDER]
     eng = MergeAwareEngine(store, insts, programs, capacity_bytes=capacity,
                            costs=costs, buckets=BUCKETS)
     trace = _trace(n_requests, deadline_s)

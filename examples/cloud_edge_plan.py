@@ -11,43 +11,46 @@ the "edge" under a LIVE serving engine.
    the plan hot-swapped in (staged rebind, one epoch bump, queued requests
    survive) and immediately serves merged: shared trunk, one prefix run per
    micro-batch, smaller resident footprint.
+
+Every model-facing step goes through the registered ``MergeableAdapter``
+(DESIGN.md P3) — swap ``get_adapter("small_cnn")`` for any family with
+calibrate + split support (e.g. ``"dense"``) and the script is unchanged.
 """
 import jax
 
 from repro.core import (
-    ParamStore, RegisteredModel, RepresentationSimilarityScorer,
-    StagedPlanner, records_from_params,
+    ParamStore, RepresentationSimilarityScorer, StagedPlanner,
 )
-from repro.core.policy import CoherenceSurrogateTrainer
-from repro.models import vision as VI
+from repro.core.policy import CoherenceSurrogateTrainer, calibration_activations
+from repro.models.registry import get_adapter
 from repro.serving.costs import costs_for
 from repro.serving.executor import MergeAwareEngine, ModelProgram, Request
 from repro.serving.workload import instances_from_store
 
-CFG = VI.SmallCNNConfig(task="classification", n_classes=4, depth=1,
-                        width=8, n_stages=2)
+ADAPTER = get_adapter("small_cnn")
+CFG = ADAPTER.default_config()
 
 
 def make_zoo():
-    base = VI.init_small_cnn(CFG, jax.random.PRNGKey(0))
+    base = ADAPTER.init(CFG, jax.random.PRNGKey(0))
     noisy = jax.tree_util.tree_map(
         lambda x: x + 0.01 * jax.random.normal(jax.random.PRNGKey(1), x.shape),
         base)
     return {"cam-A": base, "cam-B": noisy,
-            "cam-C": VI.init_small_cnn(CFG, jax.random.PRNGKey(42))}
+            "cam-C": ADAPTER.init(CFG, jax.random.PRNGKey(42))}
 
 
 def cloud_plan() -> str:
     print("== CLOUD: staged planner with similarity prefilter ==")
     zoo = make_zoo()
     store = ParamStore.from_models(zoo)
-    cal = jax.random.normal(jax.random.PRNGKey(7), (32, 32, 32, 3))
-    acts = {m: VI.small_cnn_layer_activations(CFG, p, cal)
-            for m, p in zoo.items()}
+    members = {m: (ADAPTER, CFG, p) for m, p in zoo.items()}
+    batch = ADAPTER.calibration_batch(CFG, jax.random.PRNGKey(7), 32)
+    acts = calibration_activations(members, batch)
     scorer = RepresentationSimilarityScorer(acts, min_similarity=0.5)
-    regs = [RegisteredModel(m, lambda p, b: 0.0, lambda p, b: 1.0,
-                            lambda e: [], None, 0.9, 1.0) for m in zoo]
-    recs = sum((records_from_params(p, m) for m, p in zoo.items()), [])
+    regs = [ADAPTER.registered(CFG, m, jax.random.PRNGKey(i + 10))
+            for i, m in enumerate(sorted(zoo))]
+    recs = sum((ADAPTER.records(CFG, p, m) for m, p in zoo.items()), [])
     # calibration-coherence surrogate for joint retraining: CPU-fast, same
     # ground truth the prefilter predicts
     res = StagedPlanner(store, regs, recs,
@@ -68,17 +71,7 @@ def edge_serve(payload: str):
     zoo = make_zoo()  # the edge box has the same registered originals
     store = ParamStore.from_models(zoo)
     mids = sorted(zoo)
-    paths = VI.small_cnn_prefix_paths(CFG, zoo[mids[0]])
-    programs = [
-        ModelProgram(
-            m, m,
-            forward=lambda p, x: VI.small_cnn_forward(CFG, p, x),
-            prefix=lambda p, x: VI.small_cnn_features(CFG, p, x),
-            suffix=lambda p, f: VI.small_cnn_head(CFG, p, f),
-            prefix_paths=paths,
-        )
-        for m in mids
-    ]
+    programs = [ModelProgram.from_adapter(ADAPTER, m, cfg=CFG) for m in mids]
     eng = MergeAwareEngine(
         store, instances_from_store(store, "tiny-yolo"), programs,
         capacity_bytes=10**9, costs={"tiny-yolo": costs_for("tiny-yolo")},
@@ -100,6 +93,7 @@ def edge_serve(payload: str):
     stats = eng.serve(horizon_s=10.0, warmup=img)
     print(f"   served {stats['completed']} queued requests "
           f"(prefix_runs={stats['prefix_runs']}, "
+          f"prefix_jits={stats['prefix_jits_total']}, "
           f"cache_hit={stats['cache_hit_rate']:.2f}, "
           f"sla={stats['sla_fraction']:.2f})")
 

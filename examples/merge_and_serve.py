@@ -39,17 +39,17 @@ def simulated(workload: str):
 
 def real_executor():
     print("\n== real executor: merged pair of small models ==")
-    from repro.core import ParamStore, enumerate_groups, records_from_params
-    from repro.models import vision as VI
+    from repro.core import ParamStore, enumerate_groups
+    from repro.models.registry import get_adapter
     from repro.serving.costs import costs_for
     from repro.serving.executor import MergeAwareEngine, ModelProgram
 
-    cfg = VI.SmallCNNConfig(task="classification", n_classes=4, depth=1,
-                            width=8, n_stages=2)
-    pa = VI.init_small_cnn(cfg, jax.random.PRNGKey(0))
-    pb = VI.init_small_cnn(cfg, jax.random.PRNGKey(1))
+    adapter = get_adapter("small_cnn")
+    cfg = adapter.default_config()
+    pa = adapter.init(cfg, jax.random.PRNGKey(0))
+    pb = adapter.init(cfg, jax.random.PRNGKey(1))
     store = ParamStore.from_models({"A": pa, "B": pb})
-    recs = records_from_params(pa, "A") + records_from_params(pb, "B")
+    recs = adapter.records(cfg, pa, "A") + adapter.records(cfg, pb, "B")
     # merge the trunk only — heads stay private, the shared-prefix case
     for g in enumerate_groups(recs):
         if not any(r.path.startswith("head/") for r in g.records):
@@ -66,7 +66,7 @@ def real_executor():
     # seed path: one forward per request, synchronous DMA
     ex = EdgeExecutor(
         store, insts,
-        {m: (lambda p, x, c=cfg: VI.small_cnn_forward(c, p, x)) for m in ("A", "B")},
+        {m: adapter.bound_forward(cfg) for m in ("A", "B")},
         capacity_bytes=10**9, costs=costs,
     )
     t0 = time.monotonic()
@@ -78,16 +78,9 @@ def real_executor():
 
     # engine path: shared-prefix batched execution + cached materialisation
     # + async DMA prefetch (DESIGN.md S1)
-    programs = [
-        ModelProgram(
-            m, m,
-            forward=lambda p, x, c=cfg: VI.small_cnn_forward(c, p, x),
-            prefix=lambda p, x, c=cfg: VI.small_cnn_features(c, p, x),
-            suffix=lambda p, f, c=cfg: VI.small_cnn_head(c, p, f),
-            prefix_paths=VI.small_cnn_prefix_paths(cfg, pa),
-        )
-        for m in ("A", "B")
-    ]
+    # the adapter IS the serving contract: prefix/suffix split + paths
+    programs = [ModelProgram.from_adapter(adapter, m, cfg=cfg)
+                for m in ("A", "B")]
     eng = MergeAwareEngine(store, insts, programs, capacity_bytes=10**9,
                            costs=costs)
     for i in range(40):

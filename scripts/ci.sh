@@ -8,6 +8,16 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export REPRO_KERNEL_MODE=ref
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
+# API-boundary guard (DESIGN.md P3): the merge pipeline talks to models only
+# through registered MergeableAdapters — no repro.core / repro.serving module
+# may import the vision family directly.
+if grep -RnE "repro\.models\.vision|models import vision" \
+     src/repro/core src/repro/serving; then
+  echo "API boundary violation: core/serving must reach models through" \
+       "repro.models.registry adapters, never repro.models.vision" >&2
+  exit 1
+fi
+
 # fast lane first: tier-1 feedback without the retraining-heavy slow tests,
 # then the slow remainder so the full suite still gates the build
 python -m pytest -x -q -m "not slow"
@@ -18,7 +28,11 @@ python -m pytest -q -m "slow"
 python -m benchmarks.serve_throughput --json --requests 240
 # staged-planner search: similarity prefilter vs memory-forward + plan round-trip
 python -m benchmarks.plan_search --json
+# LM merge-and-serve through the adapter contract (surrogate trainer — the
+# real retraining loop is the slow-marked pytest + `--retrain` flag)
+python -m benchmarks.lm_merging --json
 
 test -f artifacts/benchmarks/BENCH_serve.json
 test -f artifacts/benchmarks/BENCH_plan.json
+test -f artifacts/benchmarks/BENCH_lm_serve.json
 echo "CI OK"

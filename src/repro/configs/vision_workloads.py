@@ -10,6 +10,7 @@ without inventing data the paper withheld.
 """
 from __future__ import annotations
 
+import dataclasses
 import itertools
 import random
 from typing import Optional
@@ -116,7 +117,7 @@ def workload_records(name: str):
     for k, (mid, feed, obj) in enumerate(WORKLOADS[name]):
         spec = get_spec(mid)
         recs.extend(
-            r.__class__(f"{mid}#{k}", r.path, r.signature, r.bytes, r.position)
+            dataclasses.replace(r, model_id=f"{mid}#{k}")
             for r in records_from_spec(spec)
         )
     return recs
@@ -141,7 +142,7 @@ def construct_missing(seed: int = 17) -> dict:
         recs = []
         for k, (mid, f, o) in enumerate(models):
             recs.extend(
-                r.__class__(f"{mid}#{k}", r.path, r.signature, r.bytes, r.position)
+                dataclasses.replace(r, model_id=f"{mid}#{k}")
                 for r in records_from_spec(get_spec(mid))
             )
         frac = potential_savings(recs)["fraction_saved"]

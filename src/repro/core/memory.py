@@ -12,28 +12,29 @@ from typing import Iterable, Optional
 import numpy as np
 
 from repro.core.signatures import LayerRecord
-from repro.models.vision import ModelSpec
 
 # Activation footprint model for the vision zoo: intermediates scale with the
 # spatial resolution schedule; calibrated so Table-1 "run" columns land near
-# the paper's measurements (run ≈ load + act_base * batch).
+# the paper's measurements (run ≈ load + act_base * batch).  ``spec`` args
+# are duck-typed descriptors (``family``/``bytes`` attrs) — core stays
+# model-agnostic.
 _ACT_BASE_GB = {
     "resnet": 0.11, "vgg": 0.10, "yolo": 0.17, "ssd": 0.07,
     "frcnn": 1.40, "inception": 0.04, "mobilenet": 0.03,
 }
 
 
-def activation_bytes(spec: ModelSpec, batch: int) -> int:
+def activation_bytes(spec, batch: int) -> int:
     base = _ACT_BASE_GB.get(spec.family, 0.08)
     # sub-linear batch growth (allocator reuse), matching Table 1 ratios
     return int(base * 1e9 * (1 + 0.75 * (batch - 1)))
 
 
-def load_bytes(spec: ModelSpec) -> int:
+def load_bytes(spec) -> int:
     return spec.bytes
 
 
-def run_bytes(spec: ModelSpec, batch: int) -> int:
+def run_bytes(spec, batch: int) -> int:
     return load_bytes(spec) + activation_bytes(spec, batch)
 
 
@@ -90,7 +91,7 @@ class WorkloadMemory:
         return {"min": self.min_bytes, "50%": self.mid50, "75%": self.mid75}[name]
 
 
-def workload_memory(specs: Iterable[ModelSpec], batch: int = 1) -> WorkloadMemory:
+def workload_memory(specs: Iterable, batch: int = 1) -> WorkloadMemory:
     specs = list(specs)
     per_model_run = [run_bytes(s, batch) for s in specs]
     min_bytes = max(per_model_run)

@@ -268,6 +268,20 @@ def default_layer_key(path: str) -> str:
     return path.rsplit("/", 1)[0] if "/" in path else path
 
 
+def calibration_activations(members: dict, batch: dict) -> dict:
+    """Activation payload for the scorer/surrogate, computed through each
+    family's ``MergeableAdapter`` — the policy layer never calls a family's
+    private tap helpers (DESIGN.md P3 boundary).
+
+    ``members``: {model_id: (adapter, cfg, params)}.  The same ``batch``
+    runs through every model so similarities compare responses to identical
+    inputs.  Returns {model_id: {layer_key: (N, ...) array}}."""
+    return {
+        mid: adapter.layer_activations(cfg, params, batch)
+        for mid, (adapter, cfg, params) in members.items()
+    }
+
+
 class RepresentationSimilarityScorer(MemoryForwardScorer):
     """Training-free prefilter: prune group members whose calibration-batch
     activations diverge from the rest of their column, *before* any retrain
@@ -291,6 +305,16 @@ class RepresentationSimilarityScorer(MemoryForwardScorer):
         self.pruned_groups = 0
         self._sim_cache: dict = {}
         self._gram_cache: dict = {}
+
+    @classmethod
+    def from_adapters(cls, members: dict, batch: dict,
+                      min_similarity: float = 0.5,
+                      layer_key: Optional[Callable] = None):
+        """Build the scorer through the adapter contract:
+        ``members = {model_id: (adapter, cfg, params)}`` plus one shared
+        calibration batch — any registered family calibrates."""
+        return cls(calibration_activations(members, batch), min_similarity,
+                   layer_key=layer_key)
 
     def _gram(self, record: LayerRecord):
         lk = self._layer_key(record.path)
@@ -423,6 +447,15 @@ class CoherenceSurrogateTrainer:
         self.probe = RepresentationSimilarityScorer(
             activations, min_similarity, layer_key=layer_key)
         self.calls = 0
+
+    @classmethod
+    def from_adapters(cls, members: dict, batch: dict,
+                      min_similarity: float = 0.5,
+                      layer_key: Optional[Callable] = None):
+        """Adapter-contract constructor, mirroring
+        ``RepresentationSimilarityScorer.from_adapters``."""
+        return cls(calibration_activations(members, batch), min_similarity,
+                   layer_key=layer_key)
 
     def train(self, store, models, group=None):
         from repro.core.merging import MergeResult

@@ -4,15 +4,18 @@ identity matches (op kind + every shape hyperparameter), *excluding* weights.
 
 Two sources of layers:
 
-* :class:`repro.models.vision.ModelSpec` descriptors — each ``LayerSpec``
-  is one layer; signature = (kind, shape).
-* live parameter pytrees (LM zoo / small CNNs) — each leaf is one layer;
-  signature = (semantic kind derived from the path tail, shape, dtype).
-  For scan-stacked leaves (leading layer axis) the caller may ask for
-  *sliced* records so each of the L stacked layers is its own appearance.
+* layer-spec descriptors (duck-typed: anything with ``.layers`` entries
+  carrying ``name``/``signature``/``bytes``, e.g. the vision zoo's
+  ``ModelSpec``) — each entry is one layer; signature = (kind, shape).
+* live parameter pytrees (any zoo family, via
+  ``MergeableAdapter.records``) — each leaf is one layer; signature =
+  (semantic kind derived from the path tail, shape, dtype).  Works on
+  ``eval_shape`` trees too, so descriptor-scale and live records share ONE
+  extraction path.
 
 A :class:`LayerRecord` is one appearance of one layer in one model; the
-grouping machinery (groups.py) clusters records by signature.
+grouping machinery (groups.py) clusters records by signature.  This module
+is model-agnostic: it never imports a concrete family.
 """
 from __future__ import annotations
 
@@ -21,7 +24,6 @@ from typing import Any, Iterable, Optional
 
 import numpy as np
 
-from repro.models.vision import ModelSpec
 from repro.utils.tree import flatten_paths, leaf_bytes
 
 
@@ -73,7 +75,9 @@ def _kind_from_path(path: str) -> str:
     return "/".join(parts)
 
 
-def records_from_spec(spec: ModelSpec, model_id: Optional[str] = None) -> list[LayerRecord]:
+def records_from_spec(spec: Any, model_id: Optional[str] = None) -> list[LayerRecord]:
+    """One record per descriptor layer.  ``spec`` is duck-typed (``name`` +
+    ``layers`` with per-layer ``name``/``signature``/``bytes``)."""
     mid = model_id or spec.name
     n = max(len(spec.layers), 1)
     return [

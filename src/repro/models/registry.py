@@ -1,27 +1,46 @@
-"""Uniform adapter over the model zoo.
+"""Uniform adapters over the model zoo.
 
-Every family exposes the same call surface so the trainer / server / dry-run
-can be generic:
+Two registries live here:
 
-    fam = get_family("moe")
-    params = fam.init(cfg, key)
-    loss   = fam.loss(cfg, params, batch)          # train_step target
-    logits, cache = fam.prefill(cfg, params, ...)  # serving
-    logits, cache = fam.decode_step(cfg, params, cache, tokens)
+* **ModelFamily** — the training/serving call surface (init / loss / prefill /
+  decode_step) the trainer, server and dry-run consume:
+
+      fam = get_family("moe")
+      params = fam.init(cfg, key)
+      loss   = fam.loss(cfg, params, batch)          # train_step target
+      logits, cache = fam.prefill(cfg, params, ...)  # serving
+      logits, cache = fam.decode_step(cfg, params, cache, tokens)
+
+* **MergeableAdapter** (DESIGN.md P3) — the model-facing contract of the
+  merge pipeline.  GEMEL's claim is that architectural *similarity*, not a
+  specific architecture, makes layer sharing profitable (§4), so everything
+  the planner / calibrator / serving engine needs from a model is behind one
+  interface:
+
+      a = get_adapter("small_cnn")
+      recs  = a.records(cfg, params, model_id)        # signature extraction
+      acts  = a.layer_activations(cfg, params, batch) # CKA calibration taps
+      split = a.split(cfg)                            # prefix/suffix serving
+      reg   = a.registered(cfg, model_id, key)        # planner retraining
+
+  ``repro.core`` and ``repro.serving`` consume adapters only — never a
+  family's private helpers (scripts/ci.sh greps for violations).
 
 ``batch`` layouts per family (all include "labels" and optional "mask"):
     dense/moe/ssm/griffin:  {"tokens": (B,S) i32}
     vlm:                    + {"patch_embeds": (B,P,d) f}
     encdec:                 {"src_embeds": (B,Ssrc,d) f, "tokens": (B,Stgt)}
+    small_cnn:              {"images": (B,32,32,3) f}
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Any, Callable, Optional
 
+import jax
 import jax.numpy as jnp
 
-from repro.models import encdec, griffin, moe, ssm, transformer, vlm
+from repro.models import encdec, griffin, moe, ssm, transformer, vision, vlm
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,8 +82,325 @@ FAMILIES: dict[str, ModelFamily] = {
         "encdec", encdec.EncDecConfig, encdec.init, encdec.loss_fn,
         encdec.forward, None, encdec.decode_step, encdec.prefill,
     ),
+    # small_cnn is just another family: the GEMEL vision models reach the
+    # pipeline through the same registries as the LM zoo.
+    "small_cnn": ModelFamily(
+        "small_cnn", vision.SmallCNNConfig, vision.init_small_cnn,
+        vision.small_cnn_loss, vision.small_cnn_forward, has_decode=False,
+    ),
 }
 
 
 def get_family(name: str) -> ModelFamily:
     return FAMILIES[name]
+
+
+# ---------------------------------------------------------------------------
+# MergeableAdapter — the merge pipeline's model-facing contract (DESIGN.md P3)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefixSplit:
+    """A cfg-bound split of one model into a mergeable trunk and a private
+    head.  ``prefix``/``suffix`` take (params, x) / (params, feats) — the
+    ``ModelProgram`` call shape — and ``suffix(prefix(x))`` must equal the
+    adapter's ``forward`` bitwise (tests/test_adapters.py).  The callables are
+    cached per (adapter, cfg), so every group member hands the serving engine
+    the *same* function objects and a shared-prefix group compiles once."""
+
+    prefix: Callable  # (params, x) -> feats
+    suffix: Callable  # (params, feats) -> out
+    prefix_paths: frozenset  # flat param paths the prefix reads
+
+
+class MergeableAdapter:
+    """One model family's view of the merge pipeline.
+
+    Capability tiers (README has the family matrix):
+
+    * **merge** (every adapter): ``records`` — one :class:`LayerRecord` per
+      param leaf via the shared ``records_from_params`` path, so spec- and
+      params-derived records flow through identical grouping machinery.
+      Works on ``eval_shape`` trees — descriptor-scale planning allocates
+      nothing.
+    * **calibrate** (``can_calibrate``): ``calibration_batch`` +
+      ``layer_activations`` — activation probes keyed by param-path prefix
+      (``core.policy.default_layer_key``) feeding the CKA similarity scorer
+      and the coherence surrogate trainer, plus ``loss``/``accuracy`` so
+      ``StagedPlanner`` retraining is family-agnostic (``registered``).
+    * **split-serve** (``can_split``): ``split(cfg)`` — prefix/suffix
+      callables + prefix paths for the engine's shared-prefix batched
+      execution (``ModelProgram.from_adapter``).
+    """
+
+    name: str = "adapter"
+    family: Optional[str] = None  # FAMILIES key this adapter wraps, if any
+    can_calibrate: bool = False
+    can_split: bool = False
+
+    def __init__(self):
+        self._bound: dict = {}  # (kind, cfg) -> cached cfg-bound artifact
+
+    # -- model surface --------------------------------------------------------
+
+    def default_config(self):
+        raise NotImplementedError
+
+    def init(self, cfg, key):
+        raise NotImplementedError
+
+    def forward(self, cfg, params, x):
+        raise NotImplementedError
+
+    def loss(self, cfg, params, batch):
+        raise NotImplementedError
+
+    def accuracy(self, cfg, params, batch):
+        raise NotImplementedError
+
+    # -- merge: signature extraction ------------------------------------------
+
+    def records(self, cfg, params, model_id: str) -> list:
+        """LayerRecords for grouping — the ONE records path every family
+        shares (kind-from-path, shape, dtype signatures)."""
+        from repro.core.signatures import records_from_params
+
+        return records_from_params(params, model_id)
+
+    def eval_params(self, cfg):
+        """Parameter tree of ShapeDtypeStructs — records/prefix-path
+        extraction without allocating weights (pod-scale sizing)."""
+        return jax.eval_shape(lambda: self.init(cfg, jax.random.PRNGKey(0)))
+
+    # -- calibrate ------------------------------------------------------------
+
+    def calibration_batch(self, cfg, key, n: int) -> dict:
+        """A synthetic batch usable by ``loss``/``accuracy``/
+        ``layer_activations`` — run the SAME batch through every candidate
+        model so CKA compares responses to identical inputs."""
+        raise NotImplementedError(f"{self.name}: no calibration support")
+
+    def layer_activations(self, cfg, params, batch: dict) -> dict:
+        """{layer_key: (N, ...) activations} where ``layer_key`` is the
+        param-path prefix ``core.policy.default_layer_key`` maps record
+        paths onto (conformance-tested per family)."""
+        raise NotImplementedError(f"{self.name}: no calibration support")
+
+    # -- split-serve ----------------------------------------------------------
+
+    def split(self, cfg) -> PrefixSplit:
+        """Prefix/suffix serving split, cached per cfg (see
+        :class:`PrefixSplit` for why caching matters)."""
+        key = ("split", self._cfg_key(cfg))
+        sp = self._bound.get(key)
+        if sp is None:
+            sp = self._build_split(cfg)
+            self._bound[key] = sp
+        return sp
+
+    def _build_split(self, cfg) -> PrefixSplit:
+        raise NotImplementedError(f"{self.name}: no prefix/suffix split")
+
+    def bound_forward(self, cfg) -> Callable:
+        """(params, x) forward closure, cached per cfg so instances of one
+        family share a single callable (and therefore jit traces)."""
+        key = ("forward", self._cfg_key(cfg))
+        fn = self._bound.get(key)
+        if fn is None:
+            def fn(params, x, _self=self, _cfg=cfg):
+                return _self.forward(_cfg, params, x)
+
+            self._bound[key] = fn
+        return fn
+
+    @staticmethod
+    def _cfg_key(cfg):
+        try:
+            hash(cfg)
+            return cfg
+        except TypeError:
+            return id(cfg)
+
+    # -- planner glue ---------------------------------------------------------
+
+    def registered(self, cfg, model_id: str, key, n_batches: int = 2,
+                   batch_size: int = 8, accuracy_target: float = 0.9,
+                   original_accuracy: Optional[float] = None):
+        """A ``RegisteredModel`` whose loss/accuracy/data all come from this
+        adapter — what makes ``StagedPlanner`` + ``MergeTrainer`` retraining
+        family-agnostic."""
+        from repro.core.validation import RegisteredModel
+
+        ks = jax.random.split(key, n_batches + 1)
+        train = [self.calibration_batch(cfg, ks[i], batch_size)
+                 for i in range(n_batches)]
+        val = self.calibration_batch(cfg, ks[-1], batch_size)
+        return RegisteredModel(
+            model_id,
+            lambda p, b: self.loss(cfg, p, b),
+            lambda p, b: self.accuracy(cfg, p, b),
+            lambda epoch: train, val, accuracy_target, original_accuracy,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Concrete adapters
+# ---------------------------------------------------------------------------
+
+
+class SmallCNNAdapter(MergeableAdapter):
+    """The paper's reduced-scale vision models — full merge / calibrate /
+    split-serve support, now reached exclusively through this contract."""
+
+    name = "small_cnn"
+    family = "small_cnn"
+    can_calibrate = True
+    can_split = True
+
+    def default_config(self):
+        return vision.SmallCNNConfig(task="classification", n_classes=4,
+                                     depth=1, width=8, n_stages=2)
+
+    def init(self, cfg, key):
+        return vision.init_small_cnn(cfg, key)
+
+    def forward(self, cfg, params, x):
+        return vision.small_cnn_forward(cfg, params, x)
+
+    def loss(self, cfg, params, batch):
+        return vision.small_cnn_loss(cfg, params, batch)
+
+    def accuracy(self, cfg, params, batch):
+        return vision.small_cnn_accuracy(cfg, params, batch)
+
+    def calibration_batch(self, cfg, key, n: int) -> dict:
+        kx, ky, kl = jax.random.split(key, 3)
+        batch = {"images": jax.random.normal(kx, (n, 32, 32, 3), cfg.dtype)}
+        if cfg.task == "classification":
+            batch["labels"] = jax.random.randint(ky, (n,), 0, cfg.n_classes)
+        else:
+            g = 32 // (2 ** (cfg.n_stages - 1))
+            batch["cls_targets"] = jax.random.randint(
+                ky, (n, g, g, cfg.n_anchors), 0, cfg.n_classes)
+            batch["loc_targets"] = jax.random.normal(
+                kl, (n, g, g, cfg.n_anchors * 4))
+        return batch
+
+    def layer_activations(self, cfg, params, batch: dict) -> dict:
+        return vision.small_cnn_layer_activations(cfg, params, batch["images"])
+
+    def _build_split(self, cfg) -> PrefixSplit:
+        paths = vision.small_cnn_prefix_paths(cfg, self.eval_params(cfg))
+
+        def prefix(params, x, _cfg=cfg):
+            return vision.small_cnn_features(_cfg, params, x)
+
+        def suffix(params, feats, _cfg=cfg):
+            return vision.small_cnn_head(_cfg, params, feats)
+
+        return PrefixSplit(prefix, suffix, paths)
+
+
+class DenseLMAdapter(MergeableAdapter):
+    """Dense decoder-only transformers.  Calibration/split need per-layer
+    param paths, so those tiers require ``scan_layers=False`` configs (the
+    fine-tune-variant pod scenario); records work for any config, including
+    scan-stacked full-scale ones (whole-stack groups)."""
+
+    name = "dense"
+    family = "dense"
+    can_calibrate = True
+    can_split = True
+
+    def default_config(self):
+        return transformer.DenseLMConfig(
+            name="tiny-lm", n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+            head_dim=16, d_ff=64, vocab_size=64, vocab_multiple=32,
+            tie_embeddings=False, scan_layers=False,
+        )
+
+    def init(self, cfg, key):
+        return transformer.init(cfg, key)
+
+    def forward(self, cfg, params, x):
+        """One scoring/greedy-decode step: tokens (B, S) -> logits
+        (B, S, V).  Composed as ``head(trunk(x))`` so the serving split is
+        bitwise-identical by construction."""
+        return transformer.head(cfg, params, transformer.trunk(cfg, params, x))
+
+    def loss(self, cfg, params, batch):
+        return transformer.loss_fn(cfg, params, batch)
+
+    def accuracy(self, cfg, params, batch):
+        logits = self.forward(cfg, params, batch["tokens"])
+        pred = jnp.argmax(logits[..., : cfg.vocab_size], axis=-1)
+        return jnp.mean((pred == batch["labels"]).astype(jnp.float32))
+
+    def calibration_batch(self, cfg, key, n: int, seq: int = 8) -> dict:
+        toks = jax.random.randint(key, (n, seq + 1), 0, cfg.vocab_size)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    def layer_activations(self, cfg, params, batch: dict) -> dict:
+        return transformer.layer_activations(cfg, params, batch["tokens"])
+
+    def _build_split(self, cfg) -> PrefixSplit:
+        paths = transformer.trunk_paths(self.eval_params(cfg))
+
+        def prefix(params, x, _cfg=cfg):
+            return transformer.trunk(_cfg, params, x)
+
+        def suffix(params, feats, _cfg=cfg):
+            return transformer.head(_cfg, params, feats)
+
+        return PrefixSplit(prefix, suffix, paths)
+
+
+class FamilyAdapter(MergeableAdapter):
+    """Records-only adapter over a :class:`ModelFamily`: any zoo family
+    merges (shared records path over params or ``eval_shape`` trees);
+    calibration taps and serving splits need a family-specific adapter."""
+
+    def __init__(self, fam: ModelFamily):
+        super().__init__()
+        self.fam = fam
+        self.name = fam.name
+        self.family = fam.name
+
+    def default_config(self):
+        return self.fam.config_cls()
+
+    def init(self, cfg, key):
+        return self.fam.init(cfg, key)
+
+    def forward(self, cfg, params, x):
+        return self.fam.forward(cfg, params, x)
+
+    def loss(self, cfg, params, batch):
+        return self.fam.loss(cfg, params, batch)
+
+
+# ---------------------------------------------------------------------------
+# Adapter registry
+# ---------------------------------------------------------------------------
+
+ADAPTERS: dict[str, MergeableAdapter] = {}
+
+
+def register_adapter(adapter: MergeableAdapter) -> MergeableAdapter:
+    ADAPTERS[adapter.name] = adapter
+    return adapter
+
+
+def get_adapter(name: str) -> MergeableAdapter:
+    return ADAPTERS[name]
+
+
+def adapter_names() -> list:
+    return sorted(ADAPTERS)
+
+
+register_adapter(SmallCNNAdapter())
+register_adapter(DenseLMAdapter())
+for _name in ("moe", "ssm", "hybrid", "vlm", "encdec"):
+    register_adapter(FamilyAdapter(FAMILIES[_name]))

@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.distributed.sharding import constrain
 from repro.models import layers as L
+from repro.utils.tree import flatten_paths
 
 
 @dataclasses.dataclass(frozen=True)
@@ -135,19 +136,34 @@ def _qkv(cfg: DenseLMConfig, p_attn: dict, x: jax.Array, positions: jax.Array):
     return q, k, v
 
 
-def _block(cfg: DenseLMConfig, p: dict, x: jax.Array, positions: jax.Array) -> jax.Array:
-    """Full-sequence (training / prefill-style) block."""
+def _block(cfg: DenseLMConfig, p: dict, x: jax.Array, positions: jax.Array,
+           taps: Optional[dict] = None, tap_prefix: str = "") -> jax.Array:
+    """Full-sequence (training / prefill-style) block.
+
+    ``taps``, when given, collects each sub-layer's response keyed by the
+    param-path prefix that produces it ("blocks/0/attn", "blocks/0/mlp", ...)
+    — the calibration probes the representation-similarity scorer consumes.
+    Parameter-free norms get no tap (no record path maps onto them)."""
     h = L.apply_norm(cfg.norm, x, p["ln1"])
+    if taps is not None and p["ln1"]:
+        taps[tap_prefix + "ln1"] = h
     q, k, v = _qkv(cfg, p["attn"], h, positions)
     q = constrain(q, "batch", "seq", "heads", None)
     k = constrain(k, "batch", "seq", "kv_heads", None)
     v = constrain(v, "batch", "seq", "kv_heads", None)
     mask = L.attention_mask(positions, positions, causal=True, window=cfg.window)
     attn = L.gqa_attention(q, k, v, mask)
-    x = x + L.dense(attn.reshape(x.shape[0], x.shape[1], -1), p["attn"]["wo"])
+    a = L.dense(attn.reshape(x.shape[0], x.shape[1], -1), p["attn"]["wo"])
+    if taps is not None:
+        taps[tap_prefix + "attn"] = a
+    x = x + a
     x = constrain(x, "batch", "seq_act", "embed")
     h = L.apply_norm(cfg.norm, x, p["ln2"])
+    if taps is not None and p["ln2"]:
+        taps[tap_prefix + "ln2"] = h
     ff = L.ffn(h, p["mlp"], act=cfg.act, gated=cfg.gated_ffn)
+    if taps is not None:
+        taps[tap_prefix + "mlp"] = ff
     x = x + ff
     return constrain(x, "batch", "seq_act", "embed")
 
@@ -197,6 +213,82 @@ def loss_fn(cfg: DenseLMConfig, params: dict, batch: dict) -> jax.Array:
     return L.softmax_cross_entropy(
         logits, batch["labels"], valid_vocab=cfg.vocab_size, mask=batch.get("mask")
     )
+
+
+# ---------------------------------------------------------------------------
+# Mergeable split (DESIGN.md P3): trunk prefix / head suffix + calibration taps
+# ---------------------------------------------------------------------------
+
+
+def trunk(cfg: DenseLMConfig, params: dict, tokens: jax.Array,
+          positions: Optional[jax.Array] = None,
+          taps: Optional[dict] = None) -> jax.Array:
+    """Embedding + transformer blocks — the mergeable *prefix* fine-tune
+    variants share.  Returns pre-final-norm hidden states (B, S, d).  The op
+    sequence matches :func:`forward` exactly, so ``head(trunk(x))`` is
+    bitwise-identical to the composed forward.  ``taps`` (per-layer probes,
+    keyed by param-path prefix) requires ``scan_layers=False`` — stacked
+    leaves have no per-layer paths to key on."""
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = L.embed(tokens, params["embed"]["table"])
+    x = constrain(x, "batch", "seq_act", "embed")
+    if taps is not None:
+        if cfg.scan_layers:
+            raise ValueError("calibration taps need scan_layers=False")
+        taps["embed"] = x
+
+    block = _maybe_remat(cfg, lambda p, h: _block(cfg, p, h, positions))
+    if cfg.scan_layers:
+        def body(h, p):
+            return block(p, h), None
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+    else:
+        for i in range(cfg.n_layers):
+            if taps is None:
+                x = block(params["blocks"][str(i)], x)
+            else:
+                x = _block(cfg, params["blocks"][str(i)], x, positions,
+                           taps=taps, tap_prefix=f"blocks/{i}/")
+    return x
+
+
+def head(cfg: DenseLMConfig, params: dict, x: jax.Array,
+         taps: Optional[dict] = None) -> jax.Array:
+    """Final norm + unembedding — the private *suffix* fan-out."""
+    x = L.apply_norm(cfg.norm, x, params["final_norm"])
+    if taps is not None and params["final_norm"]:
+        taps["final_norm"] = x
+    if cfg.tie_embeddings:
+        logits = L.unembed(x, params["embed"]["table"], transpose=True)
+    else:
+        logits = L.unembed(x, params["lm_head"]["w"], transpose=False)
+    if cfg.logit_softcap is not None:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    logits = constrain(logits, "batch", "seq_act", "vocab")
+    if taps is not None and not cfg.tie_embeddings:
+        taps["lm_head"] = logits
+    return logits
+
+
+def trunk_paths(params: dict) -> frozenset:
+    """Flat param paths read by :func:`trunk` (everything outside the
+    final-norm/lm-head suffix) — what the engine checks for shared-key
+    binding.  Works on ``eval_shape`` trees."""
+    return frozenset(p for p in flatten_paths(params)
+                     if not p.startswith(("final_norm/", "lm_head/")))
+
+
+def layer_activations(cfg: DenseLMConfig, params: dict,
+                      tokens: jax.Array) -> dict:
+    """Calibration-batch activations for every layer, keyed by param-path
+    prefix — the LM analogue of the vision zoo's tap helper, consumed via
+    ``MergeableAdapter.layer_activations``.  Non-scan configs only."""
+    taps: dict = {}
+    x = trunk(cfg, params, tokens, taps=taps)
+    head(cfg, params, x, taps=taps)
+    return {k: np.asarray(v) for k, v in taps.items()}
 
 
 # ---------------------------------------------------------------------------

@@ -15,9 +15,7 @@ count.  The scheduler/simulator logic is unchanged — only constants move.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
-
-from repro.models.vision import get_spec
+from typing import Callable, Optional
 
 PCIE_GBPS = 16.0  # effective host->GPU bandwidth used by the paper's numbers
 
@@ -78,11 +76,23 @@ class ModelCosts:
         return max(self.run_mem(batch) - self.load_gb, 0.0)
 
 
-def costs_for(model_id: str) -> ModelCosts:
+def default_spec_provider() -> Callable:
+    """Default `model_id -> layer-spec descriptor` source (shared by
+    ``costs_for`` interpolation and ``workload.build_instances``): the
+    paper's vision-zoo descriptors, resolved through the workload-config
+    layer so serving code never imports a concrete model family (DESIGN.md
+    P3 boundary)."""
+    from repro.configs.vision_workloads import get_spec
+
+    return get_spec
+
+
+def costs_for(model_id: str, spec_provider: Optional[Callable] = None) -> ModelCosts:
     if model_id in _TABLES:
         lg, r1, r2, r4, lms, t1, t2, t4 = _TABLES[model_id]
         return ModelCosts(model_id, lg, {1: r1, 2: r2, 4: r4}, lms,
                           {1: t1, 2: t2, 4: t4})
+    get_spec = spec_provider or default_spec_provider()
     spec = get_spec(model_id)
     anchor_id = _FAMILY_ANCHOR[spec.family]
     a = costs_for(anchor_id)

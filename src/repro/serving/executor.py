@@ -166,6 +166,27 @@ class ModelProgram:
     suffix: Optional[Callable] = None  # (params, batched_feats) -> batched_out
     prefix_paths: Optional[frozenset] = None
 
+    @classmethod
+    def from_adapter(cls, adapter, instance_id: str,
+                     model_id: Optional[str] = None, cfg=None,
+                     split: bool = True) -> "ModelProgram":
+        """Build a program from a registered ``MergeableAdapter`` — the one
+        way models meet the engine (DESIGN.md P3); no more hand-wired
+        closures per call site.  The adapter caches the cfg-bound forward
+        and prefix/suffix callables, so every instance of one (adapter, cfg)
+        hands the engine the SAME function objects and a shared-prefix group
+        compiles once (see ``MergeAwareEngine._prefix_fn``)."""
+        cfg = adapter.default_config() if cfg is None else cfg
+        fwd = adapter.bound_forward(cfg)
+        sp = adapter.split(cfg) if (split and adapter.can_split) else None
+        return cls(
+            instance_id, model_id if model_id is not None else instance_id,
+            forward=fwd,
+            prefix=sp.prefix if sp else None,
+            suffix=sp.suffix if sp else None,
+            prefix_paths=sp.prefix_paths if sp else None,
+        )
+
 
 class AsyncDMA:
     """Models an async host->device copy engine: ``start`` begins a transfer
@@ -241,8 +262,10 @@ class MergeAwareEngine:
         if missing:
             raise ValueError(f"programs/instances mismatch: {missing}")
         self._fwd = {p.instance_id: jax.jit(p.forward) for p in programs}
-        self._prefix = {p.instance_id: (jax.jit(p.prefix) if p.prefix else None)
-                        for p in programs}
+        # prefixes compile lazily, cached per (callable identity, binding
+        # signature): instances whose prefix weights are one physical buffer
+        # set share ONE jitted prefix instead of tracing per instance
+        self._prefix_compiled: dict = {}
         self._suffix = {p.instance_id: (jax.jit(p.suffix) if p.suffix else None)
                         for p in programs}
         self.dma = AsyncDMA(dma_gbps, simulate=simulate_dma)
@@ -254,9 +277,54 @@ class MergeAwareEngine:
         self.stats = {
             "prefix_runs": 0, "suffix_runs": 0, "forward_runs": 0,
             "microbatches": 0, "param_lookups": 0, "idle_sleeps": 0,
+            "prefix_jits": 0,
         }
         self._groups: list = []
         self._groups_epoch = -1
+        self._sigs: dict = {}  # iid -> binding signature, per groups epoch
+
+    # -- prefix compile cache (one trace per shared-prefix group) --------------
+
+    @staticmethod
+    def _callable_key(fn):
+        """Trace-sharing identity of a prefix callable: closures produced
+        from one body over the same captured values (e.g. per-instance
+        lambdas from a list comprehension, or an adapter's cached split)
+        compare equal, so a 4-member shared-prefix group maps onto ONE
+        jitted prefix.  Falls back to object identity when the closure or
+        defaults are unhashable."""
+        code = getattr(fn, "__code__", None)
+        if code is None:
+            return id(fn)
+        try:
+            cells = tuple(id(c.cell_contents) for c in (fn.__closure__ or ()))
+            key = (code, fn.__defaults__, cells)
+            hash(key)
+            return key
+        except (TypeError, ValueError):
+            return id(fn)
+
+    def _binding_sig(self, iid: str) -> tuple:
+        p = self.programs[iid]
+        sig = self._sigs.get(iid)
+        if sig is None:
+            sig = self.store.binding_signature(p.model_id, p.prefix_paths)
+            self._sigs[iid] = sig
+        return sig
+
+    def _prefix_fn(self, iid: str):
+        """Jitted prefix for ``iid``.  Keyed by (callable, binding
+        signature): group members bound to identical prefix keys reuse the
+        same compiled entry — ``prefix_jits`` in the stats counts distinct
+        compilations, so a 4-member group reports 1, not 4."""
+        p = self.programs[iid]
+        key = (self._callable_key(p.prefix), self._binding_sig(iid))
+        fn = self._prefix_compiled.get(key)
+        if fn is None:
+            fn = jax.jit(p.prefix)
+            self._prefix_compiled[key] = fn
+            self.stats["prefix_jits"] += 1
+        return fn
 
     # -- plan -----------------------------------------------------------------
 
@@ -266,6 +334,7 @@ class MergeAwareEngine:
         binding epoch: an unmerge splits a group on the next serve pass."""
         if self._groups_epoch == self.store.epoch:
             return self._groups
+        self._sigs = {}  # epoch moved: binding signatures may have changed
         groups: list = []
         by_sig: dict = {}
         for inst in self.scheduler.order:
@@ -274,12 +343,18 @@ class MergeAwareEngine:
             if not (p.prefix and p.suffix and p.prefix_paths):
                 groups.append([iid])
                 continue
-            sig = self.store.binding_signature(p.model_id, p.prefix_paths)
+            sig = self._binding_sig(iid)
             if sig in by_sig:
                 by_sig[sig].append(iid)
             else:
                 by_sig[sig] = member = [iid]
                 groups.append(member)
+        # evict compiled prefixes whose binding signature died with the old
+        # epoch — a long-lived engine replanning repeatedly must not pin
+        # every historical jitted wrapper (and its executables) forever
+        self._prefix_compiled = {
+            k: v for k, v in self._prefix_compiled.items() if k[1] in by_sig
+        }
         self._groups = groups
         self._groups_epoch = self.store.epoch
         return groups
@@ -357,7 +432,7 @@ class MergeAwareEngine:
                 rows_by_iid.setdefault(r.instance_id, []).append(j)
             if shared:
                 lead = group[0]
-                feats = self._prefix[lead](self._params(lead), batch)
+                feats = self._prefix_fn(lead)(self._params(lead), batch)
                 self.stats["prefix_runs"] += 1
                 outs, pos = {}, {}
                 for iid, idx in rows_by_iid.items():
@@ -394,7 +469,7 @@ class MergeAwareEngine:
             for b in self.buckets:
                 batch, _ = pad_stack([payload] * b, b)
                 if len(group) > 1:
-                    feats = self._prefix[group[0]](self._params(group[0]), batch)
+                    feats = self._prefix_fn(group[0])(self._params(group[0]), batch)
                     for iid in group:
                         jax.block_until_ready(
                             self._suffix[iid](self._params(iid), feats))
@@ -475,5 +550,9 @@ class MergeAwareEngine:
             "binding_epochs": self.store.epoch - epoch_start + 1,
             "dma_stall_s": self.dma.stall_s - stall_before,
             "dma_hidden_s": self.dma.hidden_s - hidden_before,
+            # lifetime count (compiles usually happen in warmup, so the
+            # per-call delta under-reports): distinct compiled prefixes —
+            # a 4-member shared group contributes 1, not 4
+            "prefix_jits_total": self.stats["prefix_jits"],
             **{k: v - stats_before[k] for k, v in self.stats.items()},
         }

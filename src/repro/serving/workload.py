@@ -22,13 +22,12 @@ weights, so workload-scale experiments don't allocate memory.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Callable, Optional
 
 from repro.configs.vision_workloads import WORKLOADS
 from repro.core.groups import enumerate_groups, stable_group_id
 from repro.core.signatures import records_from_spec
-from repro.models.vision import get_spec
-from repro.serving.costs import costs_for
+from repro.serving.costs import costs_for, default_spec_provider
 from repro.serving.scheduler import Instance
 
 
@@ -39,13 +38,15 @@ def build_instances(
     accuracies: Optional[dict] = None,  # instance_id -> accuracy multiplier
     workloads: Optional[dict] = None,
     plan=None,  # MergePlan consumed when merged == "plan"
+    spec_provider: Optional[Callable] = None,  # model_id -> layer-spec descriptor
 ) -> list:
     wl = (workloads or WORKLOADS)[name]
+    get_spec = spec_provider or default_spec_provider()
     recs_by_inst = {}
     for k, (mid, feed, obj) in enumerate(wl):
         iid = f"{mid}#{k}"
         recs_by_inst[iid] = [
-            r.__class__(iid, r.path, r.signature, r.bytes, r.position)
+            dataclasses.replace(r, model_id=iid)
             for r in records_from_spec(get_spec(mid))
         ]
 

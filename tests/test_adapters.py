@@ -1,0 +1,286 @@
+"""MergeableAdapter contract (DESIGN.md P3): per-family conformance, the
+engine's shared-prefix compile cache, and the heterogeneous LM scenario —
+transformer fine-tune variants planned, plan-shipped, hot-swapped and served
+with shared-prefix batched decoding.
+
+The LM scenario is imported from ``benchmarks.lm_merging`` (the shipping
+benchmark) so test and benchmark can never drift apart."""
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import MergePlan, ParamStore
+from repro.core.policy import default_layer_key
+from repro.models.registry import ADAPTERS, get_adapter
+from repro.serving.costs import costs_for
+from repro.serving.executor import MergeAwareEngine, ModelProgram, Request
+from repro.serving.workload import instances_from_store
+from repro.utils.tree import flatten_paths
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+from benchmarks import lm_merging as LM  # noqa: E402
+
+SPLIT_FAMILIES = sorted(n for n, a in ADAPTERS.items() if a.can_split)
+CALIB_FAMILIES = sorted(n for n, a in ADAPTERS.items() if a.can_calibrate)
+
+
+def _payload(adapter, cfg, key):
+    """A serving payload matching the family's batch layout."""
+    batch = adapter.calibration_batch(cfg, key, 2)
+    return batch.get("images", batch.get("tokens"))
+
+
+# ---------------------------------------------------------------------------
+# conformance: every registered family honours the contract
+# ---------------------------------------------------------------------------
+
+
+def test_every_family_extracts_records_without_allocation():
+    for name, adapter in sorted(ADAPTERS.items()):
+        cfg = adapter.default_config()
+        shapes = adapter.eval_params(cfg)  # ShapeDtypeStructs, no weights
+        recs = adapter.records(cfg, shapes, "m0")
+        flat = flatten_paths(shapes)
+        assert len(recs) == len(flat), name
+        assert {r.path for r in recs} == set(flat), name
+        assert all(r.model_id == "m0" and r.bytes > 0 for r in recs), name
+
+
+@pytest.mark.parametrize("family", SPLIT_FAMILIES)
+def test_split_composition_matches_forward_bitwise(family):
+    adapter = get_adapter(family)
+    cfg = adapter.default_config()
+    params = adapter.init(cfg, jax.random.PRNGKey(0))
+    x = _payload(adapter, cfg, jax.random.PRNGKey(1))
+    sp = adapter.split(cfg)
+    composed = sp.suffix(params, sp.prefix(params, x))
+    direct = adapter.forward(cfg, params, x)
+    assert np.array_equal(np.asarray(composed), np.asarray(direct))
+
+
+@pytest.mark.parametrize("family", SPLIT_FAMILIES)
+def test_prefix_paths_subset_of_flat_param_paths(family):
+    adapter = get_adapter(family)
+    cfg = adapter.default_config()
+    sp = adapter.split(cfg)
+    flat = set(flatten_paths(adapter.eval_params(cfg)))
+    assert sp.prefix_paths, family
+    assert sp.prefix_paths <= flat
+    assert sp.prefix_paths < flat  # a private suffix must remain
+    assert adapter.split(cfg) is sp  # cached: group members share callables
+
+
+@pytest.mark.parametrize("family", CALIB_FAMILIES)
+def test_layer_activation_keys_follow_layer_key_convention(family):
+    """Tap keys must map onto record paths via the policy's ``_layer_key``
+    convention — bidirectionally: no orphan probes, no unprobed layers."""
+    adapter = get_adapter(family)
+    cfg = adapter.default_config()
+    params = adapter.init(cfg, jax.random.PRNGKey(0))
+    batch = adapter.calibration_batch(cfg, jax.random.PRNGKey(1), 4)
+    acts = adapter.layer_activations(cfg, params, batch)
+    layer_keys = {default_layer_key(r.path)
+                  for r in adapter.records(cfg, params, "m0")}
+    assert set(acts) == layer_keys
+    n = len(batch.get("images", batch.get("tokens")))
+    assert all(v.shape[0] == n for v in acts.values())
+
+
+@pytest.mark.parametrize("family", CALIB_FAMILIES)
+def test_loss_accuracy_on_calibration_batch(family):
+    adapter = get_adapter(family)
+    cfg = adapter.default_config()
+    params = adapter.init(cfg, jax.random.PRNGKey(0))
+    batch = adapter.calibration_batch(cfg, jax.random.PRNGKey(1), 4)
+    assert np.isfinite(float(adapter.loss(cfg, params, batch)))
+    assert 0.0 <= float(adapter.accuracy(cfg, params, batch)) <= 1.0
+
+
+def test_scorer_and_surrogate_from_adapters_match_plain_construction():
+    """The adapter-facing classmethods are the same object as composing
+    calibration_activations + the plain constructor."""
+    from repro.core import RepresentationSimilarityScorer, enumerate_groups
+    from repro.core.policy import (
+        CoherenceSurrogateTrainer, calibration_activations,
+    )
+
+    adapter = get_adapter("small_cnn")
+    cfg = adapter.default_config()
+    zoo = {m: adapter.init(cfg, jax.random.PRNGKey(i))
+           for i, m in enumerate(("A", "B"))}
+    members = {m: (adapter, cfg, p) for m, p in zoo.items()}
+    batch = adapter.calibration_batch(cfg, jax.random.PRNGKey(7), 16)
+
+    via_cls = RepresentationSimilarityScorer.from_adapters(members, batch)
+    plain = RepresentationSimilarityScorer(
+        calibration_activations(members, batch))
+    recs = sum((adapter.records(cfg, p, m) for m, p in zoo.items()), [])
+    groups = enumerate_groups(recs)
+    kept_a, _ = via_cls.prefilter([g for g in groups])
+    kept_b, _ = plain.prefilter([g for g in groups])
+    assert [(g.signature, sorted(r.key for r in g.records)) for g in kept_a] \
+        == [(g.signature, sorted(r.key for r in g.records)) for g in kept_b]
+
+    surrogate = CoherenceSurrogateTrainer.from_adapters(members, batch)
+    store = ParamStore.from_models(zoo)
+    for g in groups[:1]:
+        result = surrogate.train(store, [], group=g)
+    assert surrogate.calls == 1 and result.accuracies is not None
+
+
+def test_small_cnn_reaches_pipeline_through_family_registry():
+    from repro.models.registry import get_family
+
+    fam = get_family("small_cnn")
+    cfg = fam.config_cls(depth=1, width=8, n_stages=2, n_classes=4)
+    params = fam.init(cfg, jax.random.PRNGKey(0))
+    adapter = get_adapter("small_cnn")
+    out_f = fam.forward(cfg, params, jnp.zeros((1, 32, 32, 3)))
+    out_a = adapter.forward(cfg, params, jnp.zeros((1, 32, 32, 3)))
+    assert np.array_equal(np.asarray(out_f), np.asarray(out_a))
+
+
+# ---------------------------------------------------------------------------
+# engine satellite: shared-prefix group compiles ONE prefix
+# ---------------------------------------------------------------------------
+
+
+def _merged_cnn_store(adapter, cfg, mids):
+    params = {m: adapter.init(cfg, jax.random.PRNGKey(i))
+              for i, m in enumerate(mids)}
+    store = ParamStore.from_models(params)
+    from repro.core import enumerate_groups
+
+    recs = sum((adapter.records(cfg, p, m) for m, p in params.items()), [])
+    for g in enumerate_groups(recs):
+        if not any(r.path.startswith("head/") for r in g.records):
+            store.merge_group(g)
+    return store
+
+
+def _cnn_engine(store, adapter, cfg, mids, **kw):
+    programs = [ModelProgram.from_adapter(adapter, m, cfg=cfg) for m in mids]
+    return MergeAwareEngine(
+        store, instances_from_store(store, "tiny-yolo", model_ids=list(mids)),
+        programs, capacity_bytes=10**9,
+        costs={"tiny-yolo": costs_for("tiny-yolo")}, **kw,
+    )
+
+
+def test_shared_prefix_group_compiles_prefix_once():
+    """4 instances bound to one shared trunk: the engine must map all four
+    onto ONE compiled prefix (keyed by callable + binding signature), not
+    jit per instance."""
+    adapter = get_adapter("small_cnn")
+    cfg = adapter.default_config()
+    mids = ("A", "B", "C", "D")
+    store = _merged_cnn_store(adapter, cfg, mids)
+    eng = _cnn_engine(store, adapter, cfg, mids, buckets=(1, 2, 4))
+    assert eng.prefix_groups() == [list(mids)]
+
+    fns = {m: eng._prefix_fn(m) for m in mids}
+    assert len(set(map(id, fns.values()))) == 1  # one compiled entry
+    assert eng.stats["prefix_jits"] == 1
+
+    img = jax.random.normal(jax.random.PRNGKey(5), (1, 32, 32, 3))
+    for i in range(8):
+        eng.submit(Request(mids[i % 4], img, 0.0, 30.0))
+    stats = eng.serve(horizon_s=30.0, warmup=img)
+    assert stats["completed"] == 8
+    assert stats["prefix_jits_total"] == 1  # serving added no extra compiles
+
+
+def test_prefix_recompiles_only_when_binding_signature_changes():
+    adapter = get_adapter("small_cnn")
+    cfg = adapter.default_config()
+    mids = ("A", "B")
+    params = {m: adapter.init(cfg, jax.random.PRNGKey(i))
+              for i, m in enumerate(mids)}
+    store = ParamStore.from_models(params)
+    from repro.core import enumerate_groups
+
+    recs = sum((adapter.records(cfg, p, m) for m, p in params.items()), [])
+    trunk = [g for g in enumerate_groups(recs)
+             if not any(r.path.startswith("head/") for r in g.records)]
+    for g in trunk:
+        store.merge_group(g)
+    eng = _cnn_engine(store, adapter, cfg, mids)
+    eng._prefix_fn("A")
+    eng._prefix_fn("B")
+    assert eng.stats["prefix_jits"] == 1  # merged: one entry for the pair
+
+    for g in trunk:
+        store.unmerge(g)
+    eng.prefix_groups()  # re-plan at the new epoch
+    fa, fb = eng._prefix_fn("A"), eng._prefix_fn("B")
+    assert fa is not fb  # private bindings: distinct entries again
+    assert eng.stats["prefix_jits"] == 3
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous scenario: transformer fine-tune variants, plan -> hot swap ->
+# shared-prefix batched decode, bitwise vs direct forwards.  The scenario
+# definition (zoo, planner, engine, requests, bitwise check) lives in
+# benchmarks/lm_merging.py — the tests assert the shipping benchmark.
+# ---------------------------------------------------------------------------
+
+
+def _run_lm_scenario(retrain: bool):
+    adapter = get_adapter("dense")
+    cfg = adapter.default_config()
+    res, cloud = LM.plan_variants(adapter, cfg, retrain=retrain)
+
+    # >= 1 committed cross-variant group, trunk fully shared across (A, B)
+    assert res.committed >= 1
+    deltas = res.plan.binding_deltas()
+    trunk = adapter.split(cfg).prefix_paths
+    for p in trunk:
+        assert deltas.get(("lm-A", p)) == deltas.get(("lm-B", p)) is not None
+    # foreign C never inherits the fine-tune pair's nonlinear layers
+    assert not any(p.startswith("blocks/") and "attn" in p
+                   for (m, p) in deltas if m == "lm-C")
+
+    # ship the plan; hot swap into a live engine with queued requests
+    plan = MergePlan.from_json(res.plan.to_json())
+    edge = ParamStore.from_models(LM.lm_zoo(adapter, cfg))
+    eng = LM.lm_engine(edge, adapter, cfg, LM.MIDS)
+    reqs = LM.lm_requests(cfg, LM.MIDS)
+    for r in reqs:
+        eng.submit(r)
+    before = edge.resident_bytes()
+    swap = eng.apply_plan(plan)
+    assert swap["epoch_bumps"] == 1
+    assert swap["pending_requests"] == len(reqs)
+    assert edge.resident_bytes() < before  # memory actually saved
+    groups = eng.prefix_groups()
+    assert ["lm-A", "lm-B"] in groups  # shared-prefix decode for the pair
+
+    stats = eng.serve(horizon_s=60.0, warmup=reqs[0].payload)
+    assert stats["completed"] == len(reqs)
+    assert stats["prefix_runs"] >= 1
+    assert LM.verify_bitwise(eng, edge, adapter, cfg)
+    return cloud, plan
+
+
+def test_lm_variants_plan_hot_swap_and_serve_bitwise():
+    _run_lm_scenario(retrain=False)
+
+
+@pytest.mark.slow
+def test_lm_real_retraining_commits_and_ships_trained_weights():
+    """The retraining loop, family-agnostic: MergeTrainer jointly trains the
+    LM variants through the merged store (gradients sum into shared
+    buffers), the plan carries the trained values, and a fresh edge store
+    reproduces them bitwise."""
+    cloud, plan = _run_lm_scenario(retrain=True)
+    assert plan.shared_weights  # trained values ship with the plan
+    adapter = get_adapter("dense")
+    edge = ParamStore.from_models(LM.lm_zoo(adapter, adapter.default_config()))
+    edge.apply_plan(plan)
+    for key in plan.shared_weights:
+        np.testing.assert_array_equal(np.asarray(edge.buffers[key]),
+                                      np.asarray(cloud.buffers[key]))
