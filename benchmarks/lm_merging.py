@@ -11,19 +11,26 @@ Two parts, both speaking the ``MergeableAdapter`` contract (DESIGN.md P3):
    Optimal and GEMEL(cap) levels, plus the cross-architecture overlap matrix
    (artifact ``lm_merging.json``).
 
-2. **Merge-and-serve** (runnable, tiny scale): three transformer fine-tune
-   variants — (A, B) common provenance with divergent heads, C independent —
-   go through the full pipeline: CKA-prefiltered ``StagedPlanner`` search
-   over the trunk (heads stay private, the paper's shared-stem case),
-   serialized ``MergePlan``, hot swap into a live ``MergeAwareEngine`` on a
-   fresh store, shared-prefix batched decode steps.  The prefilter keeps the
-   whole (A, B) trunk — one prefix run serves both variants' requests — and
-   prunes foreign C down to its projection-invariant layers (embedding, norm
-   scales: linear-CKA cannot distinguish random projections of identical
-   inputs, so those columns legitimately survive at signature granularity).
-   Records memory saved and merged-vs-unmerged throughput into
+2. **Merge-and-serve** (runnable, tiny scale): five transformer fine-tune
+   variants — (A, B, D, E) common trunk provenance with divergent heads, C
+   independent — go through the full pipeline: CKA-prefiltered
+   ``StagedPlanner`` search over the trunk (heads stay private, the paper's
+   shared-stem case), serialized ``MergePlan``, hot swap into a live
+   ``MergeAwareEngine`` on a fresh store, shared-prefix batched decode
+   steps.  The prefilter keeps the whole (A, B, D, E) trunk — one prefix
+   run serves all four variants' requests — and prunes foreign C down to
+   its projection-invariant layers (embedding, norm scales: linear-CKA
+   cannot distinguish random projections of identical inputs, so those
+   columns legitimately survive at signature granularity).  Request
+   deadlines interleave the four variants, so every shared micro-batch
+   carries rows of all four heads: the per-member path fans out four suffix
+   dispatches per micro-batch, the suffix bank (DESIGN.md S2) exactly ONE —
+   the merged scenario is served both ways and the bank must clear ≥1.5×
+   the per-member engine's requests/sec.  Records memory saved,
+   merged-vs-unmerged throughput and the bank-vs-fan-out speedup into
    ``BENCH_lm_serve.json`` and verifies that merged serving outputs are
-   BITWISE identical to direct per-model forwards on the same bindings.
+   BITWISE identical to direct per-model forwards on the same bindings
+   (micro-batches reconstructed deterministically from the EDF order).
 
 ``--retrain`` swaps the calibration-coherence surrogate for the real joint
 ``MergeTrainer`` — a *plumbing* proof that the family-agnostic retraining
@@ -60,9 +67,9 @@ POD_WORKLOAD = {
 }
 
 MIN_SIMILARITY = 0.7
-MIDS = ("lm-A", "lm-B", "lm-C")
+MIDS = ("lm-A", "lm-B", "lm-C", "lm-D", "lm-E")  # C is the foreign init
 BUCKETS = (1, 2, 4)
-REQS_PER_MODEL = 4
+REQS_PER_MODEL = 8
 
 
 def _records_for(arch, variant):
@@ -145,14 +152,18 @@ def _perturb(params, seed, scale, select=None):
 
 
 def lm_zoo(adapter, cfg) -> dict:
-    """(A, B): common trunk provenance, independently 'fine-tuned' heads.
+    """(A, B, D, E): common trunk provenance, independently 'fine-tuned'
+    heads — the merged group whose suffix fan-out the bank fuses.
     C: independent init — architecturally identical, functionally foreign."""
     base = adapter.init(cfg, jax.random.PRNGKey(0))
     head = lambda p: p.startswith(("final_norm/", "lm_head/"))  # noqa: E731
-    b = _perturb(base, 1, 0.01, select=lambda p: not head(p))  # shared trunk
-    b = _perturb(b, 2, 1.0, select=head)  # divergent head
-    return {"lm-A": base, "lm-B": b,
-            "lm-C": adapter.init(cfg, jax.random.PRNGKey(42))}
+    zoo = {"lm-A": base, "lm-C": adapter.init(cfg, jax.random.PRNGKey(42))}
+    for i, mid in enumerate(("lm-B", "lm-D", "lm-E")):
+        # 0.005: divergence compounds through depth, and the CKA cluster
+        # must keep all four trunks mutually coherent at every block
+        v = _perturb(base, 2 * i + 1, 0.005, select=lambda p: not head(p))
+        zoo[mid] = _perturb(v, 2 * i + 2, 1.0, select=head)  # divergent head
+    return zoo
 
 
 def plan_variants(adapter, cfg, retrain: bool = False):
@@ -185,7 +196,7 @@ def plan_variants(adapter, cfg, retrain: bool = False):
     return res, store
 
 
-def lm_engine(store, adapter, cfg, mids):
+def lm_engine(store, adapter, cfg, mids, suffix_bank=True):
     from repro.serving.costs import costs_for
     from repro.serving.executor import MergeAwareEngine, ModelProgram
     from repro.serving.workload import instances_from_store
@@ -197,13 +208,15 @@ def lm_engine(store, adapter, cfg, mids):
         store, instances_from_store(store, "tiny-yolo", model_ids=list(mids)),
         programs, capacity_bytes=10**9,
         costs={"tiny-yolo": costs_for("tiny-yolo")}, buckets=BUCKETS,
+        suffix_bank=suffix_bank,
     )
 
 
 def lm_requests(cfg, mids):
-    """REQS_PER_MODEL decode-step requests per variant; deadlines group each
-    variant's requests into one full bucket (EDF order == submission order)
-    so direct forwards can replay the exact batched shapes."""
+    """REQS_PER_MODEL decode-step requests per variant; deadlines interleave
+    the variants round-robin, so a merged group's EDF micro-batches carry
+    rows of EVERY member — the per-member path pays one suffix dispatch per
+    member per micro-batch, the suffix bank exactly one."""
     from repro.serving.executor import Request
 
     reqs = []
@@ -211,12 +224,12 @@ def lm_requests(cfg, mids):
         for j in range(REQS_PER_MODEL):
             toks = jax.random.randint(jax.random.PRNGKey(100 + 7 * i + j),
                                       (1, 8), 0, cfg.vocab_size)
-            reqs.append(Request(m, toks, 0.0, 10.0 * (i + 1) + 1e-3 * j))
+            reqs.append(Request(m, toks, 0.0, 10.0 + (j * len(mids) + i) * 1e-3))
     return reqs
 
 
-def _serve(store, adapter, cfg, mids):
-    eng = lm_engine(store, adapter, cfg, mids)
+def _serve(store, adapter, cfg, mids, suffix_bank=True):
+    eng = lm_engine(store, adapter, cfg, mids, suffix_bank=suffix_bank)
     reqs = lm_requests(cfg, mids)
     warm = reqs[0].payload
     for r in reqs:
@@ -227,26 +240,37 @@ def _serve(store, adapter, cfg, mids):
 
 def verify_bitwise(eng, store, adapter, cfg) -> bool:
     """Merged serving outputs vs direct per-model forwards on the same
-    bindings: shared groups replay through fresh jits of the same split
-    callables, singletons through a fresh jit of the composed forward —
-    every row must match BITWISE."""
-    from repro.serving.workload import pad_stack
+    bindings.  The engine's micro-batches are reconstructed exactly
+    (``deadline_microbatches`` over each group's completed requests is
+    deterministic, and a group drains in one visit), then shared groups
+    replay prefix-once + per-member jitted suffix on the SAME padded batch
+    and singletons replay the composed forward — every served row must
+    match BITWISE, including rows that went through the suffix bank."""
+    from repro.serving.workload import deadline_microbatches, pad_stack
 
     sp = adapter.split(cfg)
-    by_mid: dict = {}
+    res = {id(c.request): c.result for c in eng.completions}
+    by_iid: dict = {}
     for c in eng.completions:
-        by_mid.setdefault(c.request.instance_id, []).append(c)
-    shared = {m for g in eng.prefix_groups() if len(g) > 1 for m in g}
+        by_iid.setdefault(c.request.instance_id, []).append(c.request)
+    pj, sj = jax.jit(sp.prefix), jax.jit(sp.suffix)
+    fj = jax.jit(adapter.bound_forward(cfg))
     ok = True
-    for mid, comps in by_mid.items():
-        batch, n = pad_stack([c.request.payload for c in comps], REQS_PER_MODEL)
-        params = store.materialize(mid)
-        if mid in shared:
-            direct = jax.jit(sp.suffix)(params, jax.jit(sp.prefix)(params, batch))
-        else:
-            direct = jax.jit(adapter.bound_forward(cfg))(params, batch)
-        for row, c in enumerate(comps[:n]):
-            ok &= np.array_equal(np.asarray(c.result), np.asarray(direct[row]))
+    for group in eng.prefix_groups():
+        greqs = [r for iid in group for r in by_iid.get(iid, [])]
+        for mb in deadline_microbatches(greqs, BUCKETS):
+            batch, _ = pad_stack([r.payload for r in mb.requests], mb.bucket)
+            if len(group) > 1:
+                feats = pj(store.materialize(group[0]), batch)
+                for j, r in enumerate(mb.requests):
+                    direct = sj(store.materialize(r.instance_id), feats)[j]
+                    ok &= np.array_equal(np.asarray(res[id(r)]),
+                                         np.asarray(direct))
+            else:
+                out = fj(store.materialize(group[0]), batch)
+                for j, r in enumerate(mb.requests):
+                    ok &= np.array_equal(np.asarray(res[id(r)]),
+                                         np.asarray(out[j]))
     return ok
 
 
@@ -268,7 +292,18 @@ def merge_and_serve(retrain: bool = False) -> tuple:
     base_resident = edge_unmerged.resident_bytes()
     _, base_stats = _serve(edge_unmerged, adapter, cfg, MIDS)
 
-    # EDGE merged: live engine + hot plan swap, then the same trace
+    # EDGE merged, per-member fan-out: live engine + hot plan swap, then the
+    # same trace with the suffix bank disabled (the prior engine hot path)
+    edge_nobank = ParamStore.from_models(lm_zoo(adapter, cfg))
+    eng_nobank = lm_engine(edge_nobank, adapter, cfg, MIDS, suffix_bank=False)
+    eng_nobank.apply_plan(plan)
+    reqs = lm_requests(cfg, MIDS)
+    for r in reqs:
+        eng_nobank.submit(r)
+    nobank_stats = eng_nobank.serve(horizon_s=60.0, warmup=reqs[0].payload)
+
+    # EDGE merged, suffix bank: every private head of the merged group in
+    # ONE dispatch per micro-batch (DESIGN.md S2)
     edge = ParamStore.from_models(lm_zoo(adapter, cfg))
     eng = lm_engine(edge, adapter, cfg, MIDS)
     swap = eng.apply_plan(plan)
@@ -284,13 +319,22 @@ def merge_and_serve(retrain: bool = False) -> tuple:
          "completed": base_stats["completed"],
          "requests_per_s": base_stats["requests_per_s"],
          "prefix_runs": base_stats["prefix_runs"],
+         "suffix_dispatches": base_stats["suffix_dispatches"],
          "sla_fraction": base_stats["sla_fraction"]},
         {"path": "merged-plan", "resident_bytes": merged_resident,
+         "completed": nobank_stats["completed"],
+         "requests_per_s": nobank_stats["requests_per_s"],
+         "prefix_runs": nobank_stats["prefix_runs"],
+         "suffix_dispatches": nobank_stats["suffix_dispatches"],
+         "sla_fraction": nobank_stats["sla_fraction"]},
+        {"path": "merged-plan-bank", "resident_bytes": merged_resident,
          "completed": merged_stats["completed"],
          "requests_per_s": merged_stats["requests_per_s"],
          "prefix_runs": merged_stats["prefix_runs"],
+         "suffix_dispatches": merged_stats["suffix_dispatches"],
          "sla_fraction": merged_stats["sla_fraction"]},
     ]
+    shared_mbs = merged_stats["microbatches"] - merged_stats["forward_runs"]
     derived = {
         "trainer": "merge-trainer" if retrain else "coherence-surrogate",
         "plan_bytes": len(payload),
@@ -306,6 +350,14 @@ def merge_and_serve(retrain: bool = False) -> tuple:
         "outputs_bitwise_identical": bitwise,
         "throughput_ratio": (merged_stats["requests_per_s"]
                              / max(base_stats["requests_per_s"], 1e-9)),
+        # suffix-bank acceptance (DESIGN.md S2): one dispatch per shared
+        # micro-batch, >=1.5x the per-member fan-out engine on this scenario
+        "bank_speedup_rps": (merged_stats["requests_per_s"]
+                             / max(nobank_stats["requests_per_s"], 1e-9)),
+        "suffix_dispatches": merged_stats["suffix_dispatches"],
+        "suffix_dispatches_nobank": nobank_stats["suffix_dispatches"],
+        "shared_microbatches": shared_mbs,
+        "bank_hits": merged_stats["bank_hits"],
     }
     return rows, derived
 

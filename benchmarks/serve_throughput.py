@@ -17,6 +17,12 @@ regime (§3.2).
               fan-out, cached materialisation, async DMA prefetch hiding the
               next pair's load behind the current pair's compute.
 
+With ``--suffix-bank`` an ``engine-nobank`` row is added so the suffix-bank
+fan-out (DESIGN.md S2) is quantified against the per-member suffix path on
+identical traffic: the bank engine must dispatch exactly ONE suffix launch
+per shared micro-batch (``suffix_dispatches == microbatches``) instead of
+one per member.
+
 Records requests/sec, SLA fraction, cache hit rate and the materialisation
 count vs binding epochs (cache verification) into ``BENCH_serve.json``.
 """
@@ -103,13 +109,14 @@ def _run_seed(n_requests, horizon_s, deadline_s):
     return stats
 
 
-def _run_engine(n_requests, horizon_s, deadline_s):
+def _run_engine(n_requests, horizon_s, deadline_s, suffix_bank=True):
     from repro.serving.executor import MergeAwareEngine, ModelProgram, Request
 
     adapter, cfg, store, insts, costs, capacity = _build()
     programs = [ModelProgram.from_adapter(adapter, m, cfg=cfg) for m in ORDER]
     eng = MergeAwareEngine(store, insts, programs, capacity_bytes=capacity,
-                           costs=costs, buckets=BUCKETS)
+                           costs=costs, buckets=BUCKETS,
+                           suffix_bank=suffix_bank)
     trace = _trace(n_requests, deadline_s)
     for iid, payload, dl in trace:
         eng.submit(Request(iid, payload, 0.0, dl))
@@ -125,7 +132,8 @@ def _run_engine(n_requests, horizon_s, deadline_s):
 
 
 def run(n_requests: int = 240, horizon_s: float = 90.0,
-        deadline_s: float = 80.0, quiet: bool = False) -> dict:
+        deadline_s: float = 80.0, quiet: bool = False,
+        suffix_bank_lane: bool = False) -> dict:
     seed = _run_seed(n_requests, horizon_s, deadline_s)
     engine = _run_engine(n_requests, horizon_s, deadline_s)
     speedup = engine["requests_per_s"] / max(seed["requests_per_s"], 1e-9)
@@ -150,11 +158,31 @@ def run(n_requests: int = 240, horizon_s: float = 90.0,
         "materializations": engine["materializations_total"],
         "prefix_runs": engine["prefix_runs"],
         "suffix_runs": engine["suffix_runs"],
+        "suffix_dispatches": engine["suffix_dispatches"],
+        "bank_hits": engine["bank_hits"],
         "microbatches": engine["microbatches"],
         "dma_stall_s": engine["dma_stall_s"],
         "dma_hidden_s": engine["dma_hidden_s"],
         "n_requests": n_requests,
     }
+    if suffix_bank_lane:
+        nobank = _run_engine(n_requests, horizon_s, deadline_s,
+                             suffix_bank=False)
+        rows.append(
+            {"path": "engine-nobank", "completed": nobank["completed"],
+             "requests_per_s": nobank["requests_per_s"],
+             "sla_fraction": nobank["sla_fraction"],
+             "cache_hit_rate": nobank["cache_hit_rate"],
+             "elapsed_s": nobank["elapsed_s"]})
+        derived.update({
+            "suffix_runs_nobank": nobank["suffix_runs"],
+            "suffix_dispatches_nobank": nobank["suffix_dispatches"],
+            "bank_speedup_rps": (engine["requests_per_s"]
+                                 / max(nobank["requests_per_s"], 1e-9)),
+            # every shared micro-batch must fan out in exactly ONE dispatch
+            "bank_dispatch_per_microbatch": (
+                engine["suffix_dispatches"] / max(engine["microbatches"], 1)),
+        })
     return emit("BENCH_serve", rows, derived, quiet=quiet)
 
 
@@ -165,8 +193,12 @@ def main(argv=None):
                          "the artifact is always written either way")
     ap.add_argument("--requests", type=int, default=240)
     ap.add_argument("--horizon", type=float, default=90.0)
+    ap.add_argument("--suffix-bank", action="store_true",
+                    help="add the engine-nobank comparison row quantifying "
+                         "the suffix-bank fan-out (DESIGN.md S2)")
     args = ap.parse_args(argv)
-    out = run(n_requests=args.requests, horizon_s=args.horizon, quiet=args.json)
+    out = run(n_requests=args.requests, horizon_s=args.horizon, quiet=args.json,
+              suffix_bank_lane=args.suffix_bank)
     if args.json:
         print(json.dumps(out, indent=2, default=str))
 

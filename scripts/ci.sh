@@ -23,9 +23,10 @@ fi
 python -m pytest -x -q -m "not slow"
 python -m pytest -q -m "slow"
 
-# serving engine vs seed path; fails loudly if the artifact can't be built
+# serving engine vs seed path, with the suffix-bank lane (engine-nobank
+# comparison row); fails loudly if the artifact can't be built
 # (-m so the `benchmarks` package resolves from the repo root)
-python -m benchmarks.serve_throughput --json --requests 240
+python -m benchmarks.serve_throughput --json --requests 240 --suffix-bank
 # staged-planner search: similarity prefilter vs memory-forward + plan round-trip
 python -m benchmarks.plan_search --json
 # LM merge-and-serve through the adapter contract (surrogate trainer — the
@@ -35,4 +36,24 @@ python -m benchmarks.lm_merging --json
 test -f artifacts/benchmarks/BENCH_serve.json
 test -f artifacts/benchmarks/BENCH_plan.json
 test -f artifacts/benchmarks/BENCH_lm_serve.json
+
+# suffix-bank acceptance (DESIGN.md S2): exactly ONE suffix dispatch per
+# congruent micro-batch, strictly fewer dispatches than the per-member
+# fan-out, >=1.5x the per-member engine rps on the merged LM scenario, and
+# bitwise-identical outputs in ref mode
+python - <<'PY'
+import json
+s = json.load(open("artifacts/benchmarks/BENCH_serve.json"))["derived"]
+assert s["suffix_dispatches"] < s["suffix_runs_nobank"], s
+assert s["bank_dispatch_per_microbatch"] == 1.0, s
+l = json.load(open("artifacts/benchmarks/BENCH_lm_serve.json"))["derived"]
+assert l["outputs_bitwise_identical"], l
+assert l["suffix_dispatches"] == l["shared_microbatches"], l
+assert l["suffix_dispatches"] < l["suffix_dispatches_nobank"], l
+assert l["bank_speedup_rps"] >= 1.5, l
+print("suffix-bank acceptance OK")
+PY
+
+# interpret-mode smoke for the bank kernel (kernel body executed on CPU)
+REPRO_KERNEL_MODE=interpret python -m pytest -q tests/test_kernels.py -k bank_matmul
 echo "CI OK"

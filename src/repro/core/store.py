@@ -258,6 +258,41 @@ class ParamStore:
         self.materializations[model_id] = self.materializations.get(model_id, 0) + 1
         return tree
 
+    @staticmethod
+    def bank_id(model_ids: tuple) -> str:
+        """Materialisation-counter key for a suffix bank over ``model_ids``."""
+        return "bank:" + "+".join(model_ids)
+
+    def materialize_bank(self, model_ids: tuple, paths=None) -> dict:
+        """Suffix-bank materialisation (DESIGN.md S2): one pytree whose every
+        leaf is the members' buffers stacked on a leading bank axis —
+        ``leaf[path][n] == buffers[bindings[model_ids[n]][path]]`` — restricted
+        to ``paths`` (typically the private-suffix paths).  Members must bind
+        congruent shapes at every stacked path; the serving engine checks the
+        adapters' suffix signatures before asking for a bank.
+
+        Cached per binding epoch exactly like :meth:`materialize_cached`
+        (``bump_epoch`` clears the shared cache), so merge/unmerge/
+        ``update_buffers``/``apply_plan`` all invalidate the bank; rebuild
+        counts land in :attr:`materializations` under :meth:`bank_id`."""
+        model_ids = tuple(model_ids)
+        pkey = None if paths is None else frozenset(paths)
+        ckey = ("__bank__", model_ids, pkey)
+        hit = self._cache.get(ckey)
+        if hit is not None:
+            return hit
+        use = sorted(self.bindings[model_ids[0]]) if paths is None else sorted(pkey)
+        flat = {
+            p: jax.numpy.stack(
+                [self.buffers[self.bindings[m][p]] for m in model_ids])
+            for p in use
+        }
+        tree = unflatten_paths(flat)
+        self._cache[ckey] = tree
+        bid = self.bank_id(model_ids)
+        self.materializations[bid] = self.materializations.get(bid, 0) + 1
+        return tree
+
     # -- accounting -----------------------------------------------------------
 
     def resident_bytes(self, model_ids: Optional[list] = None) -> int:

@@ -16,6 +16,7 @@ from typing import Optional
 import jax
 
 from repro.kernels import ref as _ref
+from repro.kernels.bank_matmul import bank_matmul as _bank_kernel
 from repro.kernels.decode_attention import decode_attention as _decode_kernel
 from repro.kernels.flash_attention import flash_attention as _flash_kernel
 from repro.kernels.mamba_scan import mamba_scan as _mamba_kernel
@@ -67,3 +68,15 @@ def page_gather(pool, page_table, mode: Optional[str] = None, **kw):
     if mode == "ref":
         return _ref.page_gather_ref(pool, page_table)
     return _gather_kernel(pool, page_table, interpret=(mode == "interpret"), **kw)
+
+
+def bank_matmul(x, w, b=None, mode: Optional[str] = None, **kw):
+    """Grouped GEMM over a leading bank axis: out[n] = x[n] @ w[n] (+ b[n]),
+    with x either (N, M, K) banked or (M, K) broadcast — the one-dispatch
+    suffix fan-out of a merged serving group (DESIGN.md S2).  The ref oracle
+    is an unrolled loop of the per-member contraction, so ref-mode serving
+    stays bitwise identical to the per-member path."""
+    mode = mode or default_mode()
+    if mode == "ref":
+        return _ref.bank_matmul_ref(x, w, b)
+    return _bank_kernel(x, w, b, interpret=(mode == "interpret"), **kw)

@@ -112,3 +112,24 @@ def page_gather_ref(
     """out[i] = pool[page_table[i]] — assemble a model's weights from the
     paged HBM pool (GEMEL partial-swap analogue)."""
     return jnp.take(pool, page_table, axis=0)
+
+
+def bank_matmul_ref(
+    x: jax.Array,  # (N, M, K) banked, or (M, K) broadcast across the bank
+    w: jax.Array,  # (N, K, F) stacked private weights
+    b: Optional[jax.Array] = None,  # (N, F) stacked biases
+) -> jax.Array:
+    """Suffix-bank grouped GEMM oracle: out[n] = x[n] @ w[n] (+ b[n]),
+    float32 accumulation.  Deliberately an UNROLLED loop of the exact
+    per-member contraction (not a batched einsum): under jit the result is
+    bitwise identical to running each member's matmul separately, which is
+    the serving engine's ref-mode parity contract (DESIGN.md S2)."""
+    N = w.shape[0]
+    outs = []
+    for i in range(N):
+        xi = x if x.ndim == 2 else x[i]
+        o = jnp.einsum("mk,kf->mf", xi, w[i], preferred_element_type=jnp.float32)
+        if b is not None:
+            o = o + b[i].astype(jnp.float32)
+        outs.append(o)
+    return jnp.stack(outs)

@@ -107,11 +107,21 @@ class PrefixSplit:
     ``ModelProgram`` call shape — and ``suffix(prefix(x))`` must equal the
     adapter's ``forward`` bitwise (tests/test_adapters.py).  The callables are
     cached per (adapter, cfg), so every group member hands the serving engine
-    the *same* function objects and a shared-prefix group compiles once."""
+    the *same* function objects and a shared-prefix group compiles once.
+
+    The optional suffix-bank tier (DESIGN.md S2): ``suffix_paths`` are the
+    flat param paths the suffix reads, ``suffix_signature`` a hashable
+    congruence fingerprint (equal fingerprints => the members' suffix leaves
+    stack into one bank), and ``bank_suffix(bank_params, feats) -> (N, ...)``
+    the fused fan-out — ONE dispatch for every private head of a merged
+    group, bitwise identical to the per-member path in ``ref`` kernel mode."""
 
     prefix: Callable  # (params, x) -> feats
     suffix: Callable  # (params, feats) -> out
     prefix_paths: frozenset  # flat param paths the prefix reads
+    suffix_paths: Optional[frozenset] = None  # flat paths the suffix reads
+    suffix_signature: Optional[tuple] = None  # bank-congruence fingerprint
+    bank_suffix: Optional[Callable] = None  # (bank_params, feats) -> (N, ...)
 
 
 class MergeableAdapter:
@@ -191,13 +201,39 @@ class MergeableAdapter:
 
     def split(self, cfg) -> PrefixSplit:
         """Prefix/suffix serving split, cached per cfg (see
-        :class:`PrefixSplit` for why caching matters)."""
+        :class:`PrefixSplit` for why caching matters).  Splits that declare
+        ``suffix_paths`` get a generic ``suffix_signature`` filled in, so
+        every splittable adapter is bank-eligible by default."""
         key = ("split", self._cfg_key(cfg))
         sp = self._bound.get(key)
         if sp is None:
             sp = self._build_split(cfg)
+            if sp.suffix_paths is not None and sp.suffix_signature is None:
+                sp = dataclasses.replace(
+                    sp, suffix_signature=self.suffix_signature(cfg, sp))
             self._bound[key] = sp
         return sp
+
+    def suffix_signature(self, cfg, sp: Optional[PrefixSplit] = None):
+        """Hashable congruence fingerprint of the private head: adapter
+        name, the cfg identity, and (path, shape, dtype) of every suffix
+        leaf.  Two programs with equal fingerprints stack their suffix
+        weights into one bank and the engine fans them out in a single
+        dispatch (DESIGN.md S2); unequal fingerprints fall back to the
+        per-member suffix path.  The cfg term matters: the bank executes
+        every member through the LEAD member's suffix closure, so heads that
+        are merely shape-congruent but semantically different under their
+        cfg (norm kind, logit softcap, ...) must never compare equal —
+        value-equal frozen-dataclass cfgs do, distinct semantics don't."""
+        from repro.utils.tree import flatten_paths
+
+        sp = self.split(cfg) if sp is None else sp
+        if sp.suffix_paths is None:
+            return None
+        flat = flatten_paths(self.eval_params(cfg))
+        return (self.name, self._cfg_key(cfg), tuple(sorted(
+            (p, tuple(flat[p].shape), str(flat[p].dtype))
+            for p in sp.suffix_paths)))
 
     def _build_split(self, cfg) -> PrefixSplit:
         raise NotImplementedError(f"{self.name}: no prefix/suffix split")
@@ -291,7 +327,8 @@ class SmallCNNAdapter(MergeableAdapter):
         return vision.small_cnn_layer_activations(cfg, params, batch["images"])
 
     def _build_split(self, cfg) -> PrefixSplit:
-        paths = vision.small_cnn_prefix_paths(cfg, self.eval_params(cfg))
+        ep = self.eval_params(cfg)
+        paths = vision.small_cnn_prefix_paths(cfg, ep)
 
         def prefix(params, x, _cfg=cfg):
             return vision.small_cnn_features(_cfg, params, x)
@@ -299,7 +336,12 @@ class SmallCNNAdapter(MergeableAdapter):
         def suffix(params, feats, _cfg=cfg):
             return vision.small_cnn_head(_cfg, params, feats)
 
-        return PrefixSplit(prefix, suffix, paths)
+        def bank_suffix(bank_params, feats, _cfg=cfg):
+            return vision.small_cnn_bank_head(_cfg, bank_params, feats)
+
+        return PrefixSplit(prefix, suffix, paths,
+                           suffix_paths=vision.small_cnn_suffix_paths(cfg, ep),
+                           bank_suffix=bank_suffix)
 
 
 class DenseLMAdapter(MergeableAdapter):
@@ -345,7 +387,8 @@ class DenseLMAdapter(MergeableAdapter):
         return transformer.layer_activations(cfg, params, batch["tokens"])
 
     def _build_split(self, cfg) -> PrefixSplit:
-        paths = transformer.trunk_paths(self.eval_params(cfg))
+        ep = self.eval_params(cfg)
+        paths = transformer.trunk_paths(ep)
 
         def prefix(params, x, _cfg=cfg):
             return transformer.trunk(_cfg, params, x)
@@ -353,7 +396,18 @@ class DenseLMAdapter(MergeableAdapter):
         def suffix(params, feats, _cfg=cfg):
             return transformer.head(_cfg, params, feats)
 
-        return PrefixSplit(prefix, suffix, paths)
+        if cfg.tie_embeddings:
+            # tied heads read the shared embed table: banking would stack
+            # the model's largest tensor N times and the vmap fallback is
+            # only allclose-grade — stay on the per-member suffix path
+            return PrefixSplit(prefix, suffix, paths)
+
+        def bank_suffix(bank_params, feats, _cfg=cfg):
+            return transformer.bank_head(_cfg, bank_params, feats)
+
+        return PrefixSplit(prefix, suffix, paths,
+                           suffix_paths=transformer.head_paths(ep),
+                           bank_suffix=bank_suffix)
 
 
 class FamilyAdapter(MergeableAdapter):

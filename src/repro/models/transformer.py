@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.distributed.sharding import constrain
+from repro.kernels import ops as kops
 from repro.models import layers as L
 from repro.utils.tree import flatten_paths
 
@@ -137,13 +138,20 @@ def _qkv(cfg: DenseLMConfig, p_attn: dict, x: jax.Array, positions: jax.Array):
 
 
 def _block(cfg: DenseLMConfig, p: dict, x: jax.Array, positions: jax.Array,
-           taps: Optional[dict] = None, tap_prefix: str = "") -> jax.Array:
+           taps: Optional[dict] = None, tap_prefix: str = "",
+           std_positions: bool = False) -> jax.Array:
     """Full-sequence (training / prefill-style) block.
 
     ``taps``, when given, collects each sub-layer's response keyed by the
     param-path prefix that produces it ("blocks/0/attn", "blocks/0/mlp", ...)
     — the calibration probes the representation-similarity scorer consumes.
-    Parameter-free norms get no tap (no record path maps onto them)."""
+    Parameter-free norms get no tap (no record path maps onto them).
+
+    ``std_positions=True`` (positions are the default contiguous arange)
+    routes attention through ``kernels.ops.flash_attention`` so
+    ``REPRO_KERNEL_MODE`` governs the serving hot path end to end — the
+    Pallas kernel on TPU, its interpret body for validation, the jnp oracle
+    on CPU.  Callers with custom position maps keep the masked reference."""
     h = L.apply_norm(cfg.norm, x, p["ln1"])
     if taps is not None and p["ln1"]:
         taps[tap_prefix + "ln1"] = h
@@ -151,8 +159,11 @@ def _block(cfg: DenseLMConfig, p: dict, x: jax.Array, positions: jax.Array,
     q = constrain(q, "batch", "seq", "heads", None)
     k = constrain(k, "batch", "seq", "kv_heads", None)
     v = constrain(v, "batch", "seq", "kv_heads", None)
-    mask = L.attention_mask(positions, positions, causal=True, window=cfg.window)
-    attn = L.gqa_attention(q, k, v, mask)
+    if std_positions:
+        attn = kops.flash_attention(q, k, v, causal=True, window=cfg.window)
+    else:
+        mask = L.attention_mask(positions, positions, causal=True, window=cfg.window)
+        attn = L.gqa_attention(q, k, v, mask)
     a = L.dense(attn.reshape(x.shape[0], x.shape[1], -1), p["attn"]["wo"])
     if taps is not None:
         taps[tap_prefix + "attn"] = a
@@ -184,12 +195,14 @@ def forward(cfg: DenseLMConfig, params: dict, tokens: jax.Array,
             positions: Optional[jax.Array] = None) -> jax.Array:
     """tokens (B, S) -> logits (B, S, padded_vocab) float32."""
     B, S = tokens.shape
+    std = positions is None
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
     x = L.embed(tokens, params["embed"]["table"])
     x = constrain(x, "batch", "seq_act", "embed")
 
-    block = _maybe_remat(cfg, lambda p, h: _block(cfg, p, h, positions))
+    block = _maybe_remat(
+        cfg, lambda p, h: _block(cfg, p, h, positions, std_positions=std))
     if cfg.scan_layers:
         def body(h, p):
             return block(p, h), None
@@ -230,6 +243,7 @@ def trunk(cfg: DenseLMConfig, params: dict, tokens: jax.Array,
     keyed by param-path prefix) requires ``scan_layers=False`` — stacked
     leaves have no per-layer paths to key on."""
     B, S = tokens.shape
+    std = positions is None
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
     x = L.embed(tokens, params["embed"]["table"])
@@ -239,7 +253,8 @@ def trunk(cfg: DenseLMConfig, params: dict, tokens: jax.Array,
             raise ValueError("calibration taps need scan_layers=False")
         taps["embed"] = x
 
-    block = _maybe_remat(cfg, lambda p, h: _block(cfg, p, h, positions))
+    block = _maybe_remat(
+        cfg, lambda p, h: _block(cfg, p, h, positions, std_positions=std))
     if cfg.scan_layers:
         def body(h, p):
             return block(p, h), None
@@ -250,7 +265,8 @@ def trunk(cfg: DenseLMConfig, params: dict, tokens: jax.Array,
                 x = block(params["blocks"][str(i)], x)
             else:
                 x = _block(cfg, params["blocks"][str(i)], x, positions,
-                           taps=taps, tap_prefix=f"blocks/{i}/")
+                           taps=taps, tap_prefix=f"blocks/{i}/",
+                           std_positions=std)
     return x
 
 
@@ -278,6 +294,54 @@ def trunk_paths(params: dict) -> frozenset:
     binding.  Works on ``eval_shape`` trees."""
     return frozenset(p for p in flatten_paths(params)
                      if not p.startswith(("final_norm/", "lm_head/")))
+
+
+def head_paths(params: dict, tied: bool = False) -> frozenset:
+    """Flat param paths read by :func:`head` — the private-suffix leaves the
+    serving engine stacks into a bank (DESIGN.md S2).  Tied-embedding models
+    read the embedding table inside the head, so it joins the set."""
+    out = frozenset(p for p in flatten_paths(params)
+                    if p.startswith(("final_norm/", "lm_head/")))
+    if tied:
+        out = out | {"embed/table"}
+    return out
+
+
+def bank_head(cfg: DenseLMConfig, bank_params: dict, x: jax.Array,
+              mode: Optional[str] = None) -> jax.Array:
+    """Every private head of a merged group in ONE dispatch (DESIGN.md S2).
+
+    ``bank_params`` holds the head leaves stacked on a leading bank axis N
+    (``ParamStore.materialize_bank``); ``x`` are the shared trunk hidden
+    states ``(B, S, d)`` all members consume.  Returns ``(N, B, S, V)`` —
+    row ``n`` equals :func:`head` on member ``n``'s params.
+
+    ``ref`` mode unrolls the per-member heads inside one trace (bitwise
+    identical to the per-member serving path — the oracle contract); the
+    other modes run the banked final norm followed by one
+    ``ops.bank_matmul`` grouped-GEMM unembedding.  Tied-embedding configs
+    are not banked (the adapter leaves ``bank_suffix`` unset)."""
+    n_bank = jax.tree_util.tree_leaves(bank_params)[0].shape[0]
+    mode = mode or kops.default_mode()
+    if mode == "ref":
+        members = [jax.tree_util.tree_map(lambda l: l[i], bank_params)
+                   for i in range(n_bank)]
+        return jnp.stack([head(cfg, m, x) for m in members])
+    if cfg.tie_embeddings:
+        raise ValueError("tied-embedding heads have no bank path")
+    fn = bank_params.get("final_norm") or {}
+    if fn:
+        xn = jax.vmap(lambda p: L.apply_norm(cfg.norm, x, p))(fn)
+    else:  # non-parametric norm: one shared normalisation, broadcast
+        xn = jnp.broadcast_to(L.apply_norm(cfg.norm, x, fn),
+                              (n_bank,) + x.shape)
+    B, S, d = x.shape
+    logits = kops.bank_matmul(xn.reshape(n_bank, B * S, d),
+                              bank_params["lm_head"]["w"], mode=mode)
+    logits = logits.reshape(n_bank, B, S, -1)
+    if cfg.logit_softcap is not None:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return logits
 
 
 def layer_activations(cfg: DenseLMConfig, params: dict,

@@ -545,6 +545,45 @@ def small_cnn_prefix_paths(cfg: SmallCNNConfig, params: dict) -> frozenset:
     return frozenset(p for p in flatten_paths(params) if not p.startswith("head/"))
 
 
+def small_cnn_suffix_paths(cfg: SmallCNNConfig, params: dict) -> frozenset:
+    """Flat param paths read by :func:`small_cnn_head` — the private-suffix
+    leaves the serving engine stacks into a bank (DESIGN.md S2)."""
+    return frozenset(p for p in flatten_paths(params) if p.startswith("head/"))
+
+
+def small_cnn_bank_head(cfg: SmallCNNConfig, bank_params: dict,
+                        feats: jax.Array, mode: Optional[str] = None) -> jax.Array:
+    """Every private head of a merged group in ONE dispatch (DESIGN.md S2).
+
+    ``bank_params`` holds the head leaves stacked on a leading bank axis N
+    (``ParamStore.materialize_bank``); ``feats`` are the shared trunk
+    features ``(B, H', W', C)`` all members consume.  Returns ``(N, B, ...)``
+    — row ``n`` equals ``small_cnn_head`` on member ``n``'s params.
+
+    ``ref`` mode unrolls the per-member heads inside one trace (bitwise
+    identical to the per-member serving path — the oracle contract);
+    ``interpret``/``kernel`` run classification heads as two
+    ``ops.bank_matmul`` grouped GEMMs and vmap detection heads (conv heads
+    have no bank kernel)."""
+    from repro.kernels import ops
+
+    mode = mode or ops.default_mode()
+    n_bank = jax.tree_util.tree_leaves(bank_params)[0].shape[0]
+    if mode == "ref":
+        members = [jax.tree_util.tree_map(lambda l: l[i], bank_params)
+                   for i in range(n_bank)]
+        return jnp.stack([small_cnn_head(cfg, m, feats) for m in members])
+    if cfg.task != "classification":
+        return jax.vmap(lambda p: small_cnn_head(cfg, p, feats))(bank_params)
+    h = bank_params["head"]
+    feat = jnp.mean(feats, axis=(1, 2))  # (B, C), shared across the bank
+    hid = jax.nn.relu(ops.bank_matmul(feat, h["fc1"]["w"], h["fc1"]["b"],
+                                      mode=mode))
+    out = ops.bank_matmul(hid.astype(feats.dtype), h["fc2"]["w"],
+                          h["fc2"]["b"], mode=mode)
+    return out.astype(feats.dtype)
+
+
 def small_cnn_forward(cfg: SmallCNNConfig, params: dict, images: jax.Array) -> jax.Array:
     """images (B, 32, 32, 3).  Classification: logits (B, n_classes).
     Detection: (B, H', W', n_anchors*(4+n_classes)) dense predictions."""

@@ -9,7 +9,9 @@ Two serve paths share the policy layer:
 * :class:`MergeAwareEngine` — the merge-aware hot path (DESIGN.md S1):
   cached materialisation (``ParamStore.materialize_cached``), shared-prefix
   batched execution (one stem run per micro-batch for models whose prefix
-  weights are bound to the same store keys), deadline-sorted micro-batches,
+  weights are bound to the same store keys), suffix-bank fan-out (DESIGN.md
+  S2: congruent private heads stacked into one leading-axis weight bank and
+  executed in ONE dispatch per micro-batch), deadline-sorted micro-batches,
   async DMA prefetch (the next group's incremental load overlaps the
   current group's compute instead of stalling the accelerator), and hot
   MergePlan swap (``apply_plan``: a cloud-shipped plan lands on the live
@@ -31,7 +33,14 @@ import jax.numpy as jnp
 
 from repro.core.store import ParamStore
 from repro.serving.scheduler import Instance, Scheduler
-from repro.serving.workload import deadline_microbatches, pad_stack
+from repro.serving.workload import bucket_for, deadline_microbatches, pad_stack
+
+
+def base_model_id(instance_id: str) -> str:
+    """ParamStore bindings key for an instance id: feed instances are named
+    ``<model>#<k>`` (``workload.build_instances``); bare model ids pass
+    through unchanged."""
+    return instance_id.split("#", 1)[0]
 
 
 @dataclasses.dataclass
@@ -66,6 +75,7 @@ class EdgeExecutor:
         dma_gbps: float = 16.0,
         simulate_dma: bool = True,
         idle_sleep_s: float = 2e-4,
+        buckets: tuple = (1, 2, 4, 8),
     ):
         self.store = store
         self.scheduler = Scheduler(instances, capacity_bytes, costs)
@@ -75,6 +85,7 @@ class EdgeExecutor:
         self.dma_gbps = dma_gbps
         self.simulate_dma = simulate_dma
         self.idle_sleep_s = idle_sleep_s
+        self.buckets = tuple(sorted(buckets))
         self.queues = {i.instance_id: deque() for i in instances}
         self.completions: list = []
         self.skipped: int = 0
@@ -93,14 +104,21 @@ class EdgeExecutor:
         """Round-robin over instances until the horizon (or, with
         ``drain=True``, until every queue is empty); returns stats.
         ``warmup`` payload (optional) compiles each instance's forward before
-        the SLA clock starts — deployments always pre-compile."""
+        the SLA clock starts — deployments always pre-compile.
+
+        The requests taken from a queue run as ONE padded batch through the
+        same :func:`pad_stack` bucket ladder the engine uses (a bounded set
+        of jit shapes), so the baseline is honest about batching — what it
+        lacks vs the engine is sharing, prefetch and the suffix bank, not
+        the ability to stack frames."""
         order = [i.instance_id for i in self.scheduler.order]
+        ladder = tuple(sorted({b for b in self.buckets if b <= batch} | {batch}))
         if warmup is not None:
             for iid in order:
-                params = self.store.materialize_cached(
-                    iid.split("#")[0] if "#" in iid else iid
-                )
-                jax.block_until_ready(self.forward[iid](params, warmup))
+                params = self.store.materialize_cached(base_model_id(iid))
+                for b in ladder:
+                    wb, _ = pad_stack([warmup] * b, b)
+                    jax.block_until_ready(self.forward[iid](params, wb))
         t0 = time.monotonic()
         idx = 0
         empty_streak = 0
@@ -124,16 +142,15 @@ class EdgeExecutor:
             r = self.scheduler.load(iid, batch)
             if self.simulate_dma and r["loaded_bytes"]:
                 time.sleep(r["loaded_bytes"] / 1e9 / self.dma_gbps)
-            params = self.store.materialize_cached(
-                iid.split("#")[0] if "#" in iid else iid
-            )
+            params = self.store.materialize_cached(base_model_id(iid))
             taken = [q.popleft() for _ in range(min(batch, len(q)))]
-            for req in taken:
-                out = self.forward[iid](params, req.payload)
-                jax.block_until_ready(out)
-                self.completions.append(
-                    Completion(req, out, time.monotonic() - t0)
-                )
+            stacked, _ = pad_stack([req.payload for req in taken],
+                                   bucket_for(len(taken), ladder))
+            out = self.forward[iid](params, stacked)
+            jax.block_until_ready(out)
+            done = time.monotonic() - t0
+            for j, req in enumerate(taken):
+                self.completions.append(Completion(req, out[j], done))
         met = sum(1 for c in self.completions if c.met_sla)
         total = len(self.completions) + self.skipped
         return {
@@ -157,7 +174,13 @@ class ModelProgram:
     head.  ``prefix_paths`` are the flat param paths the prefix reads — the
     engine checks against ``ParamStore.binding_signature`` that every path is
     bound to the same store key across candidate group members before it ever
-    shares a prefix run."""
+    shares a prefix run.
+
+    The suffix-bank tier (DESIGN.md S2): ``suffix_paths``/``suffix_signature``
+    describe the private head's stacked-weight congruence and ``bank_suffix``
+    (optional) is the adapter's fused fan-out ``(bank_params, feats) ->
+    (N, B, ...)``.  Group members whose suffix signatures all match execute
+    every private head in ONE dispatch instead of one per member."""
 
     instance_id: str
     model_id: str  # ParamStore bindings key
@@ -165,6 +188,9 @@ class ModelProgram:
     prefix: Optional[Callable] = None  # (params, batched_x) -> batched_feats
     suffix: Optional[Callable] = None  # (params, batched_feats) -> batched_out
     prefix_paths: Optional[frozenset] = None
+    suffix_paths: Optional[frozenset] = None
+    suffix_signature: Optional[tuple] = None
+    bank_suffix: Optional[Callable] = None  # (bank_params, feats) -> (N, ...)
 
     @classmethod
     def from_adapter(cls, adapter, instance_id: str,
@@ -185,6 +211,9 @@ class ModelProgram:
             prefix=sp.prefix if sp else None,
             suffix=sp.suffix if sp else None,
             prefix_paths=sp.prefix_paths if sp else None,
+            suffix_paths=sp.suffix_paths if sp else None,
+            suffix_signature=sp.suffix_signature if sp else None,
+            bank_suffix=sp.bank_suffix if sp else None,
         )
 
 
@@ -254,6 +283,7 @@ class MergeAwareEngine:
         simulate_dma: bool = True,
         buckets: tuple = (1, 2, 4, 8),
         idle_sleep_s: float = 2e-4,
+        suffix_bank: bool = True,
     ):
         self.store = store
         self.scheduler = Scheduler(instances, capacity_bytes, costs)
@@ -271,17 +301,20 @@ class MergeAwareEngine:
         self.dma = AsyncDMA(dma_gbps, simulate=simulate_dma)
         self.buckets = tuple(sorted(buckets))
         self.idle_sleep_s = idle_sleep_s
+        self.suffix_bank = suffix_bank
         self.queues = {i.instance_id: deque() for i in instances}
         self.completions: list = []
         self.skipped = 0
         self.stats = {
             "prefix_runs": 0, "suffix_runs": 0, "forward_runs": 0,
             "microbatches": 0, "param_lookups": 0, "idle_sleeps": 0,
-            "prefix_jits": 0,
+            "prefix_jits": 0, "suffix_dispatches": 0, "bank_hits": 0,
         }
         self._groups: list = []
         self._groups_epoch = -1
         self._sigs: dict = {}  # iid -> binding signature, per groups epoch
+        self._bankable: dict = {}  # group tuple -> bool, per groups epoch
+        self._bank_compiled: dict = {}  # (callable, sig, N) -> jitted bank fn
 
     # -- prefix compile cache (one trace per shared-prefix group) --------------
 
@@ -326,6 +359,61 @@ class MergeAwareEngine:
             self.stats["prefix_jits"] += 1
         return fn
 
+    # -- suffix bank (DESIGN.md S2) -------------------------------------------
+
+    def _group_bankable(self, group: tuple) -> bool:
+        """A shared group's fan-out runs as ONE banked dispatch iff every
+        member's private head is congruent: same suffix paths and the same
+        suffix signature (the adapter's shape/dtype fingerprint over the
+        suffix leaves).  Cached per binding-epoch plan — an unmerge or plan
+        swap re-evaluates eligibility on the next pass."""
+        hit = self._bankable.get(group)
+        if hit is None:
+            progs = [self.programs[i] for i in group]
+            sigs = {p.suffix_signature for p in progs}
+            paths = {p.suffix_paths for p in progs}
+            hit = (self.suffix_bank and len(group) > 1
+                   and None not in sigs and len(sigs) == 1
+                   and None not in paths and len(paths) == 1)
+            self._bankable[group] = hit
+        return hit
+
+    def _bank_fn(self, group: list):
+        """Jitted bank fan-out for a group: the adapter's fused
+        ``bank_suffix`` when provided (``ops.bank_matmul`` grouped GEMM on
+        TPU; the unrolled bitwise oracle in ``ref`` mode), else ``vmap`` of
+        the member suffix over the stacked bank — the fallback for suffixes
+        with no bank-aware callable (allclose-grade, still one dispatch)."""
+        lead = self.programs[group[0]]
+        if lead.bank_suffix is not None:
+            key = (self._callable_key(lead.bank_suffix),
+                   lead.suffix_signature, len(group))
+            base = lead.bank_suffix
+        else:
+            key = (self._callable_key(lead.suffix), "vmap",
+                   lead.suffix_signature, len(group))
+            base = None
+        fn = self._bank_compiled.get(key)
+        if fn is None:
+            fn = jax.jit(base if base is not None
+                         else jax.vmap(lead.suffix, in_axes=(0, None)))
+            self._bank_compiled[key] = fn
+        return fn
+
+    def _bank_params(self, group: list):
+        """Stacked suffix-bank pytree for the group, via the store's
+        epoch-cached bank materialisation; ``bank_hits`` counts cache-served
+        dispatches (one rebuild per group per binding epoch otherwise)."""
+        self.stats["param_lookups"] += 1
+        mids = tuple(self.programs[i].model_id for i in group)
+        bid = ParamStore.bank_id(mids)
+        before = self.store.materializations.get(bid, 0)
+        tree = self.store.materialize_bank(
+            mids, self.programs[group[0]].suffix_paths)
+        if self.store.materializations.get(bid, 0) == before:
+            self.stats["bank_hits"] += 1
+        return tree
+
     # -- plan -----------------------------------------------------------------
 
     def prefix_groups(self) -> list:
@@ -335,6 +423,7 @@ class MergeAwareEngine:
         if self._groups_epoch == self.store.epoch:
             return self._groups
         self._sigs = {}  # epoch moved: binding signatures may have changed
+        self._bankable = {}  # and group membership (bank eligibility) with them
         groups: list = []
         by_sig: dict = {}
         for inst in self.scheduler.order:
@@ -421,12 +510,42 @@ class MergeAwareEngine:
     def _run_group(self, group: list, reqs: list, t0: float):
         """One group visit: deadline-sorted micro-batches over the union of
         the group's drained requests; shared groups run the prefix once per
-        batch, singletons run the whole forward batched."""
+        batch, singletons run the whole forward batched.
+
+        Congruent shared groups additionally run the *suffix bank* stage
+        (DESIGN.md S2): every member's private head executes over the whole
+        micro-batch in ONE dispatch against the stacked bank weights — no
+        per-member row gathers, no per-member suffix launches — and each
+        completion scatters out of the (member, row) cell of the bank
+        output.  The bank runs ALL of the group's heads, so it pays off
+        exactly when a micro-batch fans out: batches whose rows belong to a
+        single member keep the per-member path (one dispatch either way, no
+        wasted head FLOPs under skewed traffic).  ``suffix_dispatches``
+        counts device dispatches for suffix work (1 per banked micro-batch
+        vs one per member otherwise); ``suffix_runs`` keeps counting
+        logical member-head executions."""
         mbs = deadline_microbatches(reqs, self.buckets)
         shared = len(group) > 1
+        bankable = shared and self._group_bankable(tuple(group))
         for mb in mbs:
             self.stats["microbatches"] += 1
             batch, n = pad_stack([r.payload for r in mb.requests], mb.bucket)
+            banked = bankable and len(
+                {r.instance_id for r in mb.requests}) > 1
+            if banked:
+                lead = group[0]
+                feats = self._prefix_fn(lead)(self._params(lead), batch)
+                self.stats["prefix_runs"] += 1
+                bank_out = self._bank_fn(group)(self._bank_params(group), feats)
+                self.stats["suffix_runs"] += len(group)
+                self.stats["suffix_dispatches"] += 1
+                jax.block_until_ready(bank_out)
+                slot = {iid: i for i, iid in enumerate(group)}
+                done = time.monotonic() - t0
+                for j, r in enumerate(mb.requests):
+                    self.completions.append(
+                        Completion(r, bank_out[slot[r.instance_id], j], done))
+                continue
             rows_by_iid: dict = {}
             for j, r in enumerate(mb.requests):
                 rows_by_iid.setdefault(r.instance_id, []).append(j)
@@ -447,6 +566,7 @@ class MergeAwareEngine:
                     outs[iid] = self._suffix[iid](self._params(iid), sub)
                     pos[iid] = {g: k for k, g in enumerate(idx)}
                     self.stats["suffix_runs"] += 1
+                    self.stats["suffix_dispatches"] += 1
             else:
                 (iid,) = group
                 outs = {iid: self._fwd[iid](self._params(iid), batch)}
@@ -466,10 +586,16 @@ class MergeAwareEngine:
         batch-1 axis) and goes through the same :func:`pad_stack` as the
         serve path, so exactly the serving shapes are compiled."""
         for group in self.prefix_groups():
+            banked = len(group) > 1 and self._group_bankable(tuple(group))
             for b in self.buckets:
                 batch, _ = pad_stack([payload] * b, b)
                 if len(group) > 1:
                     feats = self._prefix_fn(group[0])(self._params(group[0]), batch)
+                    if banked:
+                        # single-member micro-batches still take the
+                        # per-member path, so compile both fan-outs
+                        jax.block_until_ready(
+                            self._bank_fn(group)(self._bank_params(group), feats))
                     for iid in group:
                         jax.block_until_ready(
                             self._suffix[iid](self._params(iid), feats))

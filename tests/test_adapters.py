@@ -257,11 +257,16 @@ def _run_lm_scenario(retrain: bool):
     assert swap["pending_requests"] == len(reqs)
     assert edge.resident_bytes() < before  # memory actually saved
     groups = eng.prefix_groups()
-    assert ["lm-A", "lm-B"] in groups  # shared-prefix decode for the pair
+    # shared-prefix decode for the whole fine-tune quartet (foreign C out)
+    assert ["lm-A", "lm-B", "lm-D", "lm-E"] in groups
 
     stats = eng.serve(horizon_s=60.0, warmup=reqs[0].payload)
     assert stats["completed"] == len(reqs)
     assert stats["prefix_runs"] >= 1
+    # congruent heads fan out through the suffix bank: ONE dispatch per
+    # shared micro-batch (DESIGN.md S2)
+    assert stats["suffix_dispatches"] == (stats["microbatches"]
+                                          - stats["forward_runs"])
     assert LM.verify_bitwise(eng, edge, adapter, cfg)
     return cloud, plan
 

@@ -6,6 +6,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import ref as R
+from repro.kernels.bank_matmul import bank_matmul
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.mamba_scan import mamba_scan
@@ -84,6 +85,41 @@ def test_mamba_scan_sweep(S, di, n, chunk, bdi, rng):
     yr, hlr = R.mamba_scan_ref(dt, dtx, Bm, Cm, A, h0)
     np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-2, atol=1e-2)
     np.testing.assert_allclose(np.asarray(hl), np.asarray(hlr), rtol=1e-2, atol=1e-2)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("N,M,K,F,bm,bk,bf", [
+    (3, 8, 32, 64, 8, 32, 64),      # serving-head scale, single block
+    (2, 16, 64, 128, 8, 32, 128),   # multi-block m and k
+    (4, 8, 128, 96, 8, 64, 32),     # multi-block k and f
+])
+@pytest.mark.parametrize("broadcast_x", [False, True])
+@pytest.mark.parametrize("bias", [False, True])
+def test_bank_matmul_sweep(dtype, N, M, K, F, bm, bk, bf, broadcast_x, bias, rng):
+    ks = jax.random.split(rng, 3)
+    x = jax.random.normal(ks[0], (M, K) if broadcast_x else (N, M, K), dtype)
+    w = jax.random.normal(ks[1], (N, K, F), dtype)
+    b = jax.random.normal(ks[2], (N, F), dtype) if bias else None
+    out = bank_matmul(x, w, b, block_m=bm, block_k=bk, block_f=bf,
+                      interpret=True)
+    ref = R.bank_matmul_ref(x, w, b)
+    assert out.shape == (N, M, F) and out.dtype == jnp.float32
+    tol = TOL if dtype == jnp.float32 else dict(rtol=2e-2, atol=2e-2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **tol)
+
+
+def test_bank_matmul_ref_is_bitwise_per_member(rng):
+    """The ref oracle IS the per-member contraction: bitwise equal to
+    running each member's einsum separately (the engine's ref-mode serving
+    parity contract, DESIGN.md S2)."""
+    ks = jax.random.split(rng, 2)
+    x = jax.random.normal(ks[0], (8, 32))
+    w = jax.random.normal(ks[1], (3, 32, 64))
+    out = jax.jit(R.bank_matmul_ref)(x, w)
+    for i in range(3):
+        per = jax.jit(lambda xx, ww: jnp.einsum(
+            "mk,kf->mf", xx, ww, preferred_element_type=jnp.float32))(x, w[i])
+        np.testing.assert_array_equal(np.asarray(out[i]), np.asarray(per))
 
 
 @pytest.mark.parametrize("P,page,N", [(32, 128, 8), (64, 256, 64), (8, 512, 3)])

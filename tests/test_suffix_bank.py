@@ -1,0 +1,325 @@
+"""Suffix-bank fan-out (DESIGN.md S2): bank materialisation epochs, one
+dispatch per congruent micro-batch with bitwise parity vs the per-member
+suffix path, vmap fallback for bank-less suffixes, and per-member fallback
+for non-congruent heads."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ParamStore, enumerate_groups
+from repro.models import vision as VI
+from repro.models.registry import get_adapter
+from repro.serving.costs import costs_for
+from repro.serving.executor import (
+    MergeAwareEngine, ModelProgram, Request, base_model_id,
+)
+from repro.serving.scheduler import Instance
+from repro.serving.workload import deadline_microbatches, pad_stack
+
+BUCKETS = (1, 2, 4)
+
+
+def _adapter_cfg():
+    adapter = get_adapter("small_cnn")
+    return adapter, adapter.default_config()
+
+
+def _merged_store(adapter, cfg, mids, cfgs=None):
+    params = {m: adapter.init((cfgs or {}).get(m, cfg), jax.random.PRNGKey(i))
+              for i, m in enumerate(mids)}
+    store = ParamStore.from_models(params)
+    recs = sum((adapter.records((cfgs or {}).get(m, cfg), params[m], m)
+                for m in mids), [])
+    trunk_groups = [g for g in enumerate_groups(recs)
+                    if not any(r.path.startswith("head/") for r in g.records)]
+    for g in trunk_groups:
+        store.merge_group(g)
+    return store, params, trunk_groups
+
+
+def _engine(store, mids, programs, **kw):
+    insts = [Instance(m, "tiny-yolo", frozenset(store.keys_for(m)),
+                      {k: 1000 for k in store.keys_for(m)}) for m in mids]
+    return MergeAwareEngine(store, insts, programs, capacity_bytes=10**9,
+                            costs={"tiny-yolo": costs_for("tiny-yolo")},
+                            buckets=BUCKETS, **kw)
+
+
+def _submit_interleaved(eng, mids, n_per, seed=0):
+    """Deadlines interleave the members round-robin so every micro-batch
+    carries rows from several heads (the fan-out the bank fuses)."""
+    reqs = []
+    for j in range(n_per):
+        for i, m in enumerate(mids):
+            img = jax.random.normal(
+                jax.random.PRNGKey(seed + 10 * j + i), (1, 32, 32, 3))
+            r = Request(m, img, 0.0, 30.0 + (j * len(mids) + i) * 1e-3)
+            reqs.append(r)
+            eng.submit(r)
+    return reqs
+
+
+# ---------------------------------------------------------------------------
+# module helper (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_base_model_id():
+    assert base_model_id("yolo#3") == "yolo"
+    assert base_model_id("yolo") == "yolo"
+    assert base_model_id("a#b#c") == "a"
+
+
+# ---------------------------------------------------------------------------
+# bank materialisation: cached per epoch, invalidated by every rebind
+# ---------------------------------------------------------------------------
+
+
+def test_bank_materialization_cached_until_epoch_moves():
+    adapter, cfg = _adapter_cfg()
+    store, params, groups = _merged_store(adapter, cfg, ("A", "B"))
+    paths = adapter.split(cfg).suffix_paths
+    bid = ParamStore.bank_id(("A", "B"))
+
+    bank1 = store.materialize_bank(("A", "B"), paths)
+    assert store.materialize_bank(("A", "B"), paths) is bank1
+    assert store.materializations[bid] == 1
+    # stacked leaves carry each member's buffer on the bank axis
+    np.testing.assert_array_equal(
+        np.asarray(bank1["head"]["fc1"]["w"][1]),
+        np.asarray(store.materialize("B")["head"]["fc1"]["w"]))
+
+    # buffer commit (e.g. divergent head training) invalidates the bank
+    key = store.bindings["B"]["head/fc1/w"]
+    store.update_buffers({key: jnp.zeros_like(store.buffers[key])})
+    bank2 = store.materialize_bank(("A", "B"), paths)
+    assert bank2 is not bank1
+    assert store.materializations[bid] == 2
+    assert float(jnp.sum(jnp.abs(bank2["head"]["fc1"]["w"][1]))) == 0.0
+
+    # unmerge bumps the epoch too — one rebuild per epoch, never per lookup
+    store.unmerge(groups[0])
+    bank3 = store.materialize_bank(("A", "B"), paths)
+    assert bank3 is not bank2
+    assert store.materialize_bank(("A", "B"), paths) is bank3
+    assert store.materializations[bid] == 3 <= store.epoch
+
+
+# ---------------------------------------------------------------------------
+# banked serving: ONE dispatch per micro-batch, bitwise vs per-member suffix
+# ---------------------------------------------------------------------------
+
+
+def test_bank_serving_bitwise_and_one_dispatch_per_microbatch():
+    adapter, cfg = _adapter_cfg()
+    mids = ("A", "B", "C")
+    store, params, _ = _merged_store(adapter, cfg, mids)
+    programs = [ModelProgram.from_adapter(adapter, m, cfg=cfg) for m in mids]
+    eng = _engine(store, mids, programs)
+    reqs = _submit_interleaved(eng, mids, n_per=3)
+    stats = eng.serve(horizon_s=30.0, warmup=reqs[0].payload)
+
+    assert stats["completed"] == 9
+    assert stats["forward_runs"] == 0
+    # the tentpole: dispatches drop from one-per-member to one-per-batch.
+    # 9 interleaved requests over buckets (1,2,4) -> two 4-row fan-out
+    # batches (banked: all 3 heads in one dispatch) and one single-member
+    # 1-row batch (per-member path: banking it would waste 2 heads)
+    assert stats["microbatches"] == 3
+    assert stats["suffix_dispatches"] == stats["microbatches"]
+    assert stats["bank_hits"] == 2  # built once in warmup, hits thereafter
+    assert stats["suffix_runs"] == 2 * len(mids) + 1
+
+    # bitwise parity: replay the engine's (deterministic) micro-batches
+    # through fresh jits of the same split callables
+    sp = adapter.split(cfg)
+    res = {id(c.request): c.result for c in eng.completions}
+    pj, sj = jax.jit(sp.prefix), jax.jit(sp.suffix)
+    for mb in deadline_microbatches(reqs, BUCKETS):
+        batch, _ = pad_stack([r.payload for r in mb.requests], mb.bucket)
+        feats = pj(store.materialize("A"), batch)
+        for j, r in enumerate(mb.requests):
+            direct = sj(store.materialize(r.instance_id), feats)[j]
+            np.testing.assert_array_equal(np.asarray(res[id(r)]),
+                                          np.asarray(direct))
+
+
+def test_single_member_microbatches_skip_the_bank():
+    """The bank computes ALL group heads, so it is engaged only when a
+    micro-batch actually fans out; skewed traffic (every row one member)
+    keeps the per-member path — one dispatch either way, no wasted FLOPs."""
+    adapter, cfg = _adapter_cfg()
+    mids = ("A", "B")
+    store, params, _ = _merged_store(adapter, cfg, mids)
+    programs = [ModelProgram.from_adapter(adapter, m, cfg=cfg) for m in mids]
+    eng = _engine(store, mids, programs)
+    img = jax.random.normal(jax.random.PRNGKey(5), (1, 32, 32, 3))
+    for i in range(4):  # all rows belong to A: nothing to fuse
+        eng.submit(Request("A", img, 0.0, 30.0 + i * 1e-3))
+    stats = eng.serve(horizon_s=30.0, warmup=img)
+    assert stats["completed"] == 4
+    assert stats["bank_hits"] == 0
+    assert (stats["suffix_dispatches"] == stats["suffix_runs"]
+            == stats["microbatches"] == stats["prefix_runs"])
+
+
+def test_bank_disabled_matches_per_member_stats():
+    adapter, cfg = _adapter_cfg()
+    mids = ("A", "B")
+    store, params, _ = _merged_store(adapter, cfg, mids)
+    programs = [ModelProgram.from_adapter(adapter, m, cfg=cfg) for m in mids]
+    eng = _engine(store, mids, programs, suffix_bank=False)
+    reqs = _submit_interleaved(eng, mids, n_per=2)
+    stats = eng.serve(horizon_s=30.0, warmup=reqs[0].payload)
+    assert stats["completed"] == 4
+    assert stats["bank_hits"] == 0
+    # per-member fan-out: one dispatch per member present in each batch
+    assert stats["suffix_dispatches"] == stats["suffix_runs"]
+    assert stats["suffix_runs"] > stats["microbatches"]
+
+
+# ---------------------------------------------------------------------------
+# epoch bumps re-plan the bank (merge/unmerge/apply_plan)
+# ---------------------------------------------------------------------------
+
+
+def test_bank_invalidation_across_unmerge_and_plan_swap():
+    adapter, cfg = _adapter_cfg()
+    mids = ("A", "B")
+    store, params, groups = _merged_store(adapter, cfg, mids)
+    plan = store.export_plan(groups, include_weights=True)
+
+    programs = [ModelProgram.from_adapter(adapter, m, cfg=cfg) for m in mids]
+    eng = _engine(store, mids, programs)
+    img = jax.random.normal(jax.random.PRNGKey(7), (1, 32, 32, 3))
+    for i in range(4):
+        eng.submit(Request(mids[i % 2], img, 0.0, 30.0 + i * 1e-3))
+    s1 = eng.serve(horizon_s=30.0, warmup=img)
+    assert s1["suffix_dispatches"] == s1["microbatches"]
+    out_banked = np.asarray(eng.completions[-1].result)
+    bid = ParamStore.bank_id(mids)
+    builds_before = store.materializations[bid]
+
+    # unmerge: the group splits on the next pass — no bank, whole forwards
+    for g in groups:
+        store.unmerge(g)
+    key = store.bindings["B"]["head/fc2/w"]
+    store.update_buffers({key: jnp.zeros_like(store.buffers[key])})
+    eng.completions.clear()
+    for i in range(4):
+        eng.submit(Request("B", img, 0.0, 30.0 + i * 1e-3))
+    s2 = eng.serve(horizon_s=30.0)
+    assert s2["forward_runs"] >= 1 and s2["suffix_dispatches"] == 0
+    assert store.materializations[bid] == builds_before  # no stale bank use
+    out_after = np.asarray(eng.completions[-1].result)
+    assert not np.allclose(out_banked, out_after)
+
+    # hot plan swap re-merges with ONE epoch bump: the bank is rebuilt
+    # exactly once and serves the new shared bindings
+    eng.apply_plan(plan)
+    eng.completions.clear()
+    for i in range(4):
+        eng.submit(Request(mids[i % 2], img, 0.0, 30.0 + i * 1e-3))
+    s3 = eng.serve(horizon_s=30.0)
+    assert s3["suffix_dispatches"] == s3["microbatches"] >= 1
+    assert store.materializations[bid] == builds_before + 1
+    # B's head commit from the unmerged interlude must be visible
+    direct = VI.small_cnn_forward(cfg, store.materialize("B"), img)
+    last_b = next(c for c in reversed(eng.completions)
+                  if c.request.instance_id == "B")
+    np.testing.assert_allclose(np.asarray(last_b.result),
+                               np.asarray(direct[0]), rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# fallbacks: vmap for bank-less suffixes, per-member for non-congruent heads
+# ---------------------------------------------------------------------------
+
+
+def test_vmap_fallback_without_bank_suffix():
+    """Programs that declare suffix paths/signature but no bank_suffix still
+    fan out in one dispatch — vmap over the stacked bank (allclose-grade)."""
+    adapter, cfg = _adapter_cfg()
+    mids = ("A", "B")
+    store, params, _ = _merged_store(adapter, cfg, mids)
+    sp = adapter.split(cfg)
+    programs = [
+        ModelProgram(
+            m, m, forward=adapter.bound_forward(cfg),
+            prefix=sp.prefix, suffix=sp.suffix, prefix_paths=sp.prefix_paths,
+            suffix_paths=sp.suffix_paths, suffix_signature=sp.suffix_signature,
+            bank_suffix=None,
+        ) for m in mids
+    ]
+    eng = _engine(store, mids, programs)
+    reqs = _submit_interleaved(eng, mids, n_per=2)
+    stats = eng.serve(horizon_s=30.0, warmup=reqs[0].payload)
+    assert stats["completed"] == 4
+    assert stats["suffix_dispatches"] == stats["microbatches"]
+    for c in eng.completions:
+        direct = VI.small_cnn_forward(
+            cfg, store.materialize(c.request.instance_id), c.request.payload)
+        np.testing.assert_allclose(np.asarray(c.result), np.asarray(direct[0]),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_non_congruent_suffixes_fall_back_to_per_member():
+    """Identical trunks, different head widths (n_classes 4 vs 6): the
+    prefix merges into one group but the suffix signatures differ, so the
+    engine must take the per-member path — and still serve correctly."""
+    adapter, _ = _adapter_cfg()
+    cfg4 = adapter.default_config()
+    import dataclasses
+    cfg6 = dataclasses.replace(cfg4, n_classes=6)
+    cfgs = {"A": cfg4, "B": cfg6}
+    store, params, _ = _merged_store(adapter, cfg4, ("A", "B"), cfgs=cfgs)
+    programs = [ModelProgram.from_adapter(adapter, m, cfg=cfgs[m])
+                for m in ("A", "B")]
+    assert programs[0].suffix_signature != programs[1].suffix_signature
+    eng = _engine(store, ("A", "B"), programs)
+    reqs = _submit_interleaved(eng, ("A", "B"), n_per=2)
+    stats = eng.serve(horizon_s=30.0, warmup=reqs[0].payload)
+
+    assert stats["completed"] == 4
+    assert eng.prefix_groups() == [["A", "B"]]  # trunks DID merge
+    assert stats["bank_hits"] == 0
+    assert stats["suffix_dispatches"] == stats["suffix_runs"] > stats["microbatches"]
+    for c in eng.completions:
+        mid = c.request.instance_id
+        direct = VI.small_cnn_forward(cfgs[mid], store.materialize(mid),
+                                      c.request.payload)
+        np.testing.assert_allclose(np.asarray(c.result), np.asarray(direct[0]),
+                                   rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# transformer bank head: ref-mode bitwise, banked-GEMM mode allclose
+# ---------------------------------------------------------------------------
+
+
+def test_transformer_bank_head_parity():
+    from repro.models import transformer as T
+    from repro.utils.tree import flatten_paths, unflatten_paths
+
+    adapter = get_adapter("dense")
+    cfg = adapter.default_config()
+    params = [adapter.init(cfg, jax.random.PRNGKey(i)) for i in range(3)]
+    toks = jax.random.randint(jax.random.PRNGKey(9), (4, 8), 0, cfg.vocab_size)
+    x = T.trunk(cfg, params[0], toks)
+    sp = adapter.split(cfg)
+    assert sp.suffix_paths == frozenset({"final_norm/scale", "lm_head/w"})
+    flats = [flatten_paths(p) for p in params]
+    bank = unflatten_paths({p: jnp.stack([f[p] for f in flats])
+                            for p in sp.suffix_paths})
+    per = [jax.jit(lambda p, xx: T.head(cfg, p, xx))(params[i], x)
+           for i in range(3)]
+
+    ref = jax.jit(lambda b, xx: T.bank_head(cfg, b, xx, mode="ref"))(bank, x)
+    for i in range(3):  # ref mode is the bitwise serving oracle
+        np.testing.assert_array_equal(np.asarray(ref[i]), np.asarray(per[i]))
+
+    fused = jax.jit(
+        lambda b, xx: T.bank_head(cfg, b, xx, mode="interpret"))(bank, x)
+    for i in range(3):  # the Pallas grouped GEMM validates against it
+        np.testing.assert_allclose(np.asarray(fused[i]), np.asarray(per[i]),
+                                   rtol=2e-3, atol=2e-3)
