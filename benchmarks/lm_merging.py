@@ -238,27 +238,31 @@ def _serve(store, adapter, cfg, mids, suffix_bank=True):
     return eng, stats
 
 
-def verify_bitwise(eng, store, adapter, cfg) -> bool:
+def verify_bitwise(eng, store, adapter, cfg, buckets=BUCKETS, since=0) -> bool:
     """Merged serving outputs vs direct per-model forwards on the same
     bindings.  The engine's micro-batches are reconstructed exactly
     (``deadline_microbatches`` over each group's completed requests is
     deterministic, and a group drains in one visit), then shared groups
     replay prefix-once + per-member jitted suffix on the SAME padded batch
     and singletons replay the composed forward — every served row must
-    match BITWISE, including rows that went through the suffix bank."""
+    match BITWISE, including rows that went through the suffix bank.
+    ``since`` restricts the check to completions appended after that index
+    (e.g. only the rows served after a lifecycle hot swap — the earlier ones
+    were correct against *previous* bindings)."""
     from repro.serving.workload import deadline_microbatches, pad_stack
 
     sp = adapter.split(cfg)
-    res = {id(c.request): c.result for c in eng.completions}
+    completions = eng.completions[since:]
+    res = {id(c.request): c.result for c in completions}
     by_iid: dict = {}
-    for c in eng.completions:
+    for c in completions:
         by_iid.setdefault(c.request.instance_id, []).append(c.request)
     pj, sj = jax.jit(sp.prefix), jax.jit(sp.suffix)
     fj = jax.jit(adapter.bound_forward(cfg))
     ok = True
     for group in eng.prefix_groups():
         greqs = [r for iid in group for r in by_iid.get(iid, [])]
-        for mb in deadline_microbatches(greqs, BUCKETS):
+        for mb in deadline_microbatches(greqs, buckets):
             batch, _ = pad_stack([r.payload for r in mb.requests], mb.bucket)
             if len(group) > 1:
                 feats = pj(store.materialize(group[0]), batch)

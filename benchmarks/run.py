@@ -16,10 +16,11 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     from benchmarks import (
-        ablation_ordering, fig3_nexus, fig4_commonality, fig5_potential,
-        fig9_powerlaw, fig10_e2e, fig11_savings, fig12_baselines,
-        fig13_incremental, fig14_bandwidth, lm_merging, plan_search, roofline,
-        serve_throughput, table1_memory, table2_times, table3_sweeps,
+        ablation_ordering, drift_adapt, fig3_nexus, fig4_commonality,
+        fig5_potential, fig9_powerlaw, fig10_e2e, fig11_savings,
+        fig12_baselines, fig13_incremental, fig14_bandwidth, lm_merging,
+        plan_search, roofline, serve_throughput, table1_memory, table2_times,
+        table3_sweeps,
     )
 
     modules = [
@@ -38,6 +39,7 @@ def main(argv=None):
         ("serve_throughput", serve_throughput),
         ("plan_search", plan_search),
         ("lm_merging", lm_merging),
+        ("drift_adapt", drift_adapt),
         ("ablation_ordering", ablation_ordering),
         ("roofline", roofline),
     ]

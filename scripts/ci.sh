@@ -18,7 +18,9 @@ if grep -RnE "repro\.models\.vision|models import vision" \
   exit 1
 fi
 
-# fast lane first: tier-1 feedback without the retraining-heavy slow tests,
+# fast lane first: tier-1 feedback without the retraining-heavy slow tests
+# (includes tests/test_properties.py — hypothesis property tests that skip
+# cleanly when the dependency is absent and run for real when installed),
 # then the slow remainder so the full suite still gates the build
 python -m pytest -x -q -m "not slow"
 python -m pytest -q -m "slow"
@@ -32,10 +34,14 @@ python -m benchmarks.plan_search --json
 # LM merge-and-serve through the adapter contract (surrogate trainer — the
 # real retraining loop is the slow-marked pytest + `--retrain` flag)
 python -m benchmarks.lm_merging --json
+# drift-adapt lifecycle loop (DESIGN.md L1): breach -> revert -> warm-start
+# re-plan -> hot swap under injected drift, with/without-loop timelines
+python -m benchmarks.drift_adapt --json
 
 test -f artifacts/benchmarks/BENCH_serve.json
 test -f artifacts/benchmarks/BENCH_plan.json
 test -f artifacts/benchmarks/BENCH_lm_serve.json
+test -f artifacts/benchmarks/BENCH_drift.json
 
 # suffix-bank acceptance (DESIGN.md S2): exactly ONE suffix dispatch per
 # congruent micro-batch, strictly fewer dispatches than the per-member
@@ -54,6 +60,28 @@ assert l["bank_speedup_rps"] >= 1.5, l
 print("suffix-bank acceptance OK")
 PY
 
-# interpret-mode smoke for the bank kernel (kernel body executed on CPU)
-REPRO_KERNEL_MODE=interpret python -m pytest -q tests/test_kernels.py -k bank_matmul
+# drift-adapt acceptance (DESIGN.md L1): breach detected within one sampling
+# period, >=1 successful hot swap, finite time-to-recover, post-swap serving
+# bitwise vs direct forwards, merged savings restored to >=80% of pre-drift,
+# and no request dropped across revert + swap
+python - <<'PY'
+import json, math
+d = json.load(open("artifacts/benchmarks/BENCH_drift.json"))["derived"]
+assert d["breach_detect_periods"] <= 1, d
+assert d["swaps"] >= 1, d
+assert math.isfinite(d["time_to_recover_s"]) and d["time_to_recover_s"] > 0, d
+assert d["post_swap_bitwise"], d
+assert d["savings_restored_frac"] >= 0.8, d
+assert d["all_requests_served"], d
+assert d["sim_accuracy_with_loop"] > d["sim_accuracy_no_adapt"], d
+print("drift-adapt acceptance OK")
+PY
+
+# kernel-mode matrix: the public ops dispatch layer must match the jnp
+# oracles under EVERY CPU-executable REPRO_KERNEL_MODE (ref = oracle pass,
+# interpret = kernel bodies executed on CPU), incl. the bank kernel sweeps
+for mode in ref interpret; do
+  REPRO_KERNEL_MODE="$mode" python -m pytest -q tests/test_kernels.py \
+    -k "ops_mode or bank_matmul"
+done
 echo "CI OK"

@@ -4,10 +4,23 @@ Edge boxes periodically sample frames; the cloud runs the *original* models
 on them and compares against the merged models' outputs.  If any query's
 accuracy falls below target, edge inference reverts to the original weights
 for that model and merging resumes from the previously deployed state.
+
+The adaptation loop that *drives* this monitor lives in
+``serving/lifecycle.py`` (DESIGN.md L1): breach -> revert -> incremental
+re-plan -> retrain -> hot swap.  This module contributes the two artifacts
+that loop consumes:
+
+* :meth:`DriftMonitor.revert_delta` — the binding delta a revert implies,
+  the revert-side analogue of ``MergePlan.binding_deltas``;
+* :class:`ResumeState` — the serializable "resume merging from the last
+  deployed state" payload (deployed plan + exclusions + revert history), so
+  a restarted controller or the cloud planner picks up exactly where the
+  edge box left off.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
 from typing import Any, Callable, Optional
 
 from repro.core.store import ParamStore
@@ -19,6 +32,43 @@ class DriftReport:
     checked: dict  # model_id -> accuracy vs original on sampled data
     breached: set  # model_ids under target
     reverted: set  # model_ids whose edge inference switched to originals
+
+
+@dataclasses.dataclass
+class ResumeState:
+    """§5.1 step 5 — "merging resumes from the previously deployed state" —
+    as a serializable artifact: the last deployed plan (its JSON payload),
+    the models currently excluded from planning (reverted / quarantined by
+    revert-storm hysteresis) and the revert timestamps that drive the
+    hysteresis.  ``epoch`` records the store epoch the state was captured
+    at, so a consumer can detect a stale snapshot."""
+
+    plan_json: Optional[str]
+    excluded: tuple  # model ids, sorted
+    revert_history: dict  # model_id -> [revert timestamps, planner clock]
+    epoch: int
+
+    def to_json(self, indent: Optional[int] = None) -> str:
+        return json.dumps({
+            "plan": self.plan_json,
+            "excluded": list(self.excluded),
+            "revert_history": {m: list(ts) for m, ts in
+                               sorted(self.revert_history.items())},
+            "epoch": self.epoch,
+        }, indent=indent)
+
+    @classmethod
+    def from_json(cls, payload: str) -> "ResumeState":
+        obj = json.loads(payload)
+        return cls(obj["plan"], tuple(obj["excluded"]),
+                   {m: list(ts) for m, ts in obj["revert_history"].items()},
+                   obj["epoch"])
+
+    def plan(self):
+        from repro.core.policy import MergePlan
+
+        return (MergePlan.from_json(self.plan_json)
+                if self.plan_json is not None else None)
 
 
 class DriftMonitor:
@@ -42,17 +92,36 @@ class DriftMonitor:
                 breached.add(mid)
         return DriftReport(checked, breached, set())
 
-    def revert(self, report: DriftReport) -> DriftReport:
-        """Rebind breached models to their original private weights; shared
-        buffers survive for the remaining members."""
+    def revert_delta(self, report: DriftReport) -> dict:
+        """{(model_id, path): (current_key, private_key)} for every
+        appearance a revert of the breached models rebinds — the breach's
+        binding delta, mirroring ``MergePlan.binding_deltas`` on the
+        planning side.  Pure query: the store is untouched."""
         from repro.utils.tree import flatten_paths
 
+        delta = {}
+        for mid in sorted(report.breached):
+            for path in flatten_paths(self.originals[mid]):
+                delta[(mid, path)] = (self.store.bindings[mid][path],
+                                      f"{mid}:{path}")
+        return delta
+
+    def revert(self, report: DriftReport) -> DriftReport:
+        """Rebind breached models to their original private weights; shared
+        buffers referenced by surviving group members are untouched (only
+        truly unreferenced keys are GC'd).  The rebind is staged and commits
+        with ONE epoch bump, so a live engine's cached pytrees AND suffix
+        banks invalidate exactly once and queued requests are served against
+        the reverted bindings on the very next pass."""
+        from repro.utils.tree import flatten_paths
+
+        delta = self.revert_delta(report)  # the ONE statement of the rebind
+        flats = {mid: flatten_paths(self.originals[mid])
+                 for mid in report.breached}
+        for (mid, path), (_old, private_key) in delta.items():
+            self.store.buffers[private_key] = flats[mid][path]
+            self.store.bindings[mid][path] = private_key
         for mid in report.breached:
-            flat = flatten_paths(self.originals[mid])
-            for path, leaf in flat.items():
-                key = f"{mid}:{path}"
-                self.store.buffers[key] = leaf
-                self.store.bindings[mid][path] = key
             report.reverted.add(mid)
         self.store._gc_unreferenced()
         if report.breached:

@@ -549,6 +549,8 @@ class StagedPlanner:
         objective_tolerance: float = 0.0,
         clock: Callable[[], float] = time.monotonic,
         plan_weights: bool = True,
+        exclude_models: Optional[set] = None,
+        seed_plan: Optional["MergePlan"] = None,
     ):
         self.store = store
         self.models = {m.model_id: m for m in models}
@@ -568,16 +570,44 @@ class StagedPlanner:
         # descriptor-scale planning or when the trainer provably does not
         # mutate buffers.
         self.plan_weights = plan_weights
+        # drift-adapt warm start (DESIGN.md L1): models to leave out of the
+        # search entirely (breached / hysteresis-quarantined queries) and the
+        # previously deployed plan to resume from — §5.1 step 5's "merging
+        # resumes from the previously deployed state".
+        self.exclude_models = set(exclude_models or ())
+        self.seed_plan = seed_plan
         self.pruned_candidates: list = []
         self._trainer_takes_group: Optional[bool] = None
 
     # -- stage 1+2: enumerate and score ---------------------------------------
 
+    def _seed_groups(self) -> list:
+        """Committed groups of the previously deployed plan, minus excluded
+        members — already validated configurations, re-attempted FIRST and in
+        their original commit order.  They bypass the prefilter (they have
+        survived retraining once) and supersede the same-signature enumerated
+        candidates (resume, don't re-litigate the previous search)."""
+        if self.seed_plan is None:
+            return []
+        seeds = []
+        for g in self.seed_plan.layer_groups():
+            g = g.without_models(self.exclude_models)
+            if len(g.records) >= 2 and any(len(c) >= 2 for c in g.columns()):
+                seeds.append(g)
+        return seeds
+
     def candidates(self) -> list:
-        groups = enumerate_groups(self.records)
+        records = [r for r in self.records
+                   if r.model_id not in self.exclude_models]
+        groups = enumerate_groups(records)
         kept, pruned = self.scorer.prefilter(groups)
         self.pruned_candidates = pruned
-        return self.scorer.order(kept)
+        ordered = self.scorer.order(kept)
+        seeds = self._seed_groups()
+        if not seeds:
+            return ordered
+        seed_sigs = {g.signature for g in seeds}
+        return seeds + [g for g in ordered if g.signature not in seed_sigs]
 
     # -- rollback support ------------------------------------------------------
 
@@ -705,6 +735,8 @@ class StagedPlanner:
         prov = {
             "planner": type(self).__name__,
             "scorer": self.scorer.name,
+            "warm_start": self.seed_plan is not None,
+            "excluded": sorted(self.exclude_models),
             "attempted": attempted,
             "committed": committed,
             "discarded": discarded,

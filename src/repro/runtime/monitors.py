@@ -56,6 +56,31 @@ class HeartbeatMonitor:
 
 
 @dataclasses.dataclass
+class SampleCadence:
+    """Clock-injected periodic trigger — the :class:`HeartbeatMonitor`
+    injection pattern applied to the drift-sampling loop (§5.1 step 4): the
+    lifecycle controller asks ``due()`` between serve passes and ``mark()``s
+    the boundary it acted on.  Boundaries stay anchored to the schedule
+    (late ticks don't accumulate phase drift); falling more than one period
+    behind realigns to now instead of firing a burst of catch-up samples."""
+
+    period_s: float
+    clock: Callable[[], float] = time.monotonic
+
+    def __post_init__(self):
+        self._next = self.clock() + self.period_s
+
+    def due(self) -> bool:
+        return self.clock() >= self._next
+
+    def mark(self) -> None:
+        self._next += self.period_s
+        now = self.clock()
+        if self._next <= now:
+            self._next = now + self.period_s
+
+
+@dataclasses.dataclass
 class StragglerMonitor:
     """Flags steps slower than ``threshold`` x rolling-median step time.
 

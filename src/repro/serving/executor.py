@@ -15,7 +15,10 @@ Two serve paths share the policy layer:
   async DMA prefetch (the next group's incremental load overlaps the
   current group's compute instead of stalling the accelerator), and hot
   MergePlan swap (``apply_plan``: a cloud-shipped plan lands on the live
-  engine with one epoch bump and no dropped requests — DESIGN.md P1).
+  engine with one epoch bump and no dropped requests — DESIGN.md P1) plus
+  the symmetric drift ``revert`` (a breached model drops back to its
+  original private weights under load, queued requests surviving, driven by
+  ``serving/lifecycle.py`` — DESIGN.md L1).
 
 The DMA delay is modelled (the host has no PCIe-attached accelerator) but
 residency, eviction and merging-aware incremental loads are all real key-set
@@ -448,7 +451,31 @@ class MergeAwareEngine:
         self._groups_epoch = self.store.epoch
         return groups
 
-    # -- hot plan swap ---------------------------------------------------------
+    # -- hot plan swap / revert ------------------------------------------------
+
+    def rebind_instances(self, key_bytes_fn=None) -> dict:
+        """Rebuild scheduler instances from the store's CURRENT bindings
+        (cost id and accuracy carried over per instance) and swap them in
+        via ``Scheduler.rebind``, which preserves residency for surviving
+        keys — the shared tail of ``apply_plan`` (P1 hot swap) and
+        ``revert`` (L1 drift revert)."""
+        from repro.utils.tree import leaf_bytes
+
+        old = self.scheduler.instances
+        kb_by_model: dict = {}  # store model -> {key: bytes}, computed once
+        insts = []
+        for iid, inst in old.items():
+            mid = self.programs[iid].model_id
+            if mid not in kb_by_model:
+                kb_by_model[mid] = {
+                    k: (key_bytes_fn(k, leaf_bytes(self.store.buffers[k]))
+                        if key_bytes_fn else leaf_bytes(self.store.buffers[k]))
+                    for k in self.store.keys_for(mid)
+                }
+            kb = kb_by_model[mid]
+            insts.append(Instance(iid, inst.model_id, frozenset(kb), kb,
+                                  inst.accuracy))
+        return self.scheduler.rebind(insts)
 
     def apply_plan(self, plan, key_bytes_fn=None) -> dict:
         """Apply a MergePlan on the LIVE engine (DESIGN.md P1 hot swap):
@@ -464,29 +491,41 @@ class MergeAwareEngine:
            new bindings on the next pass (the serve loop re-reads
            ``prefix_groups()`` every iteration).
         """
-        from repro.utils.tree import leaf_bytes
-
         epoch0 = self.store.epoch
         shared = self.store.apply_plan(plan)
-        old = self.scheduler.instances
-        kb_by_model: dict = {}  # store model -> {key: bytes}, computed once
-        insts = []
-        for iid, inst in old.items():
-            mid = self.programs[iid].model_id
-            if mid not in kb_by_model:
-                kb_by_model[mid] = {
-                    k: (key_bytes_fn(k, leaf_bytes(self.store.buffers[k]))
-                        if key_bytes_fn else leaf_bytes(self.store.buffers[k]))
-                    for k in self.store.keys_for(mid)
-                }
-            kb = kb_by_model[mid]
-            insts.append(Instance(iid, inst.model_id, frozenset(kb), kb,
-                                  inst.accuracy))
-        rebind = self.scheduler.rebind(insts)
+        rebind = self.rebind_instances(key_bytes_fn)
         return {
             "shared_keys": shared,
             "epoch_bumps": self.store.epoch - epoch0,
             "pending_requests": sum(len(q) for q in self.queues.values()),
+            **rebind,
+        }
+
+    def revert(self, monitor, report, key_bytes_fn=None) -> dict:
+        """Revert breached models to their original weights on the LIVE
+        engine (§5.1 step 5, DESIGN.md L1) — the drift-side twin of
+        ``apply_plan``, with the same no-drain guarantees:
+
+        1. ``DriftMonitor.revert`` stages every breached model's private
+           rebind and commits with a *single* epoch bump — cached pytrees,
+           the prefix-group plan AND the suffix-bank materialisations all
+           invalidate exactly once (``materialize_bank`` caches live in the
+           same store cache ``bump_epoch`` clears);
+        2. scheduler instances are rebuilt from the post-revert bindings;
+           shared keys still referenced by surviving group members stay
+           resident (``Scheduler.rebind``), so survivors' next loads are
+           still free — only the reverted model pays its private bytes;
+        3. queues are untouched: requests queued at breach time are served
+           against the reverted bindings on the next pass, never dropped.
+        """
+        epoch0 = self.store.epoch
+        pending = sum(len(q) for q in self.queues.values())
+        monitor.revert(report)
+        rebind = self.rebind_instances(key_bytes_fn)
+        return {
+            "reverted": sorted(report.reverted),
+            "epoch_bumps": self.store.epoch - epoch0,
+            "pending_requests": pending,
             **rebind,
         }
 

@@ -1,0 +1,263 @@
+"""Drift-adapt lifecycle loop (DESIGN.md L1; paper §5.1 steps 4-5).
+
+GEMEL's accuracy story is a *closed loop*: edge boxes sample frames, the
+cloud detects per-query accuracy breaches against the original models, edge
+inference reverts the breached model to its original weights, and merging
+resumes from the previously deployed state.  :class:`LifecycleController`
+closes that loop over a live :class:`~repro.serving.executor.MergeAwareEngine`
+as an explicit state machine:
+
+    serving --(breach)--> breached -> reverted -> re-planning -> swapped
+       ^                                                            |
+       +------------------------------------------------------------+
+
+* **serving** — every ``sample_period_s`` (clock-injected
+  :class:`~repro.runtime.monitors.SampleCadence`), run
+  ``DriftMonitor.check`` on freshly sampled frames.  Checks ride the serve
+  cache (no epoch bump, no re-materialisation).
+* **breached → reverted** — in the SAME tick as detection: the breached
+  models rebind to their original private weights through
+  ``MergeAwareEngine.revert`` (one epoch bump; cached pytrees, the
+  prefix-group plan and the suffix banks invalidate together; queued
+  requests survive — no drain).  Every revert feeds the
+  :class:`RevertHysteresis` storm guard.
+* **re-planning** — a warm-started ``StagedPlanner`` resumes from the
+  previously deployed :class:`~repro.core.policy.MergePlan`
+  (``seed_plan=``), excluding breached/quarantined members
+  (``exclude_models=``) and reusing the similarity prefilter; the trainer
+  (real ``MergeTrainer`` or the coherence surrogate) re-validates.  The
+  planner runs cloud-side between serve slices — the engine keeps serving
+  the reverted configuration meanwhile.
+* **swapped** — the re-planned configuration hot-swaps through
+  ``MergeAwareEngine.apply_plan`` (optionally gated by ``validate_fn``),
+  restoring the merged memory savings minus the excluded members, and the
+  controller returns to *serving*.
+
+Every transition timestamp comes from the injected ``clock``, so the whole
+loop is deterministic under test; :meth:`LifecycleController.resume_state`
+serializes the "resume from last deployed state" artifact
+(:class:`~repro.core.drift.ResumeState`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+from repro.core.drift import DriftMonitor, ResumeState
+from repro.runtime.monitors import SampleCadence
+
+SERVING = "serving"
+BREACHED = "breached"
+REVERTED = "reverted"
+REPLANNING = "re-planning"
+SWAPPED = "swapped"
+
+
+@dataclasses.dataclass
+class LifecycleEvent:
+    """One state-machine transition: the state *entered*, when (controller
+    clock) and the transition's payload (breach accuracies, revert/rebind
+    accounting, swap stats, ...)."""
+
+    time: float
+    state: str
+    detail: dict
+
+
+@dataclasses.dataclass
+class RevertHysteresis:
+    """Revert-storm guard: a model whose content keeps flapping would
+    otherwise cycle breach → revert → re-merge → breach forever, paying a
+    retrain and two epoch bumps per lap.  Each revert quarantines the model
+    from re-planning for ``cooldown_s``; reverts recurring within
+    ``window_s`` escalate the quarantine geometrically (``backoff``), so a
+    flapping query converges to staying unmerged — correct but expensive,
+    exactly the §5.1 fallback — instead of thrashing the planner."""
+
+    cooldown_s: float = 60.0
+    window_s: float = 600.0
+    backoff: float = 4.0
+    clock: Callable[[], float] = time.monotonic
+
+    def __post_init__(self):
+        self.history: dict = {}  # model_id -> [revert timestamps]
+        self._until: dict = {}  # model_id -> quarantined-until timestamp
+
+    def record(self, model_id: str) -> float:
+        """Register a revert; returns the cooldown applied."""
+        now = self.clock()
+        recent = [t for t in self.history.get(model_id, [])
+                  if now - t <= self.window_s]
+        recent.append(now)
+        self.history[model_id] = recent
+        cool = self.cooldown_s * (self.backoff ** (len(recent) - 1))
+        self._until[model_id] = now + cool
+        return cool
+
+    def excluded(self) -> set:
+        """Model ids currently quarantined from re-planning."""
+        now = self.clock()
+        return {m for m, t in self._until.items() if now < t}
+
+    def restore(self, history: dict) -> None:
+        """Rebuild quarantine state from a serialized revert history
+        (:class:`ResumeState.revert_history`) — replays the escalation rule
+        against each model's most recent revert."""
+        self.history = {m: list(ts) for m, ts in history.items()}
+        self._until = {}
+        for mid, ts in self.history.items():
+            if not ts:
+                continue
+            last = max(ts)
+            recent = [t for t in ts if last - t <= self.window_s]
+            self._until[mid] = last + self.cooldown_s * (
+                self.backoff ** (len(recent) - 1))
+
+
+class LifecycleController:
+    """Wires DriftMonitor → revert → warm-start re-plan → hot swap over a
+    live engine.
+
+    ``sample_fn(model_ids) -> {model_id: batch}`` supplies the periodically
+    sampled edge frames (§5.1 step 4).  ``replan_fn(seed_plan, excluded) ->
+    MergePlan | None`` owns the cloud side — typically a ``StagedPlanner``
+    constructed with ``seed_plan=``/``exclude_models=`` and the similarity
+    prefilter; returning ``None`` (or an empty plan) skips the swap and the
+    loop returns to serving on the reverted configuration.  ``validate_fn``
+    optionally vets the re-planned configuration before it ships (§5.1
+    step 2: never deploy an unvetted merge).
+
+    :meth:`tick` advances AT MOST one transition and is meant to be called
+    from the serve loop between passes: detection+revert land in the tick
+    that sampled the breach (revert within one sampling period, queued
+    requests surviving), while re-planning and the swap occupy subsequent
+    ticks — the engine serves the reverted configuration in between, which
+    is exactly the adaptation lag ``benchmarks/drift_adapt.py`` measures.
+    """
+
+    def __init__(
+        self,
+        engine,  # MergeAwareEngine
+        monitor: DriftMonitor,
+        sample_fn: Callable,
+        replan_fn: Callable,
+        *,
+        deployed_plan=None,
+        sample_period_s: float = 1.0,
+        clock: Callable[[], float] = time.monotonic,
+        hysteresis: Optional[RevertHysteresis] = None,
+        validate_fn: Optional[Callable] = None,
+        on_event: Optional[Callable] = None,
+    ):
+        self.engine = engine
+        self.monitor = monitor
+        self.sample_fn = sample_fn
+        self.replan_fn = replan_fn
+        self.deployed_plan = deployed_plan
+        self.clock = clock
+        self.cadence = SampleCadence(sample_period_s, clock=clock)
+        self.hysteresis = hysteresis or RevertHysteresis(clock=clock)
+        self.validate_fn = validate_fn
+        self.on_event = on_event
+        self.state = SERVING
+        self.events: list = []
+        self.checks = 0
+        self.reverts = 0
+        self.swaps = 0
+        self.last_recover_s: Optional[float] = None
+        self._pending_plan = None
+        self._breach_time: Optional[float] = None
+
+    # -- state machine ---------------------------------------------------------
+
+    def tick(self) -> list:
+        """Advance by at most one transition; returns the events emitted."""
+        n0 = len(self.events)
+        if self.state == SERVING:
+            self._tick_serving()
+        elif self.state == REVERTED:
+            self._tick_replan()
+        elif self.state == REPLANNING:
+            self._tick_swap()
+        return self.events[n0:]
+
+    def _emit(self, state: str, **detail) -> LifecycleEvent:
+        ev = LifecycleEvent(self.clock(), state, detail)
+        self.events.append(ev)
+        if self.on_event:
+            self.on_event(ev)
+        return ev
+
+    def _tick_serving(self) -> None:
+        if not self.cadence.due():
+            return
+        self.cadence.mark()
+        mids = sorted(self.monitor.models)
+        report = self.monitor.check(self.sample_fn(mids))
+        self.checks += 1
+        if not report.breached:
+            return
+        self._breach_time = self.clock()
+        self._emit(BREACHED, checked=dict(report.checked),
+                   breached=sorted(report.breached))
+        # revert IMMEDIATELY — same sampling period as the detection; the
+        # engine keeps its queues (no drain) and its next pass re-plans the
+        # prefix groups at the new epoch
+        r = self.engine.revert(self.monitor, report)
+        self.reverts += len(report.reverted)
+        for mid in sorted(report.reverted):
+            self.hysteresis.record(mid)
+        self.state = REVERTED
+        self._emit(REVERTED, **r)
+
+    def _tick_replan(self) -> None:
+        excluded = self.hysteresis.excluded()
+        plan = self.replan_fn(self.deployed_plan, excluded)
+        self._pending_plan = plan
+        self.state = REPLANNING
+        self._emit(REPLANNING, excluded=sorted(excluded),
+                   groups=0 if plan is None else len(plan.groups))
+
+    def _tick_swap(self) -> None:
+        plan, self._pending_plan = self._pending_plan, None
+        ok = plan is not None and len(plan.groups) > 0
+        if ok and self.validate_fn is not None:
+            ok = bool(self.validate_fn(plan))
+        if not ok:
+            # nothing (valid) to deploy: keep serving the reverted state
+            self.state = SERVING
+            self._emit(SERVING, swapped=False)
+            return
+        swap = self.engine.apply_plan(plan)
+        self.deployed_plan = plan
+        self.swaps += 1
+        self.last_recover_s = (self.clock() - self._breach_time
+                               if self._breach_time is not None else None)
+        self.state = SERVING
+        self._emit(
+            SWAPPED, recover_s=self.last_recover_s,
+            shared_keys=len(swap["shared_keys"]),
+            **{k: v for k, v in swap.items() if k != "shared_keys"},
+        )
+
+    # -- resume-state round-trip ----------------------------------------------
+
+    def resume_state(self) -> ResumeState:
+        """Serializable "merging resumes from the previously deployed
+        state" snapshot (§5.1 step 5): deployed plan + current exclusions +
+        revert history."""
+        return ResumeState(
+            self.deployed_plan.to_json() if self.deployed_plan else None,
+            tuple(sorted(self.hysteresis.excluded())),
+            {m: list(ts) for m, ts in self.hysteresis.history.items()},
+            self.engine.store.epoch,
+        )
+
+    def restore(self, state: ResumeState) -> None:
+        """Adopt a serialized resume state: the deployed plan becomes the
+        warm-start seed for the next re-plan and the revert history rebuilds
+        the hysteresis quarantine (a restarted controller does not forget a
+        flapping query)."""
+        self.deployed_plan = state.plan()
+        self.hysteresis.restore(state.revert_history)

@@ -21,6 +21,20 @@ from repro.serving.scheduler import Scheduler
 
 
 @dataclasses.dataclass
+class DriftEvent:
+    """An injected accuracy step for one instance at a simulated time: frames
+    the instance processes at/after ``at_ms`` earn ``accuracy`` credit.  A
+    drifted query is one event down (content changed under a merged model);
+    an *adapting* deployment adds a second event back up at breach time +
+    time-to-recover — the gap between the two timelines is the adaptation
+    lag the lifecycle loop (DESIGN.md L1) is paid to close."""
+
+    at_ms: float
+    instance_id: str
+    accuracy: float
+
+
+@dataclasses.dataclass
 class SimResult:
     horizon_ms: float
     processed: dict
@@ -49,6 +63,7 @@ def effective_accuracy_objective(
     horizon_ms: float = 20_000.0,
     fps: float = 30.0,
     sla_ms: float = 100.0,
+    drift_events: Optional[list] = None,
 ) -> Callable:
     """Simulator-in-the-loop plan objective for the staged planner: returns
     ``objective(store, committed_groups) -> simulate(...).overall_accuracy``
@@ -63,7 +78,8 @@ def effective_accuracy_objective(
         sched = Scheduler(insts, capacity_bytes, costs)
         b = batches or {i.instance_id: 1 for i in insts}
         return simulate(sched, b, horizon_ms=horizon_ms, fps=fps,
-                        sla_ms=sla_ms).overall_accuracy
+                        sla_ms=sla_ms,
+                        drift_events=drift_events).overall_accuracy
 
     return objective
 
@@ -74,10 +90,17 @@ def simulate(
     horizon_ms: float = 60_000.0,
     fps: float = 30.0,
     sla_ms: float = 100.0,
+    drift_events: Optional[list] = None,
 ) -> SimResult:
     """Event loop: visit instances round-robin; at each visit, load (evicting
     as needed, cost hidden behind the previous execution where possible),
-    then run as many batches as are pending & fresh."""
+    then run as many batches as are pending & fresh.
+
+    ``drift_events`` injects accuracy steps (:class:`DriftEvent`): per-frame
+    accuracy credit follows the value in force when the frame *finishes*, so
+    the objective scores the adaptation lag between a drift and the loop's
+    recovery.  Without events the closed form ``processed_fraction x
+    accuracy`` is used — bit-identical to the historical accounting."""
     order = [i.instance_id for i in scheduler.order]
     frame_interval = 1000.0 / fps
     next_frame = {i: 0.0 for i in order}  # arrival time of next frame
@@ -88,6 +111,15 @@ def simulate(
     t = 0.0
     prev_exec_end = 0.0  # pipelining: loads overlap previous execution
     cycles = 0
+    pending_events = sorted(drift_events or [], key=lambda e: e.at_ms)
+    cur_acc = {i: scheduler.instances[i].accuracy for i in order}
+    credit = {i: 0.0 for i in order}
+
+    def apply_events(now: float):
+        while pending_events and pending_events[0].at_ms <= now:
+            e = pending_events.pop(0)
+            if e.instance_id in cur_acc:
+                cur_acc[e.instance_id] = e.accuracy
 
     def admit_frames(now: float):
         for i in order:
@@ -128,10 +160,12 @@ def simulate(
             exec_ms = scheduler.run_time_ms(inst_id, take)
             # frames must finish within SLA
             done_t = t + exec_ms
+            apply_events(done_t)
             batch_frames = [q.popleft() for _ in range(take)]
             for f in batch_frames:
                 if done_t - f <= sla_ms:
                     processed[inst_id] += 1
+                    credit[inst_id] += cur_acc[inst_id]
                 else:
                     skipped[inst_id] += 1
             t = done_t
@@ -159,7 +193,10 @@ def simulate(
     acc = {}
     for i in order:
         total = processed[i] + skipped[i]
-        frac = processed[i] / max(total, 1)
-        acc[i] = frac * scheduler.instances[i].accuracy
+        if drift_events:
+            acc[i] = credit[i] / max(total, 1)
+        else:
+            frac = processed[i] / max(total, 1)
+            acc[i] = frac * scheduler.instances[i].accuracy
     return SimResult(horizon_ms, processed, skipped, swap_total, exec_total,
                      cycles, acc)

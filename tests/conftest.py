@@ -1,46 +1,13 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — tests must see ONE device
-(the 512-device override is exclusively dryrun.py's, per the mandate)."""
-import sys
-import types
+(the 512-device override is exclusively dryrun.py's, per the mandate).
 
-import pytest
-
-try:  # pragma: no cover - exercised only on hosts without hypothesis
-    import hypothesis  # noqa: F401
-except ImportError:
-    # The container may lack hypothesis (no network installs allowed).  Stub
-    # it so test modules still collect: property tests become explicit skips
-    # instead of collection errors, and every deterministic test in the same
-    # file keeps running.
-    def _strategy(*args, **kwargs):
-        return object()
-
-    _st = types.ModuleType("hypothesis.strategies")
-    for _name in ("booleans", "floats", "integers", "just", "lists", "none",
-                  "one_of", "sampled_from", "text", "tuples"):
-        setattr(_st, _name, _strategy)
-
-    def _given(*args, **kwargs):
-        def deco(fn):
-            def skipper():
-                pytest.skip("hypothesis not installed — property test skipped")
-
-            skipper.__name__ = fn.__name__
-            skipper.__doc__ = fn.__doc__
-            return skipper
-
-        return deco
-
-    def _settings(*args, **kwargs):
-        return lambda fn: fn
-
-    _hyp = types.ModuleType("hypothesis")
-    _hyp.given, _hyp.settings, _hyp.strategies = _given, _settings, _st
-    sys.modules["hypothesis"] = _hyp
-    sys.modules["hypothesis.strategies"] = _st
-
+``hypothesis`` is a REAL optional dependency (the container may lack it —
+no network installs allowed): property-based tests live in modules that
+open with ``pytest.importorskip("hypothesis")`` (tests/test_properties.py)
+so they skip cleanly when it is absent and run when it is installed.  No
+stub modules are injected — deterministic tests never import hypothesis."""
 import jax
-import jax.numpy as jnp
+import pytest
 
 
 @pytest.fixture(scope="session")

@@ -24,6 +24,7 @@ from repro.utils.tree import flatten_paths
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
 from benchmarks import lm_merging as LM  # noqa: E402
 
+ALL_FAMILIES = sorted(ADAPTERS)  # incl. records-only moe/ssm/hybrid/vlm/encdec
 SPLIT_FAMILIES = sorted(n for n, a in ADAPTERS.items() if a.can_split)
 CALIB_FAMILIES = sorted(n for n, a in ADAPTERS.items() if a.can_calibrate)
 
@@ -39,15 +40,40 @@ def _payload(adapter, cfg, key):
 # ---------------------------------------------------------------------------
 
 
-def test_every_family_extracts_records_without_allocation():
-    for name, adapter in sorted(ADAPTERS.items()):
-        cfg = adapter.default_config()
-        shapes = adapter.eval_params(cfg)  # ShapeDtypeStructs, no weights
-        recs = adapter.records(cfg, shapes, "m0")
-        flat = flatten_paths(shapes)
-        assert len(recs) == len(flat), name
-        assert {r.path for r in recs} == set(flat), name
-        assert all(r.model_id == "m0" and r.bytes > 0 for r in recs), name
+@pytest.mark.parametrize("family", ALL_FAMILIES)
+def test_family_extracts_records_without_allocation(family):
+    """Signature extraction on ``eval_shape`` trees — the merge-tier floor
+    EVERY registered family must clear, records-only ones included: one
+    record per leaf, complete path coverage, positive sizes, normalised
+    positions, and a (kind, shape, dtype) signature whose kind strips the
+    numeric path segments (two stacked blocks share a kind)."""
+    adapter = ADAPTERS[family]
+    cfg = adapter.default_config()
+    shapes = adapter.eval_params(cfg)  # ShapeDtypeStructs, no weights
+    recs = adapter.records(cfg, shapes, "m0")
+    flat = flatten_paths(shapes)
+    assert len(recs) == len(flat)
+    assert {r.path for r in recs} == set(flat)
+    assert all(r.model_id == "m0" and r.bytes > 0 for r in recs)
+    assert all(0.0 <= r.position < 1.0 for r in recs)
+    for r in recs:
+        kind, shape, dtype = r.signature
+        assert shape == tuple(flat[r.path].shape)
+        assert dtype == str(flat[r.path].dtype)
+        assert not any(seg.isdigit() for seg in kind.split("/"))
+
+
+@pytest.mark.parametrize("family", ALL_FAMILIES)
+def test_family_records_deterministic_across_extractions(family):
+    """Two independent extractions over descriptor trees agree exactly —
+    cloud-side planning and edge-side application must name and group the
+    same layers (stable signatures are what MergePlans are keyed on)."""
+    adapter = ADAPTERS[family]
+    cfg = adapter.default_config()
+    a = adapter.records(cfg, adapter.eval_params(cfg), "m0")
+    b = adapter.records(cfg, adapter.eval_params(cfg), "m0")
+    assert [(r.path, r.signature, r.bytes, r.position) for r in a] \
+        == [(r.path, r.signature, r.bytes, r.position) for r in b]
 
 
 @pytest.mark.parametrize("family", SPLIT_FAMILIES)

@@ -1,0 +1,377 @@
+"""Drift-adapt lifecycle loop (DESIGN.md L1): breach → revert → warm-start
+re-plan → retrain → hot swap, deterministic under an injected clock.
+
+The end-to-end scenario is imported from ``benchmarks.drift_adapt`` (the
+shipping benchmark) so test and benchmark can never drift apart; unit tests
+cover the pieces: revert buffer hygiene (the apply_plan aliasing guard's
+mirror), epoch-neutral checks after a revert, suffix-bank invalidation,
+warm-start candidate seeding, revert-storm hysteresis, resume-state
+round-trip, the sampling cadence and the simulator's drift-event injection.
+"""
+import pathlib
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (
+    ParamStore, RegisteredModel, StagedPlanner, enumerate_groups,
+)
+from repro.core.drift import DriftMonitor, DriftReport, ResumeState
+from repro.core.merging import MergeResult
+from repro.models.registry import get_adapter
+from repro.runtime.monitors import SampleCadence
+from repro.serving.executor import Request
+from repro.serving.lifecycle import (
+    BREACHED, REPLANNING, REVERTED, SWAPPED, LifecycleController,
+    RevertHysteresis,
+)
+from repro.serving.scheduler import Instance, Scheduler
+from repro.serving.simulator import DriftEvent, simulate
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+from benchmarks import drift_adapt as DA  # noqa: E402
+
+MIDS4 = ("cam-A", "cam-B", "cam-C", "cam-D")
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: the shipping scenario at 4-model scale
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def timeline():
+    rows, info = DA.run_timeline(with_loop=True, mids=MIDS4, n_periods=6,
+                                 drift_period=2)
+    return rows, info
+
+
+def test_breach_detected_and_reverted_within_one_sampling_period(timeline):
+    rows, info = timeline
+    ctl = info["controller"]
+    breach = next(e for e in ctl.events if e.state == BREACHED)
+    revert = next(e for e in ctl.events if e.state == REVERTED)
+    # drift injected at the start of a period; the SAME period's check sees it
+    assert breach.time - info["drift_time"] <= DA.PERIOD_S
+    assert DA.DRIFTED in breach.detail["breached"]
+    assert revert.detail["reverted"] == [DA.DRIFTED]
+    # staged revert: ONE epoch bump, queues untouched (no drain)
+    assert revert.detail["epoch_bumps"] == 1
+    assert revert.detail["pending_requests"] > 0
+    assert info["completed"] == info["submitted"]
+    assert info["engine"].skipped == 0
+
+
+def test_replan_excludes_breached_member_and_hot_swaps(timeline):
+    rows, info = timeline
+    ctl = info["controller"]
+    replan = next(e for e in ctl.events if e.state == REPLANNING)
+    swap = next(e for e in ctl.events if e.state == SWAPPED)
+    assert DA.DRIFTED in replan.detail["excluded"]
+    assert DA.DRIFTED not in ctl.deployed_plan.models()  # warm re-plan
+    surviving = set(MIDS4) - {DA.DRIFTED}
+    assert ctl.deployed_plan.models() == surviving
+    assert swap.detail["epoch_bumps"] == 1
+    assert ctl.swaps == 1
+    # revert at detection tick, re-plan next tick, swap the one after
+    assert ctl.last_recover_s == pytest.approx(2 * DA.PERIOD_S)
+    # warm start resumed from the deployed plan: provenance says so
+    rp = info["replans"][0]
+    assert rp.plan.provenance["warm_start"] is True
+    assert rp.plan.provenance["excluded"] == [DA.DRIFTED]
+
+
+def test_reverted_model_serves_new_original_bitwise(timeline):
+    rows, info = timeline
+    eng, adapter, cfg = info["engine"], info["adapter"], info["cfg"]
+    # post-swap prefix plan: survivors share one group, B is a singleton
+    groups = eng.prefix_groups()
+    assert [sorted(g) for g in groups if len(g) > 1] == [
+        sorted(set(MIDS4) - {DA.DRIFTED})]
+    img = jax.random.normal(jax.random.PRNGKey(123), (1, 32, 32, 3))
+    eng.submit(Request(DA.DRIFTED, img, 0.0, 1e6))
+    eng.serve(horizon_s=30.0)
+    out = eng.completions[-1].result
+    direct = adapter.forward(cfg, info["originals"][DA.DRIFTED], img)
+    assert np.array_equal(np.asarray(out), np.asarray(direct[0]))
+    # recovery is visible in the accuracy-over-time rows
+    assert rows[-1]["breached_query_agreement"] == 1.0
+
+
+def test_resume_state_roundtrip_preserves_exclusions(timeline):
+    rows, info = timeline
+    ctl = info["controller"]
+    state = ctl.resume_state()
+    back = ResumeState.from_json(state.to_json())
+    assert back == state
+    assert DA.DRIFTED in back.excluded  # cooldown still running
+
+    # a restarted controller adopts the plan + quarantine
+    clone = LifecycleController(
+        info["engine"], ctl.monitor, ctl.sample_fn, ctl.replan_fn,
+        sample_period_s=DA.PERIOD_S, clock=ctl.clock,
+        hysteresis=RevertHysteresis(
+            cooldown_s=ctl.hysteresis.cooldown_s, clock=ctl.clock),
+    )
+    clone.restore(back)
+    assert clone.deployed_plan == ctl.deployed_plan
+    assert DA.DRIFTED in clone.hysteresis.excluded()
+
+
+# ---------------------------------------------------------------------------
+# satellite: drift-revert correctness regressions
+# ---------------------------------------------------------------------------
+
+
+def _merged_trio():
+    adapter = get_adapter("small_cnn")
+    cfg = adapter.default_config()
+    zoo = DA.cnn_zoo(adapter, cfg, mids=("A", "B", "C"))
+    store = ParamStore.from_models(dict(zoo))
+    recs = sum((adapter.records(cfg, p, m) for m, p in zoo.items()), [])
+    trunk = [g for g in enumerate_groups(recs)
+             if not any(r.path.startswith("head/") for r in g.records)]
+    for g in trunk:
+        store.merge_group(g)
+    regs = [RegisteredModel(m, lambda p, b: 0.0, lambda p, b: 1.0,
+                            lambda e: [], None, 0.9, 1.0) for m in zoo]
+    return adapter, cfg, zoo, store, DriftMonitor(store, dict(zoo), regs)
+
+
+def test_revert_does_not_leak_shared_buffers_of_survivors():
+    """Mirror of the PR-2 apply_plan aliasing guard: reverting one member
+    must leave every shared buffer the SURVIVORS still reference intact —
+    same key, same array — while only truly orphaned keys are GC'd."""
+    adapter, cfg, zoo, store, monitor = _merged_trio()
+    shared_before = {k: store.buffers[k] for k in store.shared_keys()}
+    assert shared_before
+    epoch0 = store.epoch
+
+    report = monitor.revert(DriftReport({}, {"B"}, set()))
+    assert report.reverted == {"B"}
+    assert store.epoch == epoch0 + 1  # staged: ONE bump for the whole revert
+    for k, buf in shared_before.items():
+        assert store.buffers[k] is buf  # survivors' shared buffers untouched
+        for m in ("A", "C"):
+            assert k in set(store.bindings[m].values())
+        assert k not in set(store.bindings["B"].values())
+    # B is fully private again, bound to its ORIGINAL leaves
+    for path, key in store.bindings["B"].items():
+        assert key == f"B:{path}"
+    np.testing.assert_array_equal(
+        np.asarray(store.materialize("B")["stem"]["w"]),
+        np.asarray(zoo["B"]["stem"]["w"]))
+    # no orphans left behind
+    live = {k for b in store.bindings.values() for k in b.values()}
+    assert set(store.buffers) == live
+
+
+def test_revert_of_all_members_gcs_shared_buffers():
+    adapter, cfg, zoo, store, monitor = _merged_trio()
+    monitor.revert(DriftReport({}, {"A", "B", "C"}, set()))
+    assert not store.shared_keys()
+    live = {k for b in store.bindings.values() for k in b.values()}
+    assert set(store.buffers) == live  # orphaned shared keys were GC'd
+
+
+def test_drift_check_stays_epoch_neutral_after_revert():
+    """A revert bumps the epoch exactly once; the NEXT checks must ride the
+    rebuilt cache without bumping again or re-materialising."""
+    adapter, cfg, zoo, store, monitor = _merged_trio()
+    monitor.revert(DriftReport({}, {"B"}, set()))
+    for m in zoo:  # warm the serve cache, as the running engine would
+        store.materialize_cached(m)
+    epoch0, mats0 = store.epoch, dict(store.materializations)
+    batch = {"images": jax.random.normal(jax.random.PRNGKey(0), (4, 32, 32, 3))}
+    report = monitor.check({m: batch for m in zoo})
+    assert set(report.checked) == set(zoo)
+    assert store.epoch == epoch0
+    assert store.materializations == mats0
+
+
+def test_revert_delta_mirrors_binding_deltas():
+    adapter, cfg, zoo, store, monitor = _merged_trio()
+    before = dict(store.bindings["B"])
+    delta = monitor.revert_delta(DriftReport({}, {"B"}, set()))
+    assert dict(store.bindings["B"]) == before  # pure query
+    assert {p for (m, p) in delta} == set(before)
+    for (m, p), (old, new) in delta.items():
+        assert old == before[p] and new == f"B:{p}"
+    monitor.revert(DriftReport({}, {"B"}, set()))
+    for (m, p), (old, new) in delta.items():
+        assert store.bindings[m][p] == new
+
+
+def test_revert_invalidates_suffix_bank_in_same_epoch_bump():
+    """The bank materialisation caches live in the same store cache the
+    revert's single bump clears: a post-revert bank over the survivors is
+    ONE rebuild, not a stale pytree."""
+    adapter, cfg, zoo, store, monitor = _merged_trio()
+    sp = adapter.split(cfg)
+    bank_ids = ("A", "C")
+    bid = ParamStore.bank_id(bank_ids)
+    store.materialize_bank(bank_ids, sp.suffix_paths)
+    store.materialize_bank(bank_ids, sp.suffix_paths)  # cache hit
+    assert store.materializations[bid] == 1
+    monitor.revert(DriftReport({}, {"B"}, set()))
+    store.materialize_bank(bank_ids, sp.suffix_paths)
+    assert store.materializations[bid] == 2  # exactly one rebuild post-revert
+
+
+# ---------------------------------------------------------------------------
+# warm-start planning from a deployed plan
+# ---------------------------------------------------------------------------
+
+
+class _CountingTrainer:
+    def __init__(self):
+        self.calls = 0
+
+    def train(self, store, models):
+        self.calls += 1
+        return MergeResult(True, {m.model_id: 1.0 for m in models}, set(), 1,
+                           0.0, [])
+
+
+def test_seed_plan_candidates_lead_and_exclude_breached():
+    adapter, cfg, zoo, store, monitor = _merged_trio()
+    recs = sum((adapter.records(cfg, p, m) for m, p in zoo.items()), [])
+    trunk_recs = [r for r in recs if not r.path.startswith("head/")]
+    deployed = store.export_plan([g for g in enumerate_groups(trunk_recs)])
+
+    fresh = ParamStore.from_models(dict(zoo))
+    regs = [RegisteredModel(m, lambda p, b: 0.0, lambda p, b: 1.0,
+                            lambda e: [], None, 0.9, 1.0) for m in zoo]
+    planner = StagedPlanner(fresh, regs, recs, _CountingTrainer(),
+                            exclude_models={"B"}, seed_plan=deployed)
+    queue = planner.candidates()
+    seed_sigs = [pg.signature for pg in deployed.groups]
+    # seeds first, in deployed commit order, with the breached member gone
+    assert [g.signature for g in queue[:len(seed_sigs)]] == seed_sigs
+    for g in queue:
+        assert "B" not in g.models
+    # same-signature enumerated candidates are superseded, not duplicated
+    assert len([g for g in queue if g.signature in set(seed_sigs)]) \
+        == len(seed_sigs)
+
+    res = planner.run()
+    assert res.committed >= 1
+    assert res.plan.models() == {"A", "C"}
+    assert res.plan.provenance["warm_start"] is True
+    assert res.plan.provenance["excluded"] == ["B"]
+
+
+def test_warm_start_attempts_no_more_than_cold():
+    adapter, cfg, zoo, store, monitor = _merged_trio()
+    recs = sum((adapter.records(cfg, p, m) for m, p in zoo.items()), [])
+    trunk_recs = [r for r in recs if not r.path.startswith("head/")]
+    deployed = store.export_plan(list(enumerate_groups(trunk_recs)))
+
+    def run(seed):
+        tr = _CountingTrainer()
+        res = StagedPlanner(ParamStore.from_models(dict(zoo)),
+                            [RegisteredModel(m, lambda p, b: 0.0,
+                                             lambda p, b: 1.0, lambda e: [],
+                                             None, 0.9, 1.0) for m in zoo],
+                            recs, tr, exclude_models={"B"},
+                            seed_plan=seed).run()
+        return res, tr.calls
+
+    warm, warm_calls = run(deployed)
+    cold, cold_calls = run(None)
+    assert warm_calls <= cold_calls
+    assert warm.fraction_saved >= cold.fraction_saved
+
+
+# ---------------------------------------------------------------------------
+# hysteresis + cadence + simulator drift injection
+# ---------------------------------------------------------------------------
+
+
+class Clock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+
+def test_hysteresis_cooldown_and_storm_escalation():
+    clk = Clock()
+    h = RevertHysteresis(cooldown_s=10.0, window_s=100.0, backoff=4.0,
+                         clock=clk)
+    h.record("B")
+    assert h.excluded() == {"B"}
+    clk.t = 11.0
+    assert h.excluded() == set()  # cooldown expired: may be re-planned
+    # second revert inside the window: quarantine escalates geometrically
+    cool = h.record("B")
+    assert cool == pytest.approx(40.0)
+    clk.t = 30.0
+    assert h.excluded() == {"B"}  # would have expired under the base cooldown
+    clk.t = 52.0
+    assert h.excluded() == set()
+    # restore() replays the same escalation from serialized history
+    h2 = RevertHysteresis(cooldown_s=10.0, window_s=100.0, backoff=4.0,
+                          clock=clk)
+    h2.restore({"B": [0.0, 11.0]})
+    assert h2._until["B"] == pytest.approx(51.0)
+
+
+def test_sample_cadence_is_clock_injected_and_phase_stable():
+    clk = Clock()
+    c = SampleCadence(10.0, clock=clk)
+    assert not c.due()
+    clk.t = 10.0
+    assert c.due()
+    c.mark()
+    assert not c.due()
+    clk.t = 20.5  # late tick: next boundary stays on the 10 s grid
+    assert c.due()
+    c.mark()
+    clk.t = 30.0
+    assert c.due()
+    # falling several periods behind realigns instead of bursting
+    c.mark()
+    clk.t = 75.0
+    assert c.due()
+    c.mark()
+    assert not c.due()
+    clk.t = 84.9
+    assert not c.due()
+    clk.t = 85.0
+    assert c.due()
+
+
+def _sim_insts():
+    GB = int(1e9)
+    from repro.serving.costs import costs_for
+
+    insts = [Instance(f"i{k}", "tiny-yolo",
+                      frozenset({f"i{k}:w"}), {f"i{k}:w": GB // 100},
+                      accuracy=1.0) for k in range(2)]
+    return insts, {"tiny-yolo": costs_for("tiny-yolo")}
+
+
+def test_simulator_drift_event_injection_scores_adaptation_lag():
+    insts, costs = _sim_insts()
+    batches = {i.instance_id: 1 for i in insts}
+
+    def score(events):
+        return simulate(Scheduler(insts, 10**9, costs), batches,
+                        horizon_ms=10_000.0, drift_events=events)
+
+    clean = score(None)
+    drifted = score([DriftEvent(5_000.0, "i0", 0.2)])
+    recovered = score([DriftEvent(5_000.0, "i0", 0.2),
+                       DriftEvent(7_000.0, "i0", 1.0)])
+    assert drifted.overall_accuracy < recovered.overall_accuracy \
+        < clean.overall_accuracy
+    # untouched instance unaffected by i0's events
+    assert drifted.accuracy["i1"] == pytest.approx(clean.accuracy["i1"])
+    # an event at t=0 with the instance's own accuracy reproduces the
+    # closed-form accounting (same processed fractions, same credit)
+    neutral = score([DriftEvent(0.0, "i0", 1.0)])
+    assert neutral.overall_accuracy == pytest.approx(clean.overall_accuracy)

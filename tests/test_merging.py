@@ -1,17 +1,14 @@
 """Merging-engine invariants: signatures, groups, ParamStore, planner.
 
-Hypothesis property tests cover the system's core invariants:
-  * materialisation round-trips bindings exactly;
-  * resident bytes == sum of unique buffer bytes, and merging N appearances
-    of a layer saves exactly (N-1) x leaf_bytes;
-  * merge->unmerge restores per-model isolation (no aliasing leaks);
-  * group enumeration is memory-forward sorted and signature-sound.
+Deterministic structural tests only — the hypothesis property tests over
+the same invariants (resident-bytes accounting, materialisation
+round-trips, AIMD halving) live in tests/test_properties.py, which skips
+cleanly when hypothesis is not installed.
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import (
     ParamStore, RegisteredModel, enumerate_groups, potential_savings,
@@ -137,77 +134,6 @@ def test_gradients_sum_into_shared_buffers(rng):
     gb = 2.0 * jnp.outer(jnp.ones(4) * jnp.sum(jnp.ones((4,)) * x), x)  # 2(w x) x^T
     np.testing.assert_allclose(np.asarray(grads[shared_key]),
                                np.asarray(ga + gb), rtol=1e-5)
-
-
-# ---------------------------------------------------------------------------
-# Hypothesis property tests
-# ---------------------------------------------------------------------------
-
-leaf_shapes = st.lists(
-    st.sampled_from([(4, 4), (8, 8), (4, 8), (16,)]), min_size=1, max_size=5
-)
-
-
-@settings(max_examples=25, deadline=None)
-@given(shapes_a=leaf_shapes, shapes_b=leaf_shapes, seed=st.integers(0, 2**16))
-def test_property_resident_bytes_unique_buffers(shapes_a, shapes_b, seed):
-    key = jax.random.PRNGKey(seed)
-
-    def mk(key, shapes):
-        ks = jax.random.split(key, len(shapes) + 1)
-        return {f"l{i}": jax.random.normal(ks[i], s) for i, s in enumerate(shapes)}
-
-    pa, pb = mk(key, shapes_a), mk(jax.random.PRNGKey(seed + 1), shapes_b)
-    store = ParamStore.from_models({"a": pa, "b": pb})
-    recs = records_from_params(pa, "a") + records_from_params(pb, "b")
-    groups = enumerate_groups(recs)
-    total_before = store.resident_bytes()
-    expected_savings = sum(g.savings for g in groups)
-    for g in groups:
-        store.merge_group(g)
-    assert store.resident_bytes() == total_before - expected_savings
-    # materialisation round-trips structure for both models
-    for mid, orig in (("a", pa), ("b", pb)):
-        mat = store.materialize(mid)
-        assert set(flatten_paths(mat)) == set(flatten_paths(orig))
-        for path, leaf in flatten_paths(mat).items():
-            assert leaf.shape == flatten_paths(orig)[path].shape
-
-
-@settings(max_examples=25, deadline=None)
-@given(n_models=st.integers(2, 5), seed=st.integers(0, 2**16))
-def test_property_potential_savings_bounds(n_models, seed):
-    """0 <= saved <= total*(n-1)/n for n identical models; == for identical."""
-    key = jax.random.PRNGKey(seed)
-    base = {f"l{i}": jax.random.normal(key, (8, 8)) for i in range(3)}
-    recs = []
-    for m in range(n_models):
-        recs += records_from_params(base, f"m{m}")
-    out = potential_savings(recs)
-    assert out["saved_bytes"] == out["total_bytes"] * (n_models - 1) // n_models
-
-
-@settings(max_examples=20, deadline=None)
-@given(seed=st.integers(0, 2**16), drop_rounds=st.integers(0, 3))
-def test_property_aimd_halving_keeps_heaviest(seed, drop_rounds):
-    """drop_earliest_half always keeps the latest-position (heaviest) half."""
-    import random as pyrandom
-
-    r = pyrandom.Random(seed)
-    from repro.core.signatures import LayerRecord
-
-    recs = [
-        LayerRecord(f"m{i}", f"p{i}", ("k", (4, 4), 1), 64, r.random())
-        for i in range(r.randint(2, 16))
-    ]
-    g = LayerGroup(("k", (4, 4), 1), recs)
-    for _ in range(drop_rounds):
-        if len(g.records) < 2:
-            break
-        prev = sorted(r2.position for r2 in g.records)
-        g = g.drop_earliest_half()
-        kept = sorted(r2.position for r2 in g.records)
-        assert kept == prev[len(prev) // 2 :]
 
 
 # ---------------------------------------------------------------------------

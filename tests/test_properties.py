@@ -1,0 +1,267 @@
+"""Hypothesis property tests over the system's core invariants.
+
+This module is the ONE place property tests live: it opens with
+``pytest.importorskip("hypothesis")`` so every test here auto-skips when the
+dependency is absent (the container has no network installs) and runs for
+real when it is installed — no stub modules, no fake strategies.
+
+Covered invariants:
+  * ParamStore: resident bytes == unique buffer bytes; merging saves exactly
+    the group's ``savings``; materialisation round-trips structure.
+  * ``potential_savings`` bounds for identical models.
+  * AIMD ``drop_earliest_half`` keeps the latest-position half.
+  * Scheduler memory admission never exceeds capacity.
+  * MergePlan JSON round-trip equality (groups, records, weights payload).
+  * ``pad_stack`` shape/row-preservation/padding invariants.
+  * ``disambiguate_base`` injectivity under repeated same-signature merges.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import (  # noqa: E402
+    LayerRecord, MergePlan, ParamStore, enumerate_groups, potential_savings,
+    records_from_params,
+)
+from repro.core.groups import LayerGroup, disambiguate_base  # noqa: E402
+from repro.serving.costs import costs_for  # noqa: E402
+from repro.serving.scheduler import Instance, Scheduler  # noqa: E402
+from repro.serving.workload import bucket_for, pad_stack  # noqa: E402
+from repro.utils.tree import flatten_paths  # noqa: E402
+
+# ---------------------------------------------------------------------------
+# store / groups (moved from test_merging.py when the hypothesis stub died)
+# ---------------------------------------------------------------------------
+
+leaf_shapes = st.lists(
+    st.sampled_from([(4, 4), (8, 8), (4, 8), (16,)]), min_size=1, max_size=5
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shapes_a=leaf_shapes, shapes_b=leaf_shapes, seed=st.integers(0, 2**16))
+def test_property_resident_bytes_unique_buffers(shapes_a, shapes_b, seed):
+    key = jax.random.PRNGKey(seed)
+
+    def mk(key, shapes):
+        ks = jax.random.split(key, len(shapes) + 1)
+        return {f"l{i}": jax.random.normal(ks[i], s) for i, s in enumerate(shapes)}
+
+    pa, pb = mk(key, shapes_a), mk(jax.random.PRNGKey(seed + 1), shapes_b)
+    store = ParamStore.from_models({"a": pa, "b": pb})
+    recs = records_from_params(pa, "a") + records_from_params(pb, "b")
+    groups = enumerate_groups(recs)
+    total_before = store.resident_bytes()
+    expected_savings = sum(g.savings for g in groups)
+    for g in groups:
+        store.merge_group(g)
+    assert store.resident_bytes() == total_before - expected_savings
+    # materialisation round-trips structure for both models
+    for mid, orig in (("a", pa), ("b", pb)):
+        mat = store.materialize(mid)
+        assert set(flatten_paths(mat)) == set(flatten_paths(orig))
+        for path, leaf in flatten_paths(mat).items():
+            assert leaf.shape == flatten_paths(orig)[path].shape
+
+
+@settings(max_examples=25, deadline=None)
+@given(n_models=st.integers(2, 5), seed=st.integers(0, 2**16))
+def test_property_potential_savings_bounds(n_models, seed):
+    """0 <= saved <= total*(n-1)/n for n identical models; == for identical."""
+    key = jax.random.PRNGKey(seed)
+    base = {f"l{i}": jax.random.normal(key, (8, 8)) for i in range(3)}
+    recs = []
+    for m in range(n_models):
+        recs += records_from_params(base, f"m{m}")
+    out = potential_savings(recs)
+    assert out["saved_bytes"] == out["total_bytes"] * (n_models - 1) // n_models
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16), drop_rounds=st.integers(0, 3))
+def test_property_aimd_halving_keeps_heaviest(seed, drop_rounds):
+    """drop_earliest_half always keeps the latest-position (heaviest) half."""
+    import random as pyrandom
+
+    r = pyrandom.Random(seed)
+    recs = [
+        LayerRecord(f"m{i}", f"p{i}", ("k", (4, 4), 1), 64, r.random())
+        for i in range(r.randint(2, 16))
+    ]
+    g = LayerGroup(("k", (4, 4), 1), recs)
+    for _ in range(drop_rounds):
+        if len(g.records) < 2:
+            break
+        prev = sorted(r2.position for r2 in g.records)
+        g = g.drop_earliest_half()
+        kept = sorted(r2.position for r2 in g.records)
+        assert kept == prev[len(prev) // 2 :]
+
+
+# ---------------------------------------------------------------------------
+# scheduler (moved from test_serving.py)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(cap_frac=st.floats(0.2, 1.0), seed=st.integers(0, 100))
+def test_property_scheduler_memory_invariant(cap_frac, seed):
+    """Resident bytes never exceed capacity after any load sequence."""
+    import random
+
+    r = random.Random(seed)
+    costs = {"tiny-yolo": costs_for("tiny-yolo")}
+    insts = [
+        Instance(f"i{k}", "tiny-yolo",
+                 frozenset(kb := {f"i{k}:{j}": r.randint(1, 50) * 1_000_000
+                                  for j in range(3)}), kb)
+        for k in range(5)
+    ]
+    total = sum(i.param_bytes for i in insts)
+    cap = int(cap_frac * total) + 200_000_000  # + activation headroom
+    sched = Scheduler(insts, cap, costs)
+    for _ in range(20):
+        iid = f"i{r.randint(0, 4)}"
+        sched.load(iid, 1)
+        assert sched.mem.used_bytes <= cap
+
+
+# ---------------------------------------------------------------------------
+# MergePlan JSON round-trip equality
+# ---------------------------------------------------------------------------
+
+_path_seg = st.sampled_from(["stem", "blk", "head", "fc", "conv1"])
+_shapes = st.sampled_from([(4, 4), (8,), (2, 3, 4), (16, 2)])
+
+
+@st.composite
+def _group_records(draw):
+    """Records of one signature spread over 2-4 models, 1-2 appearances
+    each — the shape ``enumerate_groups`` produces."""
+    seg = draw(_path_seg)
+    shape = draw(_shapes)
+    sig = (seg + "/w", tuple(shape), "float32")
+    n_models = draw(st.integers(2, 4))
+    per_model = draw(st.integers(1, 2))
+    nbytes = int(np.prod(shape)) * 4
+    recs = []
+    for m in range(n_models):
+        for k in range(per_model):
+            recs.append(LayerRecord(f"m{m}", f"{seg}/{k}/w", sig, nbytes,
+                                    k / max(per_model, 1)))
+    return recs
+
+
+@settings(max_examples=40, deadline=None)
+@given(groups=st.lists(_group_records(), min_size=1, max_size=4),
+       indent=st.one_of(st.none(), st.just(2)))
+def test_property_mergeplan_json_roundtrip(groups, indent):
+    """from_json(to_json(plan)) == plan — groups, signatures, records,
+    provenance AND binding deltas — for any committed-group structure."""
+    layer_groups = [LayerGroup(recs[0].signature, recs) for recs in groups]
+    plan = MergePlan.from_groups(layer_groups, provenance={"scorer": "mf"})
+    back = MergePlan.from_json(plan.to_json(indent=indent))
+    assert back == plan
+    assert back.binding_deltas() == plan.binding_deltas()
+    assert back.models() == plan.models()
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16), shape=_shapes)
+def test_property_mergeplan_weights_payload_roundtrip_bitwise(seed, shape):
+    """Shared-weight payloads (base64 array bytes) survive the JSON
+    round-trip bitwise and reproduce on a fresh store via apply_plan."""
+    key = jax.random.PRNGKey(seed)
+    base = {"stem": {"w": jax.random.normal(key, shape)}}
+    zoo = {"a": base, "b": jax.tree_util.tree_map(lambda x: x + 1.0, base)}
+    store = ParamStore.from_models(zoo)
+    recs = (records_from_params(zoo["a"], "a")
+            + records_from_params(zoo["b"], "b"))
+    groups = enumerate_groups(recs)
+    for g in groups:
+        store.merge_group(g)
+    plan = store.export_plan(groups, include_weights=True)
+    back = MergePlan.from_json(plan.to_json())
+    assert back == plan
+    fresh = ParamStore.from_models({"a": base,
+                                    "b": jax.tree_util.tree_map(
+                                        lambda x: x + 1.0, base)})
+    fresh.apply_plan(back)
+    for k in plan.shared_weights:
+        np.testing.assert_array_equal(np.asarray(fresh.buffers[k]),
+                                      np.asarray(store.buffers[k]))
+
+
+# ---------------------------------------------------------------------------
+# pad_stack shape/padding invariants
+# ---------------------------------------------------------------------------
+
+_buckets = st.sampled_from([(1, 2, 4, 8), (1, 2, 4), (2, 4), (1, 3, 5)])
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(1, 8), feat=st.integers(2, 6), buckets=_buckets,
+       leading_one=st.booleans(), seed=st.integers(0, 2**16))
+def test_property_pad_stack_invariants(n, feat, buckets, leading_one, seed):
+    # feat >= 2: a bare (1,) payload is indistinguishable from a batch-1
+    # wrapper under the documented leading-axis unwrap rule
+    """For any payload list and bucket ladder: the batch has exactly
+    ``bucket`` rows, ``bucket`` is the smallest ladder rung >= n (capped at
+    the top rung), the first n rows are the payloads in order, every padding
+    row equals the LAST payload, and the reported real-row count is n."""
+    key = jax.random.PRNGKey(seed)
+    rows = [jax.random.normal(jax.random.PRNGKey(seed + i), (feat,))
+            for i in range(n)]
+    payloads = [r[None, :] if leading_one else r for r in rows]
+    bucket = bucket_for(n, buckets)
+    assert bucket == min((b for b in buckets if b >= n), default=buckets[-1])
+    if n > buckets[-1]:
+        assert bucket == buckets[-1]
+    batch, real = pad_stack(payloads[:min(n, bucket)], bucket)
+    m = min(n, bucket)
+    assert real == m
+    assert batch.shape == (bucket, feat)
+    for i in range(m):
+        np.testing.assert_array_equal(np.asarray(batch[i]),
+                                      np.asarray(rows[i]))
+    for i in range(m, bucket):
+        np.testing.assert_array_equal(np.asarray(batch[i]),
+                                      np.asarray(rows[m - 1]))
+
+
+# ---------------------------------------------------------------------------
+# disambiguate_base injectivity
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(bases=st.lists(st.sampled_from(["shared:aa", "shared:bb", "shared:cc"]),
+                      min_size=1, max_size=10),
+       cols=st.integers(1, 3))
+def test_property_disambiguate_base_injective(bases, cols):
+    """Repeatedly allocating the same signature base never aliases: every
+    allocation gets a distinct base, every produced key is globally unique,
+    and no allocated base prefixes another allocation's keys (the ``~n``
+    suffix discipline both ParamStore.merge_group and MergePlan.from_groups
+    rely on)."""
+    used: set = set()
+    allocated = []
+    for base in bases:
+        got = disambiguate_base(
+            base, lambda p: any(k.startswith(p) for k in used))
+        keys = [f"{got}:c{ci}" for ci in range(cols)]
+        for k in keys:
+            assert k not in used  # injective: never collides
+            used.add(k)
+        allocated.append(got)
+    assert len(set(allocated)) == len(allocated)
+    # prefix discipline: no allocated base is a key-prefix of a DIFFERENT
+    # allocation's keys (base + ":" delimits exactly one namespace)
+    for a in allocated:
+        owned = {k for k in used if k.startswith(a + ":")}
+        assert owned == {f"{a}:c{ci}" for ci in range(cols)}

@@ -1,6 +1,5 @@
 """Scheduler / profiler / simulator behaviour."""
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.serving.costs import costs_for
 from repro.serving.profiler import cycle_time_ms, profile_workload
@@ -89,25 +88,3 @@ def test_more_memory_less_swap():
         res = simulate(sched, {i.instance_id: 1 for i in insts}, horizon_ms=10_000)
         swaps.append(res.swap_ms_total)
     assert swaps[-1] <= swaps[0]  # max memory cannot swap more than min
-
-
-@settings(max_examples=20, deadline=None)
-@given(cap_frac=st.floats(0.2, 1.0), seed=st.integers(0, 100))
-def test_property_scheduler_memory_invariant(cap_frac, seed):
-    """Resident bytes never exceed capacity after any load sequence."""
-    import random
-
-    r = random.Random(seed)
-    costs = {"tiny-yolo": costs_for("tiny-yolo")}
-    insts = [
-        _inst(f"i{k}", "tiny-yolo",
-              {f"i{k}:{j}": r.randint(1, 50) * 1_000_000 for j in range(3)})
-        for k in range(5)
-    ]
-    total = sum(i.param_bytes for i in insts)
-    cap = int(cap_frac * total) + 200_000_000  # + activation headroom
-    sched = Scheduler(insts, cap, costs)
-    for _ in range(20):
-        iid = f"i{r.randint(0, 4)}"
-        sched.load(iid, 1)
-        assert sched.mem.used_bytes <= cap
