@@ -19,8 +19,8 @@ def main(argv=None):
         ablation_ordering, drift_adapt, fig3_nexus, fig4_commonality,
         fig5_potential, fig9_powerlaw, fig10_e2e, fig11_savings,
         fig12_baselines, fig13_incremental, fig14_bandwidth, lm_merging,
-        plan_search, roofline, serve_throughput, table1_memory, table2_times,
-        table3_sweeps,
+        overload, plan_search, roofline, serve_throughput, table1_memory,
+        table2_times, table3_sweeps,
     )
 
     modules = [
@@ -40,6 +40,7 @@ def main(argv=None):
         ("plan_search", plan_search),
         ("lm_merging", lm_merging),
         ("drift_adapt", drift_adapt),
+        ("overload", overload),
         ("ablation_ordering", ablation_ordering),
         ("roofline", roofline),
     ]

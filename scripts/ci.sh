@@ -37,11 +37,15 @@ python -m benchmarks.lm_merging --json
 # drift-adapt lifecycle loop (DESIGN.md L1): breach -> revert -> warm-start
 # re-plan -> hot swap under injected drift, with/without-loop timelines
 python -m benchmarks.drift_adapt --json
+# overload-hardened ingestion front-end (DESIGN.md F1): policy sweep under
+# 1-4x overload, cascade objective view, and the deterministic fault sweep
+python -m benchmarks.overload --json
 
 test -f artifacts/benchmarks/BENCH_serve.json
 test -f artifacts/benchmarks/BENCH_plan.json
 test -f artifacts/benchmarks/BENCH_lm_serve.json
 test -f artifacts/benchmarks/BENCH_drift.json
+test -f artifacts/benchmarks/BENCH_overload.json
 
 # suffix-bank acceptance (DESIGN.md S2): exactly ONE suffix dispatch per
 # congruent micro-batch, strictly fewer dispatches than the per-member
@@ -76,6 +80,36 @@ assert d["all_requests_served"], d
 assert d["sim_accuracy_with_loop"] > d["sim_accuracy_no_adapt"], d
 print("drift-adapt acceptance OK")
 PY
+
+# overload acceptance (DESIGN.md F1): queues stay bounded at their capacity,
+# the accounting identity holds (zero lost frames, faults included), degrade
+# beats drop-newest on effective accuracy under 2x AND 4x overload, the
+# cascade profile never hurts the planner objective, and the injected
+# mid-swap failure rolls back atomically (one epoch bump, bindings restored,
+# queued requests kept) then re-applies cleanly
+python - <<'PY'
+import json
+o = json.load(open("artifacts/benchmarks/BENCH_overload.json"))["derived"]
+assert o["max_depth_all"] <= o["queue_capacity"], o
+assert o["lost_total"] == 0, o
+assert o["fault_lost_total"] == 0, o
+assert o["fault_all_bounded"], o
+assert o["degrade_beats_drop_newest_2x"], o
+assert o["degrade_beats_drop_newest_4x"], o
+assert o["cascade_objective_gain"] >= 0.0, o
+assert o["swap_failure_raised"], o
+assert o["swap_failure_epoch_bumps"] == 1, o
+assert o["swap_failure_bindings_restored"], o
+assert o["swap_failure_pending_kept"], o
+assert o["swap_reapply_ok"], o
+print("overload acceptance OK")
+PY
+
+# fault-sweep smoke lane with the Pallas kernel bodies actually executing
+# (interpret mode): the hardening guarantees must not be ref-mode artifacts
+REPRO_KERNEL_MODE=interpret python -m benchmarks.overload --json --faults-only \
+  > /dev/null
+test -f artifacts/benchmarks/BENCH_overload_faults.json
 
 # kernel-mode matrix: the public ops dispatch layer must match the jnp
 # oracles under EVERY CPU-executable REPRO_KERNEL_MODE (ref = oracle pass,

@@ -41,12 +41,17 @@ class ResumeState:
     the models currently excluded from planning (reverted / quarantined by
     revert-storm hysteresis) and the revert timestamps that drive the
     hysteresis.  ``epoch`` records the store epoch the state was captured
-    at, so a consumer can detect a stale snapshot."""
+    at, so a consumer can detect a stale snapshot.  ``replan_timed_out``
+    records whether the deployed plan came from a re-plan the planner's
+    per-attempt budget truncated (``StagedPlanner(attempt_budget_s=...)``)
+    — a resuming planner should treat such a seed as incomplete rather than
+    converged."""
 
     plan_json: Optional[str]
     excluded: tuple  # model ids, sorted
     revert_history: dict  # model_id -> [revert timestamps, planner clock]
     epoch: int
+    replan_timed_out: bool = False
 
     def to_json(self, indent: Optional[int] = None) -> str:
         return json.dumps({
@@ -55,6 +60,7 @@ class ResumeState:
             "revert_history": {m: list(ts) for m, ts in
                                sorted(self.revert_history.items())},
             "epoch": self.epoch,
+            "replan_timed_out": self.replan_timed_out,
         }, indent=indent)
 
     @classmethod
@@ -62,7 +68,8 @@ class ResumeState:
         obj = json.loads(payload)
         return cls(obj["plan"], tuple(obj["excluded"]),
                    {m: list(ts) for m, ts in obj["revert_history"].items()},
-                   obj["epoch"])
+                   obj["epoch"],
+                   replan_timed_out=obj.get("replan_timed_out", False))
 
     def plan(self):
         from repro.core.policy import MergePlan

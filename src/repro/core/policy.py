@@ -492,6 +492,42 @@ class MergeEvent:
     objective: Optional[float] = None  # simulator-in-the-loop score, if set
 
 
+@dataclasses.dataclass(frozen=True)
+class CascadeProfile:
+    """Observed cascade behavior of the serving front-end, as planner input
+    (DESIGN.md F1): per-instance heavy-path hit-rates (the fraction of
+    offered frames the gate sends to the heavy merged group) and the
+    accuracy credit a gate-only completion earns.  Produced by
+    ``serving.ingestion.IngestionFrontEnd.cascade_profile`` and consumed by
+    ``serving.simulator.effective_accuracy_objective(cascade=...)`` — when
+    only 40% of a camera's frames reach the heavy model, that model's
+    residency is worth proportionally less swap pressure, and the planner
+    should score candidate merges against THAT arrival process, not the
+    raw one."""
+
+    rates: dict  # instance_id -> hit rate in [0, 1]
+    gate_accuracy: dict  # instance_id -> gate-only accuracy credit in [0, 1]
+
+    def simulator_arg(self) -> dict:
+        """The ``cascade=`` mapping ``simulator.simulate`` consumes:
+        {instance_id: (hit_rate, gate_accuracy)}."""
+        return {iid: (float(self.rates[iid]),
+                      float(self.gate_accuracy.get(iid, 0.0)))
+                for iid in self.rates}
+
+    def to_json(self, indent: Optional[int] = None) -> str:
+        return json.dumps({
+            "rates": {k: float(v) for k, v in sorted(self.rates.items())},
+            "gate_accuracy": {k: float(v) for k, v in
+                              sorted(self.gate_accuracy.items())},
+        }, indent=indent)
+
+    @classmethod
+    def from_json(cls, payload: str) -> "CascadeProfile":
+        obj = json.loads(payload)
+        return cls(dict(obj["rates"]), dict(obj["gate_accuracy"]))
+
+
 @dataclasses.dataclass
 class PlanResult:
     store: ParamStore
@@ -503,6 +539,7 @@ class PlanResult:
     final_bytes: int
     pruned: int = 0  # candidates removed by the scorer prefilter
     plan: Optional[MergePlan] = None
+    timed_out: bool = False  # an attempt blew attempt_budget_s; plan truncated
 
     @property
     def saved_bytes(self) -> int:
@@ -542,6 +579,7 @@ class StagedPlanner:
         records: list,  # list[LayerRecord] for the workload
         trainer=None,  # object with .train(store, models) -> MergeResult
         time_budget_s: Optional[float] = None,
+        attempt_budget_s: Optional[float] = None,
         min_group_bytes: int = 1,
         on_commit: Optional[Callable] = None,
         scorer: Optional[CandidateScorer] = None,
@@ -557,6 +595,14 @@ class StagedPlanner:
         self.records = list(records)
         self.trainer = trainer
         self.time_budget_s = time_budget_s
+        # per-ATTEMPT ceiling (injected clock): one pathological retrain in a
+        # warm-started re-plan must not stall the lifecycle's breached→swapped
+        # transition indefinitely.  When an attempt exceeds it, the planner
+        # stops and ships whatever committed — flagged via
+        # ``PlanResult.timed_out`` / provenance["replan_timed_out"], which
+        # LifecycleController surfaces in ResumeState.
+        self.attempt_budget_s = attempt_budget_s
+        self.timed_out = False
         self.min_group_bytes = min_group_bytes
         self.on_commit = on_commit
         self.scorer = scorer or MemoryForwardScorer()
@@ -667,10 +713,17 @@ class StagedPlanner:
                     discarded += 1
                     break
                 attempted += 1
+                att0 = self.clock()
                 snap = self._snapshot()
                 before = self.store.resident_bytes()
                 self.store.merge_group(group)
                 result = self._train(group)
+                if (self.attempt_budget_s is not None
+                        and self.clock() - att0 > self.attempt_budget_s):
+                    # attempt blew its budget: a successful retrain still
+                    # commits (it's validated work), a failed one rolls back
+                    # — but either way planning STOPS and ships what's done
+                    self.timed_out = True
 
                 if result.success:
                     obj = None
@@ -706,6 +759,9 @@ class StagedPlanner:
 
                 # failure: roll back weights/bindings to last successful state
                 self._restore(snap)
+                if self.timed_out:
+                    discarded += 1
+                    break
                 if result.failed_models:
                     group = group.without_models(result.failed_models)
                 else:
@@ -716,6 +772,8 @@ class StagedPlanner:
                         or len(group.records) < 2):
                     discarded += 1
                     break
+            if self.timed_out:
+                break
             qi += 1
 
         plan = self.store.export_plan(
@@ -728,6 +786,7 @@ class StagedPlanner:
             self.store, events, attempted, committed, discarded,
             baseline, self.store.resident_bytes(),
             pruned=len(self.pruned_candidates), plan=plan,
+            timed_out=self.timed_out,
         )
 
     def _provenance(self, events, attempted, committed, discarded,
@@ -741,6 +800,7 @@ class StagedPlanner:
             "committed": committed,
             "discarded": discarded,
             "pruned": len(self.pruned_candidates),
+            "replan_timed_out": self.timed_out,
             "baseline_bytes": baseline,
             "final_bytes": self.store.resident_bytes(),
             "events": [

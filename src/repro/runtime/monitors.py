@@ -118,6 +118,91 @@ class StragglerMonitor:
 
 
 @dataclasses.dataclass
+class QueueDepthMonitor:
+    """Per-camera admission-queue depth watchdog for the ingestion front-end
+    (DESIGN.md F1) — the :class:`HeartbeatMonitor` injection pattern applied
+    to queue health.  ``observe`` records one camera's depth; a depth above
+    ``bound`` fires ``on_breach(camera, depth)`` and counts a breach.  With
+    correctly bounded admission queues (capacity <= bound) breaches are
+    impossible — the monitor is the tripwire proving it."""
+
+    bound: int
+    clock: Callable[[], float] = time.monotonic
+    on_breach: Optional[Callable] = None
+
+    def __post_init__(self):
+        self.high_water: dict = {}  # camera -> max observed depth
+        self.breaches: list = []  # (now, camera, depth)
+
+    def observe(self, camera: str, depth: int = 0, now: Optional[float] = None,
+                **_) -> None:
+        now = self.clock() if now is None else now
+        if depth > self.high_water.get(camera, -1):
+            self.high_water[camera] = depth
+        if depth > self.bound:
+            self.breaches.append((now, camera, depth))
+            if self.on_breach:
+                self.on_breach(camera, depth)
+
+    @property
+    def max_depth(self) -> int:
+        return max(self.high_water.values(), default=0)
+
+    @property
+    def bounded(self) -> bool:
+        return not self.breaches
+
+
+@dataclasses.dataclass
+class ShedRateMonitor:
+    """Windowed shed-rate watch over the admission queues: ``observe`` takes
+    each camera's CUMULATIVE offered/shed counters (the AdmissionQueue
+    fields), differences them internally, and flags ``overloaded`` cameras
+    whose shed fraction over the last ``window`` observations exceeds
+    ``threshold``.  Sustained shedding is the signal to escalate policy
+    (drop-oldest -> degrade) or re-plan for a cheaper configuration."""
+
+    window: int = 16
+    threshold: float = 0.25
+    clock: Callable[[], float] = time.monotonic
+    on_overload: Optional[Callable] = None
+
+    def __post_init__(self):
+        self._last: dict = {}  # camera -> (offered, shed)
+        self._deltas: dict = {}  # camera -> deque[(d_offered, d_shed)]
+        self.overloaded: set = set()
+        self.events: list = []
+
+    def observe(self, camera: str, offered: int = 0, shed: int = 0,
+                now: Optional[float] = None, **_) -> None:
+        now = self.clock() if now is None else now
+        last_o, last_s = self._last.get(camera, (0, 0))
+        self._last[camera] = (offered, shed)
+        dq = self._deltas.setdefault(camera, deque(maxlen=self.window))
+        dq.append((offered - last_o, shed - last_s))
+        d_off = sum(d for d, _ in dq)
+        d_shed = sum(s for _, s in dq)
+        rate = d_shed / max(d_off, 1)
+        was = camera in self.overloaded
+        if rate > self.threshold and d_off > 0:
+            self.overloaded.add(camera)
+            if not was:
+                self.events.append({"time": now, "camera": camera,
+                                    "rate": rate, "edge": "overloaded"})
+                if self.on_overload:
+                    self.on_overload(camera, rate)
+        elif was:
+            self.overloaded.discard(camera)
+            self.events.append({"time": now, "camera": camera,
+                                "rate": rate, "edge": "recovered"})
+
+    def shed_rate(self, camera: str) -> float:
+        dq = self._deltas.get(camera, ())
+        d_off = sum(d for d, _ in dq)
+        return sum(s for _, s in dq) / max(d_off, 1)
+
+
+@dataclasses.dataclass
 class FailurePolicy:
     """Orchestrates recovery: on worker loss, choose a new mesh from the
     survivors (elastic.plan_for_devices), restore the latest checkpoint with

@@ -52,6 +52,27 @@ class Request:
     payload: Any
     arrival_s: float
     deadline_s: float
+    meta: Any = None  # opaque caller tag (e.g. (camera, frame_index))
+
+
+class PlanApplyError(RuntimeError):
+    """A hot plan swap failed mid-flight.  The engine guarantees the store
+    was rolled back to its pre-swap buffers/bindings with exactly ONE epoch
+    bump and no queued request dropped; callers (LifecycleController) keep
+    serving the prior plan."""
+
+
+def drop_expired(queues: dict, now: float) -> int:
+    """Drop queue heads whose deadline has passed; returns the count.  The
+    ONE expiry helper both executors share — expired requests are counted
+    (``dropped_expired``), never silently vanished, so shed-rate accounting
+    in the ingestion monitors stays honest."""
+    n = 0
+    for q in queues.values():
+        while q and now > q[0].deadline_s:
+            q.popleft()
+            n += 1
+    return n
 
 
 @dataclasses.dataclass
@@ -92,15 +113,15 @@ class EdgeExecutor:
         self.queues = {i.instance_id: deque() for i in instances}
         self.completions: list = []
         self.skipped: int = 0
+        self.dropped_expired: int = 0
 
     def submit(self, req: Request):
         self.queues[req.instance_id].append(req)
 
     def _drop_expired(self, now: float):
-        for q in self.queues.values():
-            while q and now > q[0].deadline_s:
-                q.popleft()
-                self.skipped += 1
+        n = drop_expired(self.queues, now)
+        self.skipped += n
+        self.dropped_expired += n
 
     def serve(self, horizon_s: float, batch: int = 1, warmup: Any = None,
               drain: bool = False) -> dict:
@@ -160,6 +181,7 @@ class EdgeExecutor:
             "completed": len(self.completions),
             "met_sla": met,
             "skipped": self.skipped,
+            "dropped_expired": self.dropped_expired,
             "sla_fraction": met / max(total, 1),
         }
 
@@ -312,6 +334,7 @@ class MergeAwareEngine:
             "prefix_runs": 0, "suffix_runs": 0, "forward_runs": 0,
             "microbatches": 0, "param_lookups": 0, "idle_sleeps": 0,
             "prefix_jits": 0, "suffix_dispatches": 0, "bank_hits": 0,
+            "dropped_expired": 0,
         }
         self._groups: list = []
         self._groups_epoch = -1
@@ -490,9 +513,37 @@ class MergeAwareEngine:
         3. queues are untouched — in-flight requests are served against the
            new bindings on the next pass (the serve loop re-reads
            ``prefix_groups()`` every iteration).
+
+        The swap is ATOMIC under failure: ``ParamStore.apply_plan`` mutates
+        buffers/bindings column by column and bumps the epoch only at the
+        end, so an exception mid-flight (a poisoned payload, an injected
+        fault) would otherwise strand a half-rebound store at the OLD epoch
+        — every epoch-keyed cache would happily serve stale pytrees over
+        partially mutated bindings.  The engine snapshots buffers + bindings
+        up front; on any failure it restores both wholesale, settles the
+        epoch at exactly ONE bump past the pre-swap value (consumers
+        invalidate once, same as a successful swap), rebinds the scheduler
+        from the restored bindings, and re-raises :class:`PlanApplyError`.
+        Queues are never touched, so no queued request is dropped by a
+        failed swap.
         """
         epoch0 = self.store.epoch
-        shared = self.store.apply_plan(plan)
+        buffers0 = dict(self.store.buffers)
+        bindings0 = {m: dict(b) for m, b in self.store.bindings.items()}
+        try:
+            shared = self.store.apply_plan(plan)
+        except Exception as exc:
+            self.store.buffers.clear()
+            self.store.buffers.update(buffers0)
+            self.store.bindings.clear()
+            self.store.bindings.update(bindings0)
+            if self.store.epoch == epoch0:
+                self.store.bump_epoch()  # one bump total for the failed swap
+            else:
+                self.store._cache.clear()  # already bumped: just invalidate
+            self.rebind_instances(key_bytes_fn)
+            raise PlanApplyError(f"plan swap failed and was rolled back: "
+                                 f"{exc}") from exc
         rebind = self.rebind_instances(key_bytes_fn)
         return {
             "shared_keys": shared,
@@ -535,10 +586,9 @@ class MergeAwareEngine:
         self.queues[req.instance_id].append(req)
 
     def _drop_expired(self, now: float):
-        for q in self.queues.values():
-            while q and now > q[0].deadline_s:
-                q.popleft()
-                self.skipped += 1
+        n = drop_expired(self.queues, now)
+        self.skipped += n
+        self.stats["dropped_expired"] += n
 
     def _params(self, iid: str):
         self.stats["param_lookups"] += 1

@@ -1,0 +1,172 @@
+"""Deterministic fault injection for the serving stack (DESIGN.md F1).
+
+GEMEL's failure story ("swapping delays cause unacceptable frame drops") is
+only credible if the stack's behavior under faults is *tested*, not assumed.
+This module injects the four faults the ingestion front-end and engine are
+hardened against, each fully deterministic (step-indexed, no wall clock, no
+randomness) so every fault experiment replays bit-identically:
+
+* ``stall`` — the engine serves nothing for N steps (a wedged device, a GC
+  pause).  Hardening: the front-end dispatches nothing while stalled, so
+  load accumulates in the *bounded* admission queues and sheds by policy.
+* ``slow_kernel`` — service capacity divided by ``factor`` for N steps (a
+  thermally throttled accelerator, a pathological shape off the bucket
+  ladder).  Hardening: the dispatch budget shrinks; admission absorbs.
+* ``swap_failure`` — ``ParamStore.apply_plan`` raises mid-flight AFTER
+  genuinely committing a prefix of the plan's column rebinds (the nastiest
+  point: buffers and bindings partially mutated, epoch NOT bumped).
+  Hardening: ``MergeAwareEngine.apply_plan`` rolls back atomically — prior
+  buffers/bindings restored, exactly ONE epoch bump, queues untouched — and
+  raises :class:`~repro.serving.executor.PlanApplyError`, which
+  ``LifecycleController`` absorbs by continuing on the prior plan.
+* ``camera_disconnect`` — a source quiesces for N steps then reconnects.
+  Hardening: ``CameraSource.reconnect`` realigns to *now*, so no stale
+  catch-up burst poisons admission or micro-batch freshness.
+
+Faults are declared as :class:`Fault` records and orchestrated by a
+:class:`FaultInjector` the front-end consults at each step boundary.  The
+swap-failure arm (:meth:`FaultInjector.arm_swap_failure`) is a one-shot
+monkeypatch of a specific store's ``apply_plan`` that fires on the next
+call and restores the original method immediately after — it is the test
+harness reaching into the seam, not a change to the store.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+STALL = "stall"
+SLOW_KERNEL = "slow_kernel"
+SWAP_FAILURE = "swap_failure"
+CAMERA_DISCONNECT = "camera_disconnect"
+FAULT_KINDS = (STALL, SLOW_KERNEL, SWAP_FAILURE, CAMERA_DISCONNECT)
+
+
+class FaultError(RuntimeError):
+    """Raised by an injected fault (distinguishable from organic failures)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One scheduled fault.  ``at_step`` indexes front-end pump steps;
+    ``duration_steps`` is how many steps the fault stays active (stall /
+    slow_kernel / camera_disconnect).  ``factor`` divides the service budget
+    for slow_kernel; ``camera`` names the source for camera_disconnect;
+    ``fail_after_columns`` is how many plan columns a swap_failure lets
+    commit before raising (the partial-mutation depth)."""
+
+    kind: str
+    at_step: int = 0
+    duration_steps: int = 1
+    factor: float = 4.0
+    camera: Optional[str] = None
+    fail_after_columns: int = 1
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"one of {FAULT_KINDS}")
+        if self.kind == CAMERA_DISCONNECT and self.camera is None:
+            raise ValueError("camera_disconnect needs camera=")
+
+    def active(self, step: int) -> bool:
+        return self.at_step <= step < self.at_step + self.duration_steps
+
+
+class FaultInjector:
+    """Deterministic fault orchestrator for one front-end run.
+
+    The front-end calls :meth:`begin_step` at every step boundary (driving
+    camera disconnect/reconnect), then :meth:`stalled` /
+    :meth:`service_factor` to shape that step's dispatch.  ``events`` logs
+    every transition for the benchmark's fault-lane audit trail.
+    """
+
+    def __init__(self, faults: list = ()):  # list[Fault]
+        self.faults = list(faults)
+        self.events: list = []
+        self._swap_armed: Optional[tuple] = None  # (store, original, k)
+        self._disconnected: set = set()
+
+    # -- step-boundary hooks ---------------------------------------------------
+
+    def begin_step(self, step: int, now: float, sources: dict) -> None:
+        """Drive camera faults; log stall/slow transitions."""
+        for f in self.faults:
+            if f.kind == CAMERA_DISCONNECT:
+                src = sources.get(f.camera)
+                if src is None:
+                    continue
+                key = (id(f), f.camera)
+                if f.active(step) and key not in self._disconnected:
+                    src.disconnect()
+                    self._disconnected.add(key)
+                    self.events.append({"step": step, "fault": f.kind,
+                                        "camera": f.camera, "edge": "down"})
+                elif not f.active(step) and key in self._disconnected:
+                    src.reconnect(now)
+                    self._disconnected.discard(key)
+                    self.events.append({"step": step, "fault": f.kind,
+                                        "camera": f.camera, "edge": "up"})
+            elif f.active(step) and f.at_step == step:
+                self.events.append({"step": step, "fault": f.kind,
+                                    "edge": "start",
+                                    "duration": f.duration_steps})
+
+    def stalled(self, step: int) -> bool:
+        return any(f.kind == STALL and f.active(step) for f in self.faults)
+
+    def service_factor(self, step: int) -> float:
+        """Product of every active slow-kernel factor (>= 1.0)."""
+        factor = 1.0
+        for f in self.faults:
+            if f.kind == SLOW_KERNEL and f.active(step):
+                factor *= f.factor
+        return factor
+
+    # -- swap failure ----------------------------------------------------------
+
+    def arm_swap_failure(self, store, fail_after_columns: int = 1) -> None:
+        """One-shot: the NEXT ``store.apply_plan`` call genuinely commits the
+        first ``fail_after_columns`` columns' buffers+bindings, then raises
+        :class:`FaultError` with the epoch NOT bumped — exactly the partial
+        mutation ``MergeAwareEngine.apply_plan``'s rollback must survive.
+        The original method is restored as the fault fires (or via
+        :meth:`disarm`)."""
+        if self._swap_armed is not None:
+            raise RuntimeError("swap failure already armed")
+        original = store.apply_plan
+        injector = self
+
+        def failing_apply_plan(plan):
+            store.apply_plan = original  # one-shot: restore before raising
+            injector._swap_armed = None
+            k = 0
+            for pg in plan.groups:
+                for col in pg.columns:
+                    if k >= fail_after_columns:
+                        injector.events.append(
+                            {"fault": SWAP_FAILURE, "edge": "raise",
+                             "columns_committed": k})
+                        raise FaultError(
+                            f"injected swap failure after {k} columns")
+                    dm, dp = col.donor
+                    store.buffers[col.key] = store.buffers[store.bindings[dm][dp]]
+                    for r in col.members:
+                        store.bindings[r.model_id][r.path] = col.key
+                    k += 1
+            # plan smaller than the failure point: fail at the very end,
+            # with everything mutated and no epoch bump — still mid-flight
+            injector.events.append({"fault": SWAP_FAILURE, "edge": "raise",
+                                    "columns_committed": k})
+            raise FaultError(f"injected swap failure after {k} columns")
+
+        store.apply_plan = failing_apply_plan
+        self._swap_armed = (store, original, fail_after_columns)
+
+    def disarm(self) -> None:
+        """Restore a still-armed swap failure (the fault never fired)."""
+        if self._swap_armed is not None:
+            store, original, _ = self._swap_armed
+            store.apply_plan = original
+            self._swap_armed = None

@@ -46,6 +46,7 @@ from typing import Callable, Optional
 
 from repro.core.drift import DriftMonitor, ResumeState
 from repro.runtime.monitors import SampleCadence
+from repro.serving.executor import PlanApplyError
 
 SERVING = "serving"
 BREACHED = "breached"
@@ -165,6 +166,8 @@ class LifecycleController:
         self.checks = 0
         self.reverts = 0
         self.swaps = 0
+        self.failed_swaps = 0
+        self.replan_timed_out = False
         self.last_recover_s: Optional[float] = None
         self._pending_plan = None
         self._breach_time: Optional[float] = None
@@ -215,8 +218,15 @@ class LifecycleController:
         excluded = self.hysteresis.excluded()
         plan = self.replan_fn(self.deployed_plan, excluded)
         self._pending_plan = plan
+        # a budgeted planner (StagedPlanner attempt_budget_s) records the
+        # timeout in the plan's provenance; surface it so ResumeState says
+        # whether the deployed plan is a timeout-truncated one
+        self.replan_timed_out = bool(
+            plan is not None
+            and (plan.provenance or {}).get("replan_timed_out", False))
         self.state = REPLANNING
         self._emit(REPLANNING, excluded=sorted(excluded),
+                   replan_timed_out=self.replan_timed_out,
                    groups=0 if plan is None else len(plan.groups))
 
     def _tick_swap(self) -> None:
@@ -229,7 +239,19 @@ class LifecycleController:
             self.state = SERVING
             self._emit(SERVING, swapped=False)
             return
-        swap = self.engine.apply_plan(plan)
+        try:
+            swap = self.engine.apply_plan(plan)
+        except PlanApplyError as exc:
+            # the engine already rolled the store back atomically (one epoch
+            # bump, queues intact); the controller keeps serving the PRIOR
+            # deployed plan — a failed swap must never take the loop down
+            self.failed_swaps += 1
+            self.state = SERVING
+            self._emit(SERVING, swapped=False, swap_failed=True,
+                       error=str(exc),
+                       pending_requests=sum(len(q) for q in
+                                            self.engine.queues.values()))
+            return
         self.deployed_plan = plan
         self.swaps += 1
         self.last_recover_s = (self.clock() - self._breach_time
@@ -252,6 +274,7 @@ class LifecycleController:
             tuple(sorted(self.hysteresis.excluded())),
             {m: list(ts) for m, ts in self.hysteresis.history.items()},
             self.engine.store.epoch,
+            replan_timed_out=self.replan_timed_out,
         )
 
     def restore(self, state: ResumeState) -> None:

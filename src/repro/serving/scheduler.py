@@ -81,6 +81,9 @@ class Scheduler:
         self.mem = MemoryState.empty(capacity_bytes)
         self.costs = costs
         self.pcie_gbps = pcie_gbps
+        # cumulative swap-churn counters (the ingestion/overload monitors
+        # read these; per-call accounting stays in load()'s return value)
+        self.stats = {"loads": 0, "loaded_bytes": 0, "evictions": 0}
 
     # -- memory admission -------------------------------------------------------
 
@@ -130,6 +133,9 @@ class Scheduler:
             self.mem.lru.remove(instance_id)
         self.mem.lru.append(instance_id)
 
+        self.stats["loads"] += 1
+        self.stats["loaded_bytes"] += need_bytes
+        self.stats["evictions"] += len(evicted)
         load_ms = 1000.0 * need_bytes / 1e9 / self.pcie_gbps
         return {
             "loaded_bytes": need_bytes,

@@ -43,6 +43,10 @@ class SimResult:
     exec_ms_total: float
     cycles: int
     accuracy: dict  # instance -> effective accuracy
+    # frames the cascade gate completed WITHOUT the heavy model (DESIGN.md
+    # F1): they never queue, earn the gate's accuracy credit, and count as
+    # completed in processed_fraction
+    gated: dict = dataclasses.field(default_factory=dict)
 
     @property
     def overall_accuracy(self) -> float:
@@ -50,7 +54,7 @@ class SimResult:
 
     @property
     def processed_fraction(self) -> float:
-        tot_p = sum(self.processed.values())
+        tot_p = sum(self.processed.values()) + sum(self.gated.values())
         tot = tot_p + sum(self.skipped.values())
         return tot_p / max(tot, 1)
 
@@ -64,6 +68,7 @@ def effective_accuracy_objective(
     fps: float = 30.0,
     sla_ms: float = 100.0,
     drift_events: Optional[list] = None,
+    cascade: Optional[dict] = None,
 ) -> Callable:
     """Simulator-in-the-loop plan objective for the staged planner: returns
     ``objective(store, committed_groups) -> simulate(...).overall_accuracy``
@@ -71,15 +76,21 @@ def effective_accuracy_objective(
     actually serves under the memory/latency cost model — a commit that
     saves bytes but *hurts* effective accuracy (e.g. by worsening the swap
     schedule) is rolled back — rather than raw bytes saved (MAFAT's point:
-    drive the search with the cost model)."""
+    drive the search with the cost model).
+
+    ``cascade`` (``CascadeProfile.simulator_arg()``: {instance_id ->
+    (hit_rate, gate_accuracy)}) scores candidates against the *observed*
+    cascaded arrival process: only the gate-positive fraction of frames
+    reaches the heavy model, gate-negatives earn the gate's credit — so the
+    planner values heavy-model residency at its real traffic share."""
 
     def objective(store, committed_groups) -> float:
         insts = instances_fn(store, committed_groups)
         sched = Scheduler(insts, capacity_bytes, costs)
         b = batches or {i.instance_id: 1 for i in insts}
         return simulate(sched, b, horizon_ms=horizon_ms, fps=fps,
-                        sla_ms=sla_ms,
-                        drift_events=drift_events).overall_accuracy
+                        sla_ms=sla_ms, drift_events=drift_events,
+                        cascade=cascade).overall_accuracy
 
     return objective
 
@@ -91,6 +102,7 @@ def simulate(
     fps: float = 30.0,
     sla_ms: float = 100.0,
     drift_events: Optional[list] = None,
+    cascade: Optional[dict] = None,
 ) -> SimResult:
     """Event loop: visit instances round-robin; at each visit, load (evicting
     as needed, cost hidden behind the previous execution where possible),
@@ -100,13 +112,23 @@ def simulate(
     accuracy credit follows the value in force when the frame *finishes*, so
     the objective scores the adaptation lag between a drift and the loop's
     recovery.  Without events the closed form ``processed_fraction x
-    accuracy`` is used — bit-identical to the historical accounting."""
+    accuracy`` is used — bit-identical to the historical accounting.
+
+    ``cascade`` ({instance_id -> (hit_rate, gate_accuracy)}) thins each
+    instance's arrivals to the gate-positive fraction DETERMINISTICALLY
+    (frame ``k`` goes heavy iff ``floor((k+1)·r) > floor(k·r)`` — evenly
+    spread, no RNG): gate-negative frames complete immediately with the
+    gate's accuracy credit and never touch the heavy queue, so swap/SLA
+    pressure reflects the cascaded arrival process."""
     order = [i.instance_id for i in scheduler.order]
     frame_interval = 1000.0 / fps
     next_frame = {i: 0.0 for i in order}  # arrival time of next frame
     queues = {i: deque() for i in order}
     processed = {i: 0 for i in order}
     skipped = {i: 0 for i in order}
+    gated = {i: 0 for i in order}
+    gate_credit = {i: 0.0 for i in order}
+    frame_no = {i: 0 for i in order}
     swap_total = exec_total = 0.0
     t = 0.0
     prev_exec_end = 0.0  # pipelining: loads overlap previous execution
@@ -123,7 +145,19 @@ def simulate(
 
     def admit_frames(now: float):
         for i in order:
+            casc = (cascade or {}).get(i)
             while next_frame[i] <= now:
+                if casc is not None:
+                    rate, gacc = casc
+                    k = frame_no[i]
+                    frame_no[i] = k + 1
+                    if not int((k + 1) * rate) > int(k * rate):
+                        # gate-negative: the cheap model's answer IS the
+                        # result — immediate completion, gate's credit
+                        gated[i] += 1
+                        gate_credit[i] += gacc
+                        next_frame[i] += frame_interval
+                        continue
                 queues[i].append(next_frame[i])
                 next_frame[i] += frame_interval
 
@@ -192,11 +226,11 @@ def simulate(
     expire(horizon_ms)
     acc = {}
     for i in order:
-        total = processed[i] + skipped[i]
+        total = processed[i] + skipped[i] + gated[i]
         if drift_events:
-            acc[i] = credit[i] / max(total, 1)
+            acc[i] = (credit[i] + gate_credit[i]) / max(total, 1)
         else:
-            frac = processed[i] / max(total, 1)
-            acc[i] = frac * scheduler.instances[i].accuracy
+            heavy = processed[i] * scheduler.instances[i].accuracy
+            acc[i] = (heavy + gate_credit[i]) / max(total, 1)
     return SimResult(horizon_ms, processed, skipped, swap_total, exec_total,
-                     cycles, acc)
+                     cycles, acc, gated=gated)

@@ -1,0 +1,633 @@
+"""Overload-hardened ingestion front-end (DESIGN.md F1): bounded per-camera
+admission queues, shed policies, cascade degrade, deterministic fault
+injection, and the engine/lifecycle hardening it exercises.
+
+Pure-policy pieces (sources, queues, gate, pump, monitors, simulator
+cascade) run against a trivial in-process fake engine so the accounting
+identity — offered == completed + gated + shed + expired + pending, i.e.
+``lost == 0`` — is checked deterministically without jit time.  The
+swap-failure lanes (atomic ``apply_plan`` rollback, ``LifecycleController``
+absorbing a failed swap) run against the real :class:`MergeAwareEngine`.
+The hypothesis mirror of the interleaving test lives in
+``tests/test_properties.py``; the deterministic script here runs everywhere.
+"""
+import json
+import pathlib
+import sys
+from collections import deque
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (
+    MergePlan, ParamStore, RegisteredModel, enumerate_groups,
+    records_from_params,
+)
+from repro.core.drift import DriftMonitor, DriftReport, ResumeState
+from repro.core.policy import CascadeProfile
+from repro.models import vision as VI
+from repro.runtime.monitors import QueueDepthMonitor, ShedRateMonitor
+from repro.serving.costs import costs_for
+from repro.serving.executor import (
+    Completion, EdgeExecutor, MergeAwareEngine, ModelProgram, PlanApplyError,
+    Request, drop_expired,
+)
+from repro.serving.faults import (
+    CAMERA_DISCONNECT, SLOW_KERNEL, STALL, Fault, FaultError, FaultInjector,
+)
+from repro.serving.ingestion import (
+    DEGRADE, DROP_NEWEST, DROP_OLDEST, AdmissionQueue, CameraSource,
+    CascadeGate, IngestionFrontEnd,
+)
+from repro.serving.lifecycle import (
+    REPLANNING, REVERTED, SERVING, LifecycleController,
+)
+from repro.serving.scheduler import Instance, Scheduler
+from repro.serving.simulator import simulate
+from repro.serving.workload import instances_from_store
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+CFG = VI.SmallCNNConfig(task="classification", n_classes=4, depth=1,
+                        width=8, n_stages=2)
+
+
+# ---------------------------------------------------------------------------
+# camera sources
+# ---------------------------------------------------------------------------
+
+
+def test_camera_source_cadence_is_deterministic():
+    src = CameraSource("cam", fps=2.0, frame_fn=lambda k: k, sla_s=10.0)
+    first = src.poll(1.0)
+    assert [r.arrival_s for r in first] == [0.0, 0.5, 1.0]
+    assert [r.meta for r in first] == [("cam", 0), ("cam", 1), ("cam", 2)]
+    assert [r.deadline_s for r in first] == [10.0, 10.5, 11.0]
+    assert [r.payload for r in first] == [0, 1, 2]
+    second = src.poll(2.0)
+    assert [r.arrival_s for r in second] == [1.5, 2.0]
+    assert src.emitted == 5
+
+
+def test_camera_reconnect_realigns_without_catchup_burst():
+    src = CameraSource("cam", fps=1.0, frame_fn=lambda k: k)
+    assert len(src.poll(2.0)) == 3  # t = 0, 1, 2
+    src.disconnect()
+    assert src.poll(4.0) == [] and src.disconnects == 1
+    src.reconnect(5.0)
+    back = src.poll(6.0)
+    # the outage's frames are gone: nothing older than the reconnect time
+    assert [r.arrival_s for r in back] == [5.0, 6.0]
+    assert all(r.arrival_s >= 5.0 for r in back)
+    assert src.emitted == 5
+
+
+# ---------------------------------------------------------------------------
+# bounded admission queues
+# ---------------------------------------------------------------------------
+
+
+def _req(t, iid="c", sla=10.0):
+    return Request(iid, None, t, t + sla)
+
+
+def test_admission_queue_drop_oldest_keeps_freshest():
+    q = AdmissionQueue("c", capacity=2, policy=DROP_OLDEST)
+    assert [q.offer(_req(t)) for t in (0.0, 1.0, 2.0)] == [
+        "admitted", "admitted", "admitted"]
+    assert q.shed_oldest == 1 and q.shed_newest == 0
+    assert [r.arrival_s for r in q.q] == [1.0, 2.0]  # head evicted
+    assert (q.offered, q.admitted, q.max_depth, q.depth) == (3, 3, 2, 2)
+    assert q.shed_total == 1
+
+
+def test_admission_queue_drop_newest_rejects_arrival():
+    q = AdmissionQueue("c", capacity=2, policy=DROP_NEWEST)
+    assert [q.offer(_req(t)) for t in (0.0, 1.0, 2.0)] == [
+        "admitted", "admitted", "shed"]
+    assert q.shed_newest == 1 and q.shed_oldest == 0
+    assert [r.arrival_s for r in q.q] == [0.0, 1.0]  # arrival rejected
+    assert q.admitted == 2 and q.offered == 3
+
+
+def test_admission_queue_expire_counts_stale_heads():
+    q = AdmissionQueue("c", capacity=4)
+    q.offer(_req(0.0, sla=1.0))
+    q.offer(_req(0.0, sla=9.0))
+    assert q.expire(2.0) == 1
+    assert q.shed_expired == 1 and q.depth == 1
+    assert q.q[0].deadline_s == 9.0
+
+
+def test_admission_queue_rejects_unknown_policy():
+    with pytest.raises(ValueError):
+        AdmissionQueue("c", capacity=2, policy="drop-random")
+
+
+# ---------------------------------------------------------------------------
+# fake-engine front-end lanes (accounting identity, faults, degrade)
+# ---------------------------------------------------------------------------
+
+
+class FakeEngine:
+    """Completes every dispatched request instantly — isolates the pump's
+    admission/dispatch/accounting from real model execution."""
+
+    def __init__(self, mids):
+        self.queues = {m: deque() for m in mids}
+        self.completions = []
+        self.skipped = 0
+        self.serves = 0
+
+    def submit(self, req):
+        self.queues[req.instance_id].append(req)
+
+    def serve(self, horizon_s=30.0, warmup=None, drain=True):
+        done = 0
+        for q in self.queues.values():
+            while q:
+                self.completions.append(Completion(q.popleft(), None, 0.0))
+                done += 1
+        self.serves += 1
+        return {"completed": done, "skipped": 0, "dropped_expired": 0}
+
+
+def _frontend(policy=DROP_OLDEST, fps=6.0, budget=4, cap=3,
+              mids=("c0", "c1"), frame_fn=None, **kw):
+    eng = FakeEngine(mids)
+    fn = frame_fn or (lambda k: np.zeros((1, 2)))
+    sources = [CameraSource(m, fps=fps, frame_fn=fn, sla_s=100.0)
+               for m in mids]
+    fe = IngestionFrontEnd(eng, sources, policy=policy, queue_capacity=cap,
+                           service_budget=budget, **kw)
+    return fe, eng
+
+
+def _check_identity(rep):
+    accounted = (rep["completed"] + rep["gate_completed"] + rep["shed_oldest"]
+                 + rep["shed_newest"] + rep["shed_expired"]
+                 + rep["dropped_expired"] + rep["pending_admission"]
+                 + rep["pending_engine"])
+    assert rep["offered"] == accounted
+    assert rep["lost"] == 0
+
+
+def test_overload_accounting_identity_drop_oldest():
+    depth_mon = QueueDepthMonitor(bound=3)
+    shed_mon = ShedRateMonitor(window=6)
+    fe, eng = _frontend(monitors=(depth_mon, shed_mon))
+    fe.run(6)
+    rep = fe.report()
+    _check_identity(rep)
+    assert rep["offered"] == sum(s.emitted for s in fe.sources.values()) > 70
+    assert rep["shed_oldest"] > 0 and rep["shed_newest"] == 0
+    assert rep["max_depth"] <= 3
+    assert rep["completed"] == len(eng.completions)
+    # monitors saw the same bounded world
+    assert depth_mon.bounded and depth_mon.max_depth <= 3
+    assert shed_mon.overloaded  # sustained 3x overload flags both cameras
+    assert {e["edge"] for e in shed_mon.events} == {"overloaded"}
+
+
+def test_overload_accounting_identity_drop_newest():
+    fe, _ = _frontend(policy=DROP_NEWEST)
+    fe.run(6)
+    rep = fe.report()
+    _check_identity(rep)
+    assert rep["shed_newest"] > 0 and rep["shed_oldest"] == 0
+    assert rep["max_depth"] <= 3
+
+
+def test_degrade_sheds_to_gate_above_high_water():
+    gate = CascadeGate(lambda b: -np.ones(np.asarray(b).shape[0]))
+    fe, eng = _frontend(policy=DEGRADE, gate=gate, high_water=0)
+    fe.run(4)
+    rep = fe.report()
+    _check_identity(rep)
+    # gate always says negative and the water mark is 0: the cheap model's
+    # answer IS the result for every frame — nothing reaches the engine
+    assert rep["gate_completed"] == rep["offered"] > 0
+    assert rep["completed"] == 0 and len(eng.completions) == 0
+    assert rep["hit_rate"] == 0.0
+    assert all(q.depth == 0 for q in fe.queues.values())
+
+
+def test_degrade_below_high_water_never_gates():
+    gate = CascadeGate(lambda b: -np.ones(np.asarray(b).shape[0]))
+    fe, _ = _frontend(policy=DEGRADE, gate=gate, fps=1.0, budget=4, cap=8)
+    fe.run(4)
+    rep = fe.report()
+    _check_identity(rep)
+    # 0.25x load never reaches the high-water mark: every frame goes heavy
+    assert rep["gate_completed"] == 0
+    assert rep["completed"] == rep["offered"] - rep["pending_engine"]
+
+
+def test_degrade_without_gate_is_rejected():
+    with pytest.raises(ValueError):
+        _frontend(policy=DEGRADE)
+    with pytest.raises(ValueError):
+        _frontend(cascade_always=True)
+
+
+def test_cascade_always_observed_hit_rate_feeds_profile():
+    frame_fn = lambda k: np.full((1, 2), 1.0 if k % 2 == 0 else -1.0)
+    gate = CascadeGate(lambda b: np.asarray(b)[:, 0])
+    fe, _ = _frontend(policy=DROP_OLDEST, fps=2.0, budget=8, cap=8,
+                      frame_fn=frame_fn, gate=gate, cascade_always=True)
+    fe.run(4)
+    rep = fe.report()
+    _check_identity(rep)
+    assert 0.0 < rep["hit_rate"] < 1.0
+    assert rep["hit_rate"] == gate.positives / gate.evaluated
+    prof = fe.cascade_profile(0.8)
+    assert set(prof.rates) == {"c0", "c1"}
+    # identical frame schedule on both cameras -> identical observed rates
+    assert prof.rates["c0"] == prof.rates["c1"] == pytest.approx(
+        gate.observed_hit_rate("c0"))
+    assert prof.gate_accuracy == {"c0": 0.8, "c1": 0.8}
+    back = CascadeProfile.from_json(prof.to_json())
+    assert back == prof
+    assert back.simulator_arg()["c0"] == (prof.rates["c0"], 0.8)
+
+
+def test_stall_fault_bounds_queues_and_recovers():
+    inj = FaultInjector([Fault(STALL, at_step=1, duration_steps=2)])
+    fe, eng = _frontend(fps=4.0, budget=4, cap=10, mids=("c0",),
+                        fault_injector=inj)
+    rows = fe.run(8)
+    rep = fe.report()
+    _check_identity(rep)
+    assert rows[1]["stalled"] and rows[2]["stalled"]
+    assert rows[1]["dispatched"] == rows[2]["dispatched"] == 0
+    assert eng.serves > 0 and rows[3]["dispatched"] > 0  # service resumed
+    assert rep["max_depth"] <= 10
+    assert inj.events[0] == {"step": 1, "fault": STALL, "edge": "start",
+                             "duration": 2}
+
+
+def test_slow_kernel_fault_shrinks_dispatch_budget():
+    inj = FaultInjector([Fault(SLOW_KERNEL, at_step=1, duration_steps=2,
+                               factor=2.0)])
+    fe, _ = _frontend(fps=4.0, budget=4, cap=10, mids=("c0",),
+                      fault_injector=inj)
+    rows = fe.run(6)
+    _check_identity(fe.report())
+    assert rows[0]["service_factor"] == 1.0
+    assert rows[1]["service_factor"] == rows[2]["service_factor"] == 2.0
+    assert rows[1]["dispatched"] <= 2 < rows[3]["dispatched"] + 2
+
+
+def test_camera_disconnect_fault_quiesces_and_realigns():
+    inj = FaultInjector([Fault(CAMERA_DISCONNECT, camera="c1", at_step=1,
+                               duration_steps=2)])
+    fe, _ = _frontend(fps=1.0, budget=8, cap=8, fault_injector=inj)
+    fe.run(6)
+    rep = fe.report()
+    _check_identity(rep)
+    assert [e["edge"] for e in inj.events] == ["down", "up"]
+    assert [e["step"] for e in inj.events] == [1, 3]
+    assert fe.sources["c1"].disconnects == 1 and fe.sources["c1"].connected
+    # the outage's two frame slots are gone for good — realigned, not burst
+    assert fe.sources["c1"].emitted == fe.sources["c0"].emitted - 2
+
+
+# ---------------------------------------------------------------------------
+# cascade gate fitting
+# ---------------------------------------------------------------------------
+
+
+def test_gate_fit_prefix_probe_separates_classes():
+    frames = np.concatenate([-np.ones((8, 4)), np.ones((8, 4))])
+    labels = np.array([False] * 8 + [True] * 8)
+    gate = CascadeGate.fit_prefix_probe(lambda p, x: x, None, frames, labels)
+    reqs = [Request("cam", np.full((1, 4), v), 0.0, 10.0)
+            for v in (1.0, -1.0, 1.0)]
+    assert gate.decide(reqs) == [True, False, True]
+    assert gate.observed_hit_rate() == pytest.approx(2 / 3)
+    assert gate.observed_hit_rate("cam") == pytest.approx(2 / 3)
+    assert gate.per_camera["cam"] == [2, 3]
+
+
+def test_gate_fit_requires_both_classes():
+    frames = np.ones((8, 4))
+    with pytest.raises(ValueError):
+        CascadeGate.fit_prefix_probe(lambda p, x: x, None, frames,
+                                     np.ones(8, dtype=bool))
+
+
+# ---------------------------------------------------------------------------
+# monitors
+# ---------------------------------------------------------------------------
+
+
+def test_queue_depth_monitor_high_water_and_breach():
+    fired = []
+    mon = QueueDepthMonitor(bound=4, clock=lambda: 0.0,
+                            on_breach=lambda c, d: fired.append((c, d)))
+    mon.observe("cam", depth=3)
+    assert mon.bounded and mon.max_depth == 3
+    mon.observe("cam", depth=5, now=1.0)
+    assert not mon.bounded
+    assert mon.breaches == [(1.0, "cam", 5)] and fired == [("cam", 5)]
+    mon.observe("cam", depth=2, now=2.0)
+    assert mon.high_water == {"cam": 5}
+
+
+def test_shed_rate_monitor_overload_and_recovery_edges():
+    mon = ShedRateMonitor(window=4, threshold=0.25, clock=lambda: 0.0)
+    mon.observe("cam", offered=10, shed=0)
+    assert "cam" not in mon.overloaded
+    mon.observe("cam", offered=20, shed=8)  # windowed rate 8/20 = 0.4
+    assert "cam" in mon.overloaded
+    mon.observe("cam", offered=30, shed=8)  # 8/30 — still over threshold
+    assert "cam" in mon.overloaded
+    mon.observe("cam", offered=40, shed=8)  # 8/40 = 0.2 — recovered
+    assert "cam" not in mon.overloaded
+    assert [e["edge"] for e in mon.events] == ["overloaded", "recovered"]
+    assert mon.shed_rate("cam") == pytest.approx(0.2)
+
+
+# ---------------------------------------------------------------------------
+# expiry accounting is shared and counted in both executors
+# ---------------------------------------------------------------------------
+
+
+def test_drop_expired_helper_counts_and_removes_heads():
+    queues = {"a": deque([_req(0.0, "a", sla=1.0), _req(0.0, "a", sla=9.0)]),
+              "b": deque([_req(0.0, "b", sla=0.5)])}
+    assert drop_expired(queues, 2.0) == 2
+    assert len(queues["a"]) == 1 and not queues["b"]
+
+
+def _zoo2():
+    base = VI.init_small_cnn(CFG, jax.random.PRNGKey(0))
+    leaves, treedef = jax.tree_util.tree_flatten(base)
+    ks = jax.random.split(jax.random.PRNGKey(1), len(leaves))
+    other = jax.tree_util.tree_unflatten(
+        treedef, [l + 0.01 * jax.random.normal(k, l.shape)
+                  for l, k in zip(leaves, ks)])
+    return {"A": base, "B": other}
+
+
+def _trunk_plan(zoo):
+    cloud = ParamStore.from_models(dict(zoo))
+    recs = sum((records_from_params(p, m) for m, p in zoo.items()), [])
+    trunk = [g for g in enumerate_groups(recs)
+             if not any(r.path.startswith("head/") for r in g.records)]
+    for g in trunk:
+        cloud.merge_group(g)
+    return MergePlan.from_json(cloud.export_plan(trunk).to_json())
+
+
+def _engine(store, mids):
+    paths = VI.small_cnn_prefix_paths(CFG, VI.init_small_cnn(
+        CFG, jax.random.PRNGKey(0)))
+    programs = [
+        ModelProgram(
+            m, m,
+            forward=lambda p, x: VI.small_cnn_forward(CFG, p, x),
+            prefix=lambda p, x: VI.small_cnn_features(CFG, p, x),
+            suffix=lambda p, f: VI.small_cnn_head(CFG, p, f),
+            prefix_paths=paths,
+        )
+        for m in mids
+    ]
+    insts = instances_from_store(store, "tiny-yolo", model_ids=list(mids))
+    return MergeAwareEngine(store, insts, programs, capacity_bytes=10**9,
+                            costs={"tiny-yolo": costs_for("tiny-yolo")},
+                            buckets=(1, 2, 4))
+
+
+def _payload(i=0):
+    return jax.random.normal(jax.random.PRNGKey(i), (1, 32, 32, 3))
+
+
+def _reqs(n, sla=30.0):
+    return [Request("A" if i % 2 == 0 else "B", _payload(i), 0.0, sla)
+            for i in range(n)]
+
+
+def test_expired_requests_counted_in_both_executors():
+    zoo = _zoo2()
+    store = ParamStore.from_models(dict(zoo))
+    eng = _engine(store, ("A", "B"))
+    eng.submit(Request("A", _payload(), 0.0, 0.0))  # already past deadline
+    stats = eng.serve(horizon_s=5.0)
+    assert stats["completed"] == 0
+    assert stats["dropped_expired"] == stats["skipped"] == 1
+    assert eng.stats["dropped_expired"] == 1
+
+    ex = EdgeExecutor(
+        store, instances_from_store(store, "tiny-yolo", model_ids=["A"]),
+        {"A": lambda p, x: VI.small_cnn_forward(CFG, p, x)},
+        capacity_bytes=10**9, costs={"tiny-yolo": costs_for("tiny-yolo")},
+    )
+    ex.submit(Request("A", _payload(), 0.0, 0.0))
+    out = ex.serve(horizon_s=5.0, drain=True)
+    assert out["dropped_expired"] == 1 and ex.dropped_expired == 1
+    assert out["completed"] == 0 and ex.skipped == 1
+
+
+# ---------------------------------------------------------------------------
+# swap-failure hardening: atomic rollback on the live engine
+# ---------------------------------------------------------------------------
+
+
+def test_apply_plan_fault_rolls_back_atomically_then_reapplies():
+    zoo = _zoo2()
+    plan = _trunk_plan(zoo)
+    store = ParamStore.from_models(dict(zoo))
+    eng = _engine(store, ("A", "B"))
+    for r in _reqs(4):
+        eng.submit(r)
+    epoch0 = store.epoch
+    bind0 = {m: dict(b) for m, b in store.bindings.items()}
+    keys0 = set(store.buffers)
+
+    inj = FaultInjector()
+    inj.arm_swap_failure(store, fail_after_columns=1)
+    with pytest.raises(PlanApplyError) as ei:
+        eng.apply_plan(plan)
+    assert isinstance(ei.value.__cause__, FaultError)
+    assert inj.events[-1]["columns_committed"] == 1  # genuinely mid-flight
+
+    # atomic rollback: pre-swap bindings/keys, exactly ONE epoch bump,
+    # queued requests untouched, prefix plan back to the unmerged groups
+    assert store.epoch == epoch0 + 1
+    assert store.bindings == bind0
+    assert set(store.buffers) == keys0
+    assert sum(len(q) for q in eng.queues.values()) == 4
+    assert sorted(map(tuple, eng.prefix_groups())) == [("A",), ("B",)]
+
+    # the injector is one-shot: a clean re-apply succeeds outright
+    out = eng.apply_plan(plan)
+    assert out["epoch_bumps"] == 1 and out["pending_requests"] == 4
+    assert sorted(map(tuple, eng.prefix_groups())) == [("A", "B")]
+    stats = eng.serve(horizon_s=30.0, warmup=_payload())
+    assert stats["completed"] == 4 and eng.skipped == 0
+
+
+def _registered(zoo):
+    return [RegisteredModel(m, lambda p, b: 0.0, lambda p, b: 1.0,
+                            lambda e: [], None, 0.9, 1.0) for m in zoo]
+
+
+class _Clock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+
+def test_lifecycle_controller_survives_failed_swap():
+    zoo = _zoo2()
+    plan = _trunk_plan(zoo)
+    store = ParamStore.from_models(dict(zoo))
+    eng = _engine(store, ("A", "B"))
+    for r in _reqs(2):
+        eng.submit(r)
+    monitor = DriftMonitor(store, dict(zoo), _registered(zoo))
+    ctl = LifecycleController(eng, monitor, lambda mids: {},
+                              lambda seed, excl: plan, clock=_Clock())
+
+    ctl.state = REPLANNING
+    ctl._pending_plan = plan
+    inj = FaultInjector()
+    inj.arm_swap_failure(store, fail_after_columns=1)
+    ctl.tick()
+    # a failed swap must never take the loop down: back to SERVING on the
+    # prior deployed plan, failure counted + surfaced, queues intact
+    assert ctl.failed_swaps == 1 and ctl.swaps == 0
+    assert ctl.state == SERVING and ctl.deployed_plan is None
+    ev = ctl.events[-1]
+    assert ev.state == SERVING
+    assert ev.detail["swap_failed"] and not ev.detail["swapped"]
+    assert ev.detail["pending_requests"] == 2
+
+    # the next replan->swap round succeeds on the same controller
+    ctl.state = REVERTED
+    ctl.tick()
+    assert ctl.state == REPLANNING
+    ctl.tick()
+    assert ctl.swaps == 1 and ctl.deployed_plan is plan
+    assert ctl.state == SERVING
+
+
+def test_replan_timeout_surfaces_in_resume_state():
+    zoo = _zoo2()
+    plan = _trunk_plan(zoo)
+    timed = MergePlan(plan.version, plan.groups,
+                      {**plan.provenance, "replan_timed_out": True},
+                      plan.shared_weights)
+    store = ParamStore.from_models(dict(zoo))
+    eng = _engine(store, ("A", "B"))
+    monitor = DriftMonitor(store, dict(zoo), _registered(zoo))
+    ctl = LifecycleController(eng, monitor, lambda mids: {},
+                              lambda seed, excl: timed, clock=_Clock())
+    ctl.state = REVERTED
+    ctl.tick()
+    assert ctl.replan_timed_out is True
+    assert ctl.events[-1].detail["replan_timed_out"] is True
+
+    state = ctl.resume_state()
+    assert state.replan_timed_out is True
+    back = ResumeState.from_json(state.to_json())
+    assert back == state and back.replan_timed_out is True
+    # back-compat: payloads from before the field default to False
+    obj = json.loads(state.to_json())
+    obj.pop("replan_timed_out")
+    assert ResumeState.from_json(json.dumps(obj)).replan_timed_out is False
+
+
+# ---------------------------------------------------------------------------
+# deterministic interleaving (the hypothesis mirror): rebind under load
+# ---------------------------------------------------------------------------
+
+
+def test_rebind_interleaving_never_drops_queued_requests():
+    zoo = _zoo2()
+    plan = _trunk_plan(zoo)
+    store = ParamStore.from_models(dict(zoo))
+    eng = _engine(store, ("A", "B"))
+    monitor = DriftMonitor(store, dict(zoo), _registered(zoo))
+    warm = _payload()
+    submitted = 0
+
+    def pending():
+        return sum(len(q) for q in eng.queues.values())
+
+    def rebind(op):
+        e0, p0 = store.epoch, pending()
+        if op == "apply":
+            out = eng.apply_plan(plan)
+        else:
+            out = eng.revert(monitor, DriftReport({}, {"A", "B"}, set()))
+        assert out["epoch_bumps"] == 1 and store.epoch == e0 + 1
+        assert out["pending_requests"] == p0 and pending() == p0
+
+    for i, r in enumerate(_reqs(8, sla=1e6)):
+        eng.submit(r)
+        submitted += 1
+        if i == 1:
+            rebind("apply")  # merge under 2 queued requests
+        elif i == 3:
+            eng.serve(horizon_s=30.0, warmup=warm)  # drain mid-script
+        elif i == 5:
+            rebind("revert")  # full revert under load
+        elif i == 6:
+            rebind("apply")  # re-merge: revert GC'd the shared keys
+
+    eng.serve(horizon_s=30.0)
+    assert len(eng.completions) == submitted
+    assert eng.skipped == 0
+    # post-script store is coherent: merged exactly once, no orphans
+    assert store.shared_keys()
+    live = {k for b in store.bindings.values() for k in b.values()}
+    assert set(store.buffers) == live
+
+
+# ---------------------------------------------------------------------------
+# simulator cascade coupling
+# ---------------------------------------------------------------------------
+
+
+def _sim(cascade, accuracy=0.9):
+    insts = [Instance(f"i{k}", "tiny-yolo", frozenset({f"i{k}:w"}),
+                      {f"i{k}:w": 10**7}, accuracy=accuracy)
+             for k in range(2)]
+    costs = {"tiny-yolo": costs_for("tiny-yolo")}
+    return simulate(Scheduler(insts, 10**9, costs),
+                    {i.instance_id: 1 for i in insts},
+                    horizon_ms=5_000.0, cascade=cascade)
+
+
+def test_simulator_cascade_rate_one_matches_plain():
+    plain = _sim(None)
+    full = _sim({"i0": (1.0, 0.3), "i1": (1.0, 0.3)})
+    assert full.gated == {"i0": 0, "i1": 0}
+    assert full.processed == plain.processed
+    assert full.skipped == plain.skipped
+    assert full.overall_accuracy == pytest.approx(plain.overall_accuracy)
+
+
+def test_simulator_cascade_rate_zero_all_frames_gated():
+    res = _sim({"i0": (0.0, 0.4)})
+    assert res.processed["i0"] == 0 and res.skipped["i0"] == 0
+    assert res.gated["i0"] > 0
+    # every frame completes with the gate's credit
+    assert res.accuracy["i0"] == pytest.approx(0.4)
+    # the untouched instance keeps its plain accounting
+    assert res.accuracy["i1"] == _sim(None).accuracy["i1"]
+
+
+def test_simulator_cascade_thinning_is_deterministic_and_even():
+    a = _sim({"i0": (0.5, 1.0)})
+    b = _sim({"i0": (0.5, 1.0)})
+    assert a.gated == b.gated and a.processed == b.processed  # replayable
+    total = a.processed["i0"] + a.skipped["i0"] + a.gated["i0"]
+    # floor((k+1)/2) > floor(k/2) alternates: gated half, heavy half
+    assert abs(a.gated["i0"] - total / 2) <= 1
+    assert a.processed_fraction >= _sim(None).processed_fraction

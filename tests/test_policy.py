@@ -472,3 +472,74 @@ def test_plan_shipped_engine_outputs_bitwise_identical():
     for a, b in zip(eng_cloud.completions, eng_edge.completions):
         assert a.request.instance_id == b.request.instance_id
         assert np.array_equal(np.asarray(a.result), np.asarray(b.result))
+
+
+# ---------------------------------------------------------------------------
+# planner: per-attempt budget (F1 incremental re-plan under a deadline)
+# ---------------------------------------------------------------------------
+
+
+class ManualClock:
+    """Non-advancing: time moves only when the trainer says it does."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+class _SlowTrainer:
+    """Burns ``cost`` seconds of injected-clock time per retrain attempt."""
+
+    def __init__(self, clk, cost=100.0, succeed=True):
+        self.clk, self.cost, self.succeed = clk, cost, succeed
+        self.calls = 0
+
+    def train(self, store, models):
+        self.calls += 1
+        self.clk.t += self.cost
+        return MergeResult(self.succeed,
+                           {m.model_id: 1.0 for m in models}, set(), 1,
+                           0.0, [])
+
+
+def test_attempt_budget_ships_validated_commit_then_stops():
+    zoo = _zoo()
+    store = ParamStore.from_models(zoo)
+    recs = sum((records_from_params(p, m) for m, p in zoo.items()), [])
+    clk = ManualClock()
+    trainer = _SlowTrainer(clk, cost=100.0)
+    res = StagedPlanner(store, _registered(zoo), recs, trainer,
+                        attempt_budget_s=50.0, clock=clk).run()
+    # the blown attempt SUCCEEDED, so its work ships — but planning stops
+    assert trainer.calls == 1
+    assert res.committed == 1 and res.timed_out
+    assert len(res.plan.groups) == 1
+    assert res.plan.provenance["replan_timed_out"] is True
+    assert store.shared_keys()  # the validated commit is live
+
+
+def test_attempt_budget_rolls_back_failed_slow_attempt():
+    zoo = _zoo()
+    store = ParamStore.from_models(zoo)
+    recs = sum((records_from_params(p, m) for m, p in zoo.items()), [])
+    clk = ManualClock()
+    trainer = _SlowTrainer(clk, cost=100.0, succeed=False)
+    res = StagedPlanner(store, _registered(zoo), recs, trainer,
+                        attempt_budget_s=50.0, clock=clk).run()
+    # slow AND failed: no AIMD retry, no commit, bindings restored
+    assert trainer.calls == 1
+    assert res.committed == 0 and res.discarded >= 1 and res.timed_out
+    assert res.plan.groups == ()
+    assert not store.shared_keys()
+
+
+def test_attempt_budget_untouched_when_attempts_are_fast():
+    zoo = _zoo()
+    store = ParamStore.from_models(zoo)
+    recs = sum((records_from_params(p, m) for m, p in zoo.items()), [])
+    res = StagedPlanner(store, _registered(zoo), recs, AlwaysSucceed(),
+                        attempt_budget_s=50.0, clock=ManualClock()).run()
+    assert res.committed > 0 and res.timed_out is False
+    assert res.plan.provenance["replan_timed_out"] is False

@@ -265,3 +265,116 @@ def test_property_disambiguate_base_injective(bases, cols):
     for a in allocated:
         owned = {k for k in used if k.startswith(a + ":")}
         assert owned == {f"{a}:c{ci}" for ci in range(cols)}
+
+
+# ---------------------------------------------------------------------------
+# serving: rebind interleavings never drop queued requests (DESIGN.md F1)
+# ---------------------------------------------------------------------------
+
+_STACK = {}
+
+
+def _rebind_stack():
+    """Shared small-CNN A/B engine + trunk plan, built once per session —
+    every hypothesis example runs a full merge/revert cycle, so the store
+    returns to a clean unmerged state between examples."""
+    if _STACK:
+        return _STACK
+    from repro.core.drift import DriftMonitor
+    from repro.models import vision as VI
+    from repro.serving.executor import MergeAwareEngine, ModelProgram
+    from repro.serving.workload import instances_from_store
+
+    cfg = VI.SmallCNNConfig(task="classification", n_classes=4, depth=1,
+                            width=8, n_stages=2)
+    base = VI.init_small_cnn(cfg, jax.random.PRNGKey(0))
+    leaves, treedef = jax.tree_util.tree_flatten(base)
+    ks = jax.random.split(jax.random.PRNGKey(1), len(leaves))
+    zoo = {"A": base, "B": jax.tree_util.tree_unflatten(
+        treedef, [l + 0.01 * jax.random.normal(k, l.shape)
+                  for l, k in zip(leaves, ks)])}
+
+    cloud = ParamStore.from_models(dict(zoo))
+    recs = sum((records_from_params(p, m) for m, p in zoo.items()), [])
+    trunk = [g for g in enumerate_groups(recs)
+             if not any(r.path.startswith("head/") for r in g.records)]
+    for g in trunk:
+        cloud.merge_group(g)
+    plan = MergePlan.from_json(cloud.export_plan(trunk).to_json())
+
+    store = ParamStore.from_models(dict(zoo))
+    paths = VI.small_cnn_prefix_paths(cfg, base)
+    programs = [
+        ModelProgram(m, m,
+                     forward=lambda p, x: VI.small_cnn_forward(cfg, p, x),
+                     prefix=lambda p, x: VI.small_cnn_features(cfg, p, x),
+                     suffix=lambda p, f: VI.small_cnn_head(cfg, p, f),
+                     prefix_paths=paths)
+        for m in ("A", "B")
+    ]
+    insts = instances_from_store(store, "tiny-yolo", model_ids=["A", "B"])
+    eng = MergeAwareEngine(store, insts, programs, capacity_bytes=10**9,
+                           costs={"tiny-yolo": costs_for("tiny-yolo")},
+                           buckets=(1, 2, 4))
+    from repro.core import RegisteredModel
+
+    monitor = DriftMonitor(store, dict(zoo), [
+        RegisteredModel(m, lambda p, b: 0.0, lambda p, b: 1.0,
+                        lambda e: [], None, 0.9, 1.0) for m in zoo])
+    _STACK.update(plan=plan, store=store, engine=eng, monitor=monitor,
+                  warm=jax.random.normal(jax.random.PRNGKey(7), (1, 32, 32, 3)))
+    return _STACK
+
+
+@settings(max_examples=10, deadline=None)
+@given(ops=st.lists(st.sampled_from(["submit", "apply", "revert", "serve"]),
+                    min_size=1, max_size=8),
+       seed=st.integers(0, 2**16))
+def test_property_rebind_interleaving_preserves_queued_requests(ops, seed):
+    """Any interleaving of submit/apply_plan/revert/serve: queued requests
+    are never dropped, and the store's epoch bumps exactly ONCE per rebind
+    (merge or revert) — the F1 hot-swap contract under load."""
+    from repro.core.drift import DriftReport
+    from repro.serving.executor import Request
+
+    s = _rebind_stack()
+    eng, store, plan, monitor = (s["engine"], s["store"], s["plan"],
+                                 s["monitor"])
+    completions0, skipped0 = len(eng.completions), eng.skipped
+    submitted = 0
+
+    def pending():
+        return sum(len(q) for q in eng.queues.values())
+
+    for i, op in enumerate(ops):
+        merged = bool(store.shared_keys())
+        if op == "submit":
+            mid = "A" if (seed + i) % 2 == 0 else "B"
+            eng.submit(Request(mid, s["warm"], 0.0, 1e6))
+            submitted += 1
+            continue
+        if op == "serve":
+            eng.serve(horizon_s=30.0, warmup=s["warm"])
+            continue
+        if op == "apply" and merged:
+            continue  # already merged: plan keys would collide
+        if op == "revert" and not merged:
+            continue  # nothing to revert
+        e0, p0 = store.epoch, pending()
+        if op == "apply":
+            out = eng.apply_plan(plan)
+        else:
+            out = eng.revert(monitor, DriftReport({}, {"A", "B"}, set()))
+        assert out["epoch_bumps"] == 1 and store.epoch == e0 + 1
+        assert out["pending_requests"] == p0 and pending() == p0
+
+    # drain + restore the clean unmerged baseline for the next example
+    eng.serve(horizon_s=30.0, warmup=s["warm"])
+    if store.shared_keys():
+        from repro.core.drift import DriftReport as _DR
+
+        eng.revert(monitor, _DR({}, {"A", "B"}, set()))
+    assert eng.skipped == skipped0  # nothing dropped, ever
+    assert len(eng.completions) - completions0 == submitted
+    live = {k for b in store.bindings.values() for k in b.values()}
+    assert set(store.buffers) == live  # revert GC'd every orphan
