@@ -1,0 +1,205 @@
+"""Streaming decode serving benchmark (DESIGN.md D1): paged KV + continuous
+batching over merged variants vs the per-request decode baseline.
+
+    PYTHONPATH=src python -m benchmarks.decode_serve [--json] [--smoke]
+
+Three lanes over the LM fine-tune-variant scenario (``lm_merging``):
+
+1. **baseline** — ``EdgeExecutor.serve_decode``: each request served to
+   completion on its own contiguous KV cache, chunked prompt ingestion + one
+   ``decode_step`` per generated token (the honest non-strawman denominator).
+2. **merged-paged** — hot-swap the shipped MergePlan into a live
+   ``MergeAwareEngine``, then ``serve_decode``: continuous batching over the
+   paged pool, ONE shared-trunk dispatch + ONE suffix-bank dispatch per step
+   for the merged (A, B, D, E) group, foreign C decoding through the fused
+   paged singleton path.  Logits are recorded and every completed request is
+   replayed through the unpaged ``decode_step`` — tokens and logits must
+   match BITWISE (``serving.decode.verify_bitwise``).
+3. **mid-decode hot swap** — start UNMERGED, apply the plan while 8 requests
+   are in flight: the swap must land with exactly one epoch bump, zero lost
+   in-flight requests, and the merged trunk group forming on the very next
+   step (singleton dispatches before, shared trunk + bank after).
+
+``--smoke`` shrinks the trace and emits ``BENCH_decode_smoke`` instead
+(the ``REPRO_KERNEL_MODE=interpret`` CI lane: Pallas ``decode_attention`` +
+``page_gather`` bodies actually executing on the decode hot path).
+"""
+import argparse
+import json
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from benchmarks.lm_merging import MIDS, lm_engine, lm_zoo, plan_variants
+
+PROMPT_LEN = 4
+MAX_NEW = 12
+REQS_PER_MODEL = 16
+PAGE_SIZE = 8
+MAX_LEN = 16  # = prompt + max_new - 1, rounded to a page multiple
+NUM_PAGES = 128
+MAX_SLOTS = 32
+BUCKETS = (1, 2, 4, 8, 16, 32)
+
+
+def decode_requests(cfg, mids, n_per_model, prompt_len, max_new):
+    """Interleaved across variants (A, B, C, D, E, A, ...) so the in-flight
+    batch always mixes members of the merged group."""
+    from repro.serving.decode import DecodeRequest
+
+    reqs = []
+    for j in range(n_per_model):
+        for i, m in enumerate(mids):
+            toks = np.asarray(jax.random.randint(
+                jax.random.PRNGKey(1000 + 13 * i + j), (prompt_len,), 0,
+                cfg.vocab_size))
+            reqs.append(DecodeRequest(m, toks, max_new_tokens=max_new,
+                                      deadline_s=60.0))
+    return reqs
+
+
+def baseline_executor(store, adapter, cfg, mids):
+    from repro.serving.costs import costs_for
+    from repro.serving.executor import EdgeExecutor
+    from repro.serving.workload import instances_from_store
+
+    fwd = {m: adapter.bound_forward(cfg) for m in mids}
+    return EdgeExecutor(
+        store, instances_from_store(store, "tiny-yolo", model_ids=list(mids)),
+        fwd, capacity_bytes=10**9,
+        costs={"tiny-yolo": costs_for("tiny-yolo")},
+    )
+
+
+def run_lanes(n_per_model: int, max_new: int):
+    from repro.core import MergePlan, ParamStore
+    from repro.models.registry import get_adapter
+    from repro.serving.decode import verify_bitwise
+    from repro.serving.executor import ModelProgram
+
+    adapter = get_adapter("dense")
+    cfg = adapter.default_config()
+    res, _ = plan_variants(adapter, cfg)
+    plan = MergePlan.from_json(res.plan.to_json())
+    reqs = decode_requests(cfg, MIDS, n_per_model, PROMPT_LEN, max_new)
+    decode_kw = dict(page_size=PAGE_SIZE, num_pages=NUM_PAGES,
+                     max_slots=MAX_SLOTS, max_len=MAX_LEN, buckets=BUCKETS)
+
+    # lane 1: per-request baseline on the unmerged store
+    base_store = ParamStore.from_models(lm_zoo(adapter, cfg))
+    base = baseline_executor(base_store, adapter, cfg, MIDS)
+    programs = [ModelProgram.from_adapter(adapter, m, cfg=cfg) for m in MIDS]
+    base_stats = base.serve_decode(reqs, programs, max_len=MAX_LEN)
+
+    # lane 2: merged + paged + continuous batching (throughput — no logit
+    # recording, which would host-sync every step and tax the measurement)
+    store = ParamStore.from_models(lm_zoo(adapter, cfg))
+    eng = lm_engine(store, adapter, cfg, MIDS)
+    swap = eng.apply_plan(plan)
+    eng_stats = eng.serve_decode(reqs, **decode_kw)
+
+    # bitwise verification pass: small trace with logits recorded, every
+    # completion replayed token-by-token through the UNPAGED decode_step
+    verify_reqs = decode_requests(cfg, MIDS, 2, PROMPT_LEN, max_new)
+    eng.serve_decode(verify_reqs, record_logits=True, **decode_kw)
+    bitwise = verify_bitwise(eng.last_decoder)
+
+    # lane 3: mid-decode hot swap on a fresh UNMERGED engine
+    swap_store = ParamStore.from_models(lm_zoo(adapter, cfg))
+    swap_eng = lm_engine(swap_store, adapter, cfg, MIDS)
+    swap_state = {}
+
+    def on_step(dec, step):
+        if step == 4 and not swap_state:
+            swap_state["in_flight_at_swap"] = len(dec.slots)
+            swap_state["apply"] = swap_eng.apply_plan(plan)
+
+    swap_stats = swap_eng.serve_decode(reqs, on_step=on_step, **decode_kw)
+
+    rows = [
+        {"lane": "per-request-baseline",
+         "tokens_per_s": base_stats["tokens_per_s"],
+         "tokens_decoded": base_stats["tokens_decoded"],
+         "steps": base_stats["steps"],
+         "completed": base_stats["completed"]},
+        {"lane": "merged-paged-continuous",
+         "tokens_per_s": eng_stats["tokens_per_s"],
+         "tokens_decoded": eng_stats["tokens_decoded"],
+         "steps": eng_stats["steps"],
+         "completed": eng_stats["completed"]},
+        {"lane": "mid-decode-hot-swap",
+         "tokens_per_s": swap_stats["tokens_per_s"],
+         "tokens_decoded": swap_stats["tokens_decoded"],
+         "steps": swap_stats["steps"],
+         "completed": swap_stats["completed"]},
+    ]
+    derived = {
+        "decode_speedup": (eng_stats["tokens_per_s"]
+                           / max(base_stats["tokens_per_s"], 1e-9)),
+        "outputs_bitwise_identical": bitwise,
+        "plan_epoch_bumps": swap["epoch_bumps"],
+        # merged-group dispatch discipline: ONE shared trunk + ONE bank
+        # fan-out per step in which the merged group had live rows
+        "group_steps": eng_stats["group_steps"],
+        "trunk_dispatch_per_group_step": (
+            eng_stats["trunk_dispatches"] / max(eng_stats["group_steps"], 1)),
+        "bank_dispatch_per_group_step": (
+            eng_stats["bank_dispatches"] / max(eng_stats["group_steps"], 1)),
+        "head_dispatches": eng_stats["head_dispatches"],
+        "lost_in_flight": eng_stats["lost_in_flight"],
+        "pool_identity_ok": (eng_stats["pool_identity_ok"]
+                             and swap_stats["pool_identity_ok"]),
+        "pool_high_water_pages": eng_stats["pool_high_water_pages"],
+        "max_active": eng_stats["max_active"],
+        # mid-decode hot swap acceptance
+        "swap_epoch_bumps": swap_stats["epoch_bumps"],
+        "swap_in_flight_at_swap": swap_state.get("in_flight_at_swap", 0),
+        "swap_survivors": swap_stats["swap_survivors"],
+        "swap_lost_in_flight": swap_stats["lost_in_flight"],
+        "swap_completed": swap_stats["completed"],
+        "swap_trunk_dispatches": swap_stats["trunk_dispatches"],
+        "swap_bank_dispatches": swap_stats["bank_dispatches"],
+        "requests": len(reqs),
+    }
+    return rows, derived
+
+
+def run(quiet: bool = False, smoke: bool = False) -> dict:
+    if smoke:
+        rows, derived = run_lanes(n_per_model=2, max_new=4)
+        return emit("BENCH_decode_smoke", rows, derived, quiet=quiet)
+    rows, derived = run_lanes(REQS_PER_MODEL, MAX_NEW)
+    return emit("BENCH_decode", rows, derived, quiet=quiet)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", action="store_true",
+                    help="print ONLY the artifact JSON to stdout (pipeable); "
+                         "the artifact is always written either way")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small trace, emits BENCH_decode_smoke (the "
+                         "interpret-mode CI lane)")
+    args = ap.parse_args(argv)
+    out = run(quiet=args.json, smoke=args.smoke)
+    if args.json:
+        print(json.dumps(out, indent=2, default=str))
+    d = out["derived"]
+    checks = (
+        d["outputs_bitwise_identical"]
+        and d["trunk_dispatch_per_group_step"] == 1.0
+        and d["bank_dispatch_per_group_step"] == 1.0
+        and d["lost_in_flight"] == 0
+        and d["swap_lost_in_flight"] == 0
+        and d["swap_epoch_bumps"] == 1
+        and d["pool_identity_ok"]
+    )
+    if not args.smoke:
+        checks = checks and d["decode_speedup"] >= 2.0
+    if not checks:
+        raise SystemExit("decode_serve acceptance criteria not met")
+
+
+if __name__ == "__main__":
+    main()

@@ -16,11 +16,11 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     from benchmarks import (
-        ablation_ordering, drift_adapt, fig3_nexus, fig4_commonality,
-        fig5_potential, fig9_powerlaw, fig10_e2e, fig11_savings,
-        fig12_baselines, fig13_incremental, fig14_bandwidth, lm_merging,
-        overload, plan_search, roofline, serve_throughput, table1_memory,
-        table2_times, table3_sweeps,
+        ablation_ordering, decode_serve, drift_adapt, fig3_nexus,
+        fig4_commonality, fig5_potential, fig9_powerlaw, fig10_e2e,
+        fig11_savings, fig12_baselines, fig13_incremental, fig14_bandwidth,
+        lm_merging, overload, plan_search, roofline, serve_throughput,
+        table1_memory, table2_times, table3_sweeps,
     )
 
     modules = [
@@ -39,6 +39,7 @@ def main(argv=None):
         ("serve_throughput", serve_throughput),
         ("plan_search", plan_search),
         ("lm_merging", lm_merging),
+        ("decode_serve", decode_serve),
         ("drift_adapt", drift_adapt),
         ("overload", overload),
         ("ablation_ordering", ablation_ordering),

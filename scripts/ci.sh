@@ -40,12 +40,16 @@ python -m benchmarks.drift_adapt --json
 # overload-hardened ingestion front-end (DESIGN.md F1): policy sweep under
 # 1-4x overload, cascade objective view, and the deterministic fault sweep
 python -m benchmarks.overload --json
+# streaming decode serving (DESIGN.md D1): paged KV + continuous batching
+# over merged variants vs the per-request decode baseline
+python -m benchmarks.decode_serve --json > /dev/null
 
 test -f artifacts/benchmarks/BENCH_serve.json
 test -f artifacts/benchmarks/BENCH_plan.json
 test -f artifacts/benchmarks/BENCH_lm_serve.json
 test -f artifacts/benchmarks/BENCH_drift.json
 test -f artifacts/benchmarks/BENCH_overload.json
+test -f artifacts/benchmarks/BENCH_decode.json
 
 # suffix-bank acceptance (DESIGN.md S2): exactly ONE suffix dispatch per
 # congruent micro-batch, strictly fewer dispatches than the per-member
@@ -105,11 +109,40 @@ assert o["swap_reapply_ok"], o
 print("overload acceptance OK")
 PY
 
+# streaming-decode acceptance (DESIGN.md D1): merged continuous batching
+# >=2x the per-request decode baseline in tokens/sec, ref-mode outputs
+# BITWISE identical to the unpaged token-by-token decode_step replay,
+# exactly ONE shared-trunk and ONE suffix-bank dispatch per decode step for
+# the congruent merged group, and a mid-decode plan hot swap that lands with
+# exactly one epoch bump and zero lost in-flight requests
+python - <<'PY'
+import json
+d = json.load(open("artifacts/benchmarks/BENCH_decode.json"))["derived"]
+assert d["decode_speedup"] >= 2.0, d
+assert d["outputs_bitwise_identical"], d
+assert d["trunk_dispatch_per_group_step"] == 1.0, d
+assert d["bank_dispatch_per_group_step"] == 1.0, d
+assert d["swap_epoch_bumps"] == 1, d
+assert d["swap_lost_in_flight"] == 0, d
+assert d["swap_completed"] == d["requests"], d
+assert d["lost_in_flight"] == 0, d
+assert d["pool_identity_ok"], d
+print("streaming-decode acceptance OK")
+PY
+
 # fault-sweep smoke lane with the Pallas kernel bodies actually executing
 # (interpret mode): the hardening guarantees must not be ref-mode artifacts
 REPRO_KERNEL_MODE=interpret python -m benchmarks.overload --json --faults-only \
   > /dev/null
 test -f artifacts/benchmarks/BENCH_overload_faults.json
+
+# decode smoke lane in interpret mode: the Pallas page_gather +
+# decode_attention bodies executing on the decode hot path (small trace,
+# separate artifact so the ref-mode BENCH_decode is not clobbered; the 2x
+# speedup gate is waived here — interpret timing is not meaningful)
+REPRO_KERNEL_MODE=interpret python -m benchmarks.decode_serve --json --smoke \
+  > /dev/null
+test -f artifacts/benchmarks/BENCH_decode_smoke.json
 
 # kernel-mode matrix: the public ops dispatch layer must match the jnp
 # oracles under EVERY CPU-executable REPRO_KERNEL_MODE (ref = oracle pass,

@@ -79,7 +79,8 @@ def decode_attention(
     lengths: jax.Array,  # (B,) int32
     scale: Optional[float] = None,
     block_k: int = 256,
-    interpret: bool = True,
+    *,
+    interpret: bool,
 ) -> jax.Array:
     B, Hq, D = q.shape
     Smax, Hkv = k_cache.shape[1], k_cache.shape[2]

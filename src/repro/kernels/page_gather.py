@@ -31,7 +31,8 @@ def _gather_kernel(table_ref, pool_ref, out_ref):
 def page_gather(
     pool: jax.Array,  # (P, page)
     page_table: jax.Array,  # (N,) int32
-    interpret: bool = True,
+    *,
+    interpret: bool,
 ) -> jax.Array:
     """Returns out (N, page) with out[i] = pool[page_table[i]]."""
     P, page = pool.shape

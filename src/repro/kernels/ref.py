@@ -56,7 +56,14 @@ def decode_attention_ref(
                         k_cache.astype(jnp.float32)) * scale
     valid = jnp.arange(Smax)[None, :] < lengths[:, None]  # (B, Smax)
     scores = jnp.where(valid[:, None, None, :], scores, -jnp.inf)
-    probs = jax.nn.softmax(scores, axis=-1)
+    # softmax made safe for fully-masked rows (length 0): the kernel's online
+    # softmax emits exact zeros there (l == 0 guard), so the oracle must too —
+    # jax.nn.softmax would produce NaN from exp(-inf - (-inf)).  For rows with
+    # length >= 1 this is op-for-op jax.nn.softmax (max-subtract, exp, sum).
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - jnp.where(jnp.isfinite(m), m, 0.0))
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    probs = p / jnp.where(l == 0.0, 1.0, l)
     out = jnp.einsum("bhgk,bkhd->bhgd", probs, v_cache.astype(jnp.float32))
     return out.reshape(B, Hq, D).astype(q.dtype)
 

@@ -124,6 +124,38 @@ class PrefixSplit:
     bank_suffix: Optional[Callable] = None  # (bank_params, feats) -> (N, ...)
 
 
+@dataclasses.dataclass(frozen=True)
+class DecodeSplit:
+    """Streaming-decode serving surface of a splittable adapter (DESIGN.md
+    D1) — the token-by-token twin of :class:`PrefixSplit`.
+
+    ``trunk_step(params, pool, tables, lengths, tokens) -> (hidden, pool)``
+    advances every row of a paged batch by ONE token through the mergeable
+    trunk; ``head(params, hidden) -> logits`` is the private fan-out, with
+    the same op sequence as the tail of ``step`` so trunk_step + head is
+    bitwise-identical to the composed step.  ``step`` is the full paged
+    per-model path (singleton groups); ``step_unpaged`` /
+    ``init_cache(batch, max_len)`` are the family's contiguous-cache decode
+    — the per-request baseline lane and the bitwise replay oracle.
+    ``bank_head(bank_params, hidden) -> (N, B, 1, V)``, when set, fans every
+    congruent private head out in one dispatch (DESIGN.md S2).
+
+    ``trunk_paths`` / ``head_paths`` / ``head_signature`` are identical to
+    the PrefixSplit tiers — decode grouping reuses the engine's
+    shared-prefix congruence machinery unchanged."""
+
+    trunk_step: Callable  # (params, pool, tables, lengths, tokens)
+    head: Callable  # (params, hidden) -> logits
+    step: Callable  # (params, pool, tables, lengths, tokens) paged full step
+    step_unpaged: Callable  # (params, cache, tokens) -> (logits, cache)
+    init_pool: Callable  # (num_pages, page_size) -> pool pytree
+    init_cache: Callable  # (batch, max_len) -> contiguous cache
+    trunk_paths: frozenset
+    head_paths: Optional[frozenset] = None
+    head_signature: Optional[tuple] = None
+    bank_head: Optional[Callable] = None  # (bank_params, hidden) -> (N, ...)
+
+
 class MergeableAdapter:
     """One model family's view of the merge pipeline.
 
@@ -142,12 +174,16 @@ class MergeableAdapter:
     * **split-serve** (``can_split``): ``split(cfg)`` — prefix/suffix
       callables + prefix paths for the engine's shared-prefix batched
       execution (``ModelProgram.from_adapter``).
+    * **decode-serve** (``can_decode``): ``decode_split(cfg)`` — paged
+      trunk-step/head callables for the streaming decode loop
+      (``serving.decode``, DESIGN.md D1).
     """
 
     name: str = "adapter"
     family: Optional[str] = None  # FAMILIES key this adapter wraps, if any
     can_calibrate: bool = False
     can_split: bool = False
+    can_decode: bool = False
 
     def __init__(self):
         self._bound: dict = {}  # (kind, cfg) -> cached cfg-bound artifact
@@ -237,6 +273,20 @@ class MergeableAdapter:
 
     def _build_split(self, cfg) -> PrefixSplit:
         raise NotImplementedError(f"{self.name}: no prefix/suffix split")
+
+    def decode_split(self, cfg) -> DecodeSplit:
+        """Streaming-decode split, cached per cfg like :meth:`split` so all
+        members of a group hand the decode loop the same function objects
+        (one jit trace per group, not per member)."""
+        key = ("decode_split", self._cfg_key(cfg))
+        ds = self._bound.get(key)
+        if ds is None:
+            ds = self._build_decode_split(cfg)
+            self._bound[key] = ds
+        return ds
+
+    def _build_decode_split(self, cfg) -> DecodeSplit:
+        raise NotImplementedError(f"{self.name}: no streaming decode split")
 
     def bound_forward(self, cfg) -> Callable:
         """(params, x) forward closure, cached per cfg so instances of one
@@ -354,6 +404,7 @@ class DenseLMAdapter(MergeableAdapter):
     family = "dense"
     can_calibrate = True
     can_split = True
+    can_decode = True
 
     def default_config(self):
         return transformer.DenseLMConfig(
@@ -408,6 +459,40 @@ class DenseLMAdapter(MergeableAdapter):
         return PrefixSplit(prefix, suffix, paths,
                            suffix_paths=transformer.head_paths(ep),
                            bank_suffix=bank_suffix)
+
+    def _build_decode_split(self, cfg) -> DecodeSplit:
+        sp = self.split(cfg)  # reuse the congruence tiers: same trunk/head
+
+        def trunk_step(params, pool, tables, lengths, tokens, _cfg=cfg):
+            return transformer.paged_trunk_step(
+                _cfg, params, pool, tables, lengths, tokens)
+
+        def head_fn(params, hidden, _cfg=cfg):
+            return transformer.head(_cfg, params, hidden)
+
+        def step(params, pool, tables, lengths, tokens, _cfg=cfg):
+            return transformer.paged_decode_step(
+                _cfg, params, pool, tables, lengths, tokens)
+
+        def step_unpaged(params, cache, tokens, _cfg=cfg):
+            return transformer.decode_step(_cfg, params, cache, tokens)
+
+        def init_pool(num_pages, page_size, _cfg=cfg):
+            return transformer.init_kv_pool(_cfg, num_pages, page_size)
+
+        def init_cache(batch, max_len, _cfg=cfg):
+            return transformer.init_cache(_cfg, batch, max_len)
+
+        bank = None
+        if sp.bank_suffix is not None:
+            def bank(bank_params, hidden, _cfg=cfg):
+                return transformer.bank_head(_cfg, bank_params, hidden)
+
+        return DecodeSplit(trunk_step, head_fn, step, step_unpaged,
+                           init_pool, init_cache, sp.prefix_paths,
+                           head_paths=sp.suffix_paths,
+                           head_signature=sp.suffix_signature,
+                           bank_head=bank)
 
 
 class FamilyAdapter(MergeableAdapter):

@@ -394,14 +394,23 @@ def _block_decode(cfg: DenseLMConfig, p: dict, cache_l: dict, x: jax.Array,
     ck, cv = _write_kv(cache_l["k"], cache_l["v"], k, v, length, cfg.kv_repl)
     ck = constrain(ck, "batch", "kv_seq", "kv_heads_stored", None)
     cv = constrain(cv, "batch", "kv_seq", "kv_heads_stored", None)
-    Smax = ck.shape[1]
-    kv_positions = jnp.broadcast_to(jnp.arange(Smax, dtype=jnp.int32), (B, Smax))
-    mask = L.attention_mask(positions, kv_positions, causal=True, window=cfg.window)
-    # mask out cache slots beyond the written prefix
-    valid = kv_positions < (length + Sn)
-    mask = mask & valid[:, None, None, :]
     q = constrain(q, "batch", None, "heads", None)
-    attn = L.gqa_attention(q, ck, cv, mask)
+    if Sn == 1 and cfg.window is None:
+        # one-token AR decode goes through the public ops layer so
+        # REPRO_KERNEL_MODE governs this hot path end to end (kernel /
+        # interpret / ref oracle) — mirrors the std_positions routing in
+        # _block.  ``length`` may be a scalar (decode_step) or per-row (B,)
+        # (the paged serving path gathers into the same layout).
+        lengths = jnp.broadcast_to(length + 1, (B,)).astype(jnp.int32)
+        attn = kops.decode_attention(q[:, 0], ck, cv, lengths)[:, None]
+    else:
+        Smax = ck.shape[1]
+        kv_positions = jnp.broadcast_to(jnp.arange(Smax, dtype=jnp.int32), (B, Smax))
+        mask = L.attention_mask(positions, kv_positions, causal=True, window=cfg.window)
+        # mask out cache slots beyond the written prefix
+        valid = kv_positions < (length + Sn)
+        mask = mask & valid[:, None, None, :]
+        attn = L.gqa_attention(q, ck, cv, mask)
     x = x + L.dense(attn.reshape(B, Sn, -1), p["attn"]["wo"])
     h = L.apply_norm(cfg.norm, x, p["ln2"])
     x = x + L.ffn(h, p["mlp"], act=cfg.act, gated=cfg.gated_ffn)
@@ -455,6 +464,130 @@ def decode_step(cfg: DenseLMConfig, params: dict, cache: dict, tokens: jax.Array
     if cfg.logit_softcap is not None:
         logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
     return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Paged KV decode (DESIGN.md D1): pool storage + per-request page tables
+# ---------------------------------------------------------------------------
+
+
+def init_kv_pool(cfg: DenseLMConfig, num_pages: int, page_size: int,
+                 dtype=None) -> dict:
+    """Paged KV pool shared by every in-flight request of one config:
+    k/v (L, P, page, Hs, D).  Page ownership (tables, free list, epochs)
+    lives with the serving layer (``serving.decode.PagedKVPool``) — this is
+    just the device-side storage, the KV twin of the ParamStore weight
+    pages (``kernels.page_gather``'s original GEMEL partial-swap role)."""
+    dtype = dtype or cfg.dtype
+    shape = (cfg.n_layers, num_pages, page_size,
+             cfg.kv_stored_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _paged_write(pool_k, pool_v, k, v, tables, lengths, kv_repl: int):
+    """Scatter one new token's k/v (B, 1, Hkv, D) into each row's current
+    page slot.  pool k/v: (P, page, Hs, D); padded batch rows may duplicate
+    a real row — the duplicate scatter carries identical values, so the
+    write stays deterministic."""
+    if kv_repl > 1:
+        k = jnp.repeat(k, kv_repl, axis=2)
+        v = jnp.repeat(v, kv_repl, axis=2)
+    page = pool_k.shape[1]
+    page_ix = jnp.take_along_axis(tables, (lengths // page)[:, None], axis=1)[:, 0]
+    slot = lengths % page
+    pool_k = pool_k.at[page_ix, slot].set(k[:, 0].astype(pool_k.dtype))
+    pool_v = pool_v.at[page_ix, slot].set(v[:, 0].astype(pool_v.dtype))
+    return pool_k, pool_v
+
+
+def _paged_view(pool_x, tables):
+    """Assemble per-row contiguous caches (B, maxp*page, Hs, D) from the pool
+    in ONE ``ops.page_gather`` dispatch on the (P, page*Hs*D) flat view.  The
+    row layout is exactly ``init_cache``'s with Smax = maxp*page; whatever a
+    page holds beyond a row's valid length is masked to exact zeros by decode
+    attention, so stale tenants of reused pages are bitwise-invisible."""
+    P, page, Hs, D = pool_x.shape
+    B, maxp = tables.shape
+    flat = pool_x.reshape(P, page * Hs * D)
+    out = kops.page_gather(flat, tables.reshape(-1))
+    return out.reshape(B, maxp * page, Hs, D)
+
+
+def _block_decode_paged(cfg: DenseLMConfig, p: dict, pool_l: dict,
+                        x: jax.Array, tables: jax.Array, lengths: jax.Array):
+    """Single-token decode block against one paged pool layer.
+
+    x (B, 1, d); pool_l k/v (P, page, Hs, D); tables (B, maxp); lengths (B,)
+    tokens already cached per row (this token lands at index ``lengths``).
+    Op-for-op the Sn==1 path of :func:`_block_decode` on the gathered
+    contiguous view, so paged decode is bitwise identical to the unpaged
+    cache with Smax = maxp*page (the ref-mode serving contract)."""
+    B, Sn, _ = x.shape
+    h = L.apply_norm(cfg.norm, x, p["ln1"])
+    q, k, v = _qkv(cfg, p["attn"], h, lengths[:, None])
+    pk, pv = _paged_write(pool_l["k"], pool_l["v"], k, v, tables, lengths,
+                          cfg.kv_repl)
+    ck = constrain(_paged_view(pk, tables),
+                   "batch", "kv_seq", "kv_heads_stored", None)
+    cv = constrain(_paged_view(pv, tables),
+                   "batch", "kv_seq", "kv_heads_stored", None)
+    q = constrain(q, "batch", None, "heads", None)
+    attn = kops.decode_attention(q[:, 0], ck, cv, lengths + 1)[:, None]
+    x = x + L.dense(attn.reshape(B, Sn, -1), p["attn"]["wo"])
+    h = L.apply_norm(cfg.norm, x, p["ln2"])
+    x = x + L.ffn(h, p["mlp"], act=cfg.act, gated=cfg.gated_ffn)
+    return x, {"k": pk, "v": pv}
+
+
+def paged_trunk_step(cfg: DenseLMConfig, params: dict, pool: dict,
+                     tables: jax.Array, lengths: jax.Array,
+                     tokens: jax.Array) -> tuple:
+    """Shared-trunk paged decode step — embedding + blocks, ONE new token per
+    row.  tokens (B,) int32; pool from :func:`init_kv_pool`; tables (B, maxp)
+    page indices per row; lengths (B,) tokens already cached.  Returns
+    (hidden (B, 1, d), new_pool).  This is the once-per-step trunk every
+    member of a merged group shares; private heads fan out via :func:`head`
+    or :func:`bank_head`."""
+    if cfg.window is not None:
+        raise ValueError("paged decode requires full attention (window=None)")
+    tables = tables.astype(jnp.int32)
+    lengths = lengths.astype(jnp.int32)
+    x = L.embed(tokens[:, None], params["embed"]["table"])
+    x = constrain(x, "batch", None, "embed")
+
+    if cfg.scan_layers:
+        def body(carry, p):
+            h, pk, pv, li = carry
+            pool_l = {
+                "k": jax.lax.dynamic_index_in_dim(pk, li, 0, keepdims=False),
+                "v": jax.lax.dynamic_index_in_dim(pv, li, 0, keepdims=False),
+            }
+            h, npl = _block_decode_paged(cfg, p, pool_l, h, tables, lengths)
+            pk = jax.lax.dynamic_update_index_in_dim(pk, npl["k"], li, 0)
+            pv = jax.lax.dynamic_update_index_in_dim(pv, npl["v"], li, 0)
+            return (h, pk, pv, li + 1), None
+
+        (x, pk, pv, _), _ = jax.lax.scan(
+            body, (x, pool["k"], pool["v"], jnp.int32(0)), params["blocks"])
+    else:
+        pk, pv = pool["k"], pool["v"]
+        for i in range(cfg.n_layers):
+            pool_l = {"k": pk[i], "v": pv[i]}
+            x, npl = _block_decode_paged(cfg, params["blocks"][str(i)],
+                                         pool_l, x, tables, lengths)
+            pk = pk.at[i].set(npl["k"])
+            pv = pv.at[i].set(npl["v"])
+    return x, {"k": pk, "v": pv}
+
+
+def paged_decode_step(cfg: DenseLMConfig, params: dict, pool: dict,
+                      tables: jax.Array, lengths: jax.Array,
+                      tokens: jax.Array) -> tuple:
+    """Full paged decode step (shared trunk + this model's private head):
+    the paged twin of :func:`decode_step`.  Returns (logits (B, 1, V),
+    new_pool)."""
+    x, pool = paged_trunk_step(cfg, params, pool, tables, lengths, tokens)
+    return head(cfg, params, x), pool
 
 
 def _block_prefill(cfg: DenseLMConfig, p: dict, x: jax.Array,

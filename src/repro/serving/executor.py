@@ -185,6 +185,89 @@ class EdgeExecutor:
             "sla_fraction": met / max(total, 1),
         }
 
+    def serve_decode(self, requests: list, programs: list, max_len: int = 64,
+                     horizon_s: float = 60.0, warmup: bool = True) -> dict:
+        """Per-request decode baseline lane (DESIGN.md D1): each request gets
+        its own contiguous KV cache (``DecodeSplit.init_cache``) and runs
+        sequential ``step_unpaged`` calls to completion, one request at a
+        time in EDF order — chunked prompt ingestion (ONE step over the whole
+        prompt, so the denominator isn't a token-by-token strawman) followed
+        by one single-token step per generated token.  Greedy argmax over
+        the full padded vocab, same as the streaming engine.  Stats mirror
+        the engine's ``tokens_decoded`` / ``steps`` / ``prompt_tokens`` so
+        ``benchmarks/decode_serve.py`` compares like for like."""
+        from repro.serving.decode import DecodeCompletion
+
+        progs = {p.instance_id: p for p in programs}
+        for req in requests:
+            if progs[req.instance_id].decode is None:
+                raise ValueError(f"{req.instance_id}: program has no decode "
+                                 "surface (adapter lacks can_decode)")
+        jitted: dict = {}
+
+        def step_fn(dec):
+            fn = jitted.get(id(dec.step_unpaged))
+            if fn is None:
+                fn = jitted[id(dec.step_unpaged)] = jax.jit(dec.step_unpaged)
+            return fn
+
+        import numpy as np
+
+        order = sorted(requests, key=lambda r: (r.deadline_s, r.arrival_s))
+        if warmup:  # pre-compile both shapes (prompt chunk + single token)
+            seen = set()
+            for req in order:
+                dec = progs[req.instance_id].decode
+                key = (id(dec), len(req.prompt))
+                if key in seen:
+                    continue
+                seen.add(key)
+                params = self.store.materialize_cached(
+                    base_model_id(req.instance_id))
+                step = step_fn(dec)
+                cache = dec.init_cache(1, max_len)
+                chunk = jnp.zeros((1, len(req.prompt)), jnp.int32)
+                _, cache = step(params, cache, chunk)
+                lg, _ = step(params, cache, jnp.zeros((1, 1), jnp.int32))
+                jax.block_until_ready(lg)
+
+        stats = {"steps": 0, "tokens_decoded": 0, "prompt_tokens": 0}
+        completions: list = []
+        t0 = time.monotonic()
+        for req in order:
+            if time.monotonic() - t0 > horizon_s:
+                break
+            iid = req.instance_id
+            dec = progs[iid].decode
+            r = self.scheduler.load(iid, 1)
+            if self.simulate_dma and r["loaded_bytes"]:
+                time.sleep(r["loaded_bytes"] / 1e9 / self.dma_gbps)
+            params = self.store.materialize_cached(base_model_id(iid))
+            step = step_fn(dec)
+            cache = dec.init_cache(1, max_len)
+            prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            logits, cache = step(params, cache, prompt)
+            stats["steps"] += 1
+            stats["prompt_tokens"] += len(req.prompt)
+            out = [int(np.argmax(np.asarray(logits)[0, -1]))]
+            stats["tokens_decoded"] += 1
+            for _ in range(req.max_new_tokens - 1):
+                tok = jnp.full((1, 1), out[-1], jnp.int32)
+                logits, cache = step(params, cache, tok)
+                stats["steps"] += 1
+                out.append(int(np.argmax(np.asarray(logits)[0, 0])))
+                stats["tokens_decoded"] += 1
+            completions.append(
+                DecodeCompletion(req, out, time.monotonic() - t0))
+        self.decode_completions = completions
+        elapsed = time.monotonic() - t0
+        return {
+            "completed": len(completions),
+            "elapsed_s": elapsed,
+            "tokens_per_s": stats["tokens_decoded"] / max(elapsed, 1e-9),
+            **stats,
+        }
+
 
 # ---------------------------------------------------------------------------
 # Merge-aware engine
@@ -216,6 +299,7 @@ class ModelProgram:
     suffix_paths: Optional[frozenset] = None
     suffix_signature: Optional[tuple] = None
     bank_suffix: Optional[Callable] = None  # (bank_params, feats) -> (N, ...)
+    decode: Optional[Any] = None  # registry.DecodeSplit — streaming lane (D1)
 
     @classmethod
     def from_adapter(cls, adapter, instance_id: str,
@@ -230,6 +314,8 @@ class ModelProgram:
         cfg = adapter.default_config() if cfg is None else cfg
         fwd = adapter.bound_forward(cfg)
         sp = adapter.split(cfg) if (split and adapter.can_split) else None
+        ds = (adapter.decode_split(cfg)
+              if (split and getattr(adapter, "can_decode", False)) else None)
         return cls(
             instance_id, model_id if model_id is not None else instance_id,
             forward=fwd,
@@ -239,6 +325,7 @@ class ModelProgram:
             suffix_paths=sp.suffix_paths if sp else None,
             suffix_signature=sp.suffix_signature if sp else None,
             bank_suffix=sp.bank_suffix if sp else None,
+            decode=ds,
         )
 
 
@@ -691,6 +778,23 @@ class MergeAwareEngine:
                 else:
                     (iid,) = group
                     jax.block_until_ready(self._fwd[iid](self._params(iid), batch))
+
+    def serve_decode(self, requests: list, horizon_s: float = 60.0,
+                     on_step: Optional[Callable] = None, **kw) -> dict:
+        """Streaming decode lane (DESIGN.md D1): paged KV pool + continuous
+        batching via ``serving.decode.StreamingDecoder`` — the shared trunk
+        of a merged group advances every in-flight row ONE token per step in
+        a single dispatch, private heads fan out through the suffix bank.
+        ``**kw`` forwards pool/batching knobs (``page_size``, ``num_pages``,
+        ``max_slots``, ``max_len``, ``record_logits``); ``on_step(decoder,
+        step)`` fires after every engine step (the mid-decode hot-swap hook).
+        The decoder is kept on ``last_decoder`` for verification
+        (completions, pool accounting, recorded logits)."""
+        from repro.serving.decode import StreamingDecoder
+
+        dec = StreamingDecoder(self, **kw)
+        self.last_decoder = dec
+        return dec.run(requests, horizon_s=horizon_s, on_step=on_step)
 
     def serve(self, horizon_s: float, warmup: Any = None, drain: bool = True) -> dict:
         """Serve until the horizon (or until the queues are drained, with

@@ -1,0 +1,335 @@
+"""Streaming decode serving (DESIGN.md D1): paged KV pool mechanics, the
+paged == unpaged bitwise contract, continuous batching over the merged LM
+scenario, staggered admission, the mid-decode hot swap, and the executor's
+per-request decode baseline.
+
+The LM scenario (zoo, planner, engine) is imported from
+``benchmarks.lm_merging`` so test and benchmark can never drift apart; the
+expensive StagedPlanner run is a module-scoped fixture."""
+import pathlib
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import MergePlan, ParamStore
+from repro.models.registry import get_adapter
+from repro.serving.decode import (
+    DecodeRequest, PagedKVPool, PoolExhausted, StreamingDecoder,
+    verify_bitwise,
+)
+from repro.serving.executor import ModelProgram
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+from benchmarks import lm_merging as LM  # noqa: E402
+
+PAGE = 4
+DECODE_KW = dict(page_size=PAGE, num_pages=32, max_slots=6, max_len=16,
+                 buckets=(1, 2, 4))
+
+
+@pytest.fixture(scope="module")
+def lm_scenario():
+    adapter = get_adapter("dense")
+    cfg = adapter.default_config()
+    res, _ = LM.plan_variants(adapter, cfg)
+    plan = MergePlan.from_json(res.plan.to_json())
+    return adapter, cfg, plan
+
+
+def _engine(adapter, cfg, plan=None):
+    store = ParamStore.from_models(LM.lm_zoo(adapter, cfg))
+    eng = LM.lm_engine(store, adapter, cfg, LM.MIDS)
+    if plan is not None:
+        swap = eng.apply_plan(plan)
+        assert swap["epoch_bumps"] == 1
+    return eng
+
+
+def _requests(cfg, n_per_model, prompt_len=3, max_new=6):
+    import jax
+
+    reqs = []
+    for j in range(n_per_model):
+        for i, m in enumerate(LM.MIDS):
+            toks = np.asarray(jax.random.randint(
+                jax.random.PRNGKey(7 * i + j), (prompt_len,), 0,
+                cfg.vocab_size))
+            reqs.append(DecodeRequest(m, toks, max_new_tokens=max_new))
+    return reqs
+
+
+# ---------------------------------------------------------------------------
+# PagedKVPool mechanics
+# ---------------------------------------------------------------------------
+
+
+def _mk_pool(num_pages=8, page=4):
+    init = lambda P, pg: {"k": np.zeros((1, P, pg, 1, 1)),  # noqa: E731
+                          "v": np.zeros((1, P, pg, 1, 1))}
+    return PagedKVPool(init, num_pages, page)
+
+
+def test_pool_admit_grow_release_accounting():
+    pool = _mk_pool(num_pages=8, page=4)
+    pool.admit("a", 10)  # reserves ceil(10/4)=3, allocates the first page
+    assert len(pool.tables["a"]) == 1 and pool.allocated_pages == 1
+    pool.ensure("a", 5)  # crosses into page 2
+    assert len(pool.tables["a"]) == 2
+    pool.ensure("a", 5)  # idempotent — already covered
+    assert len(pool.tables["a"]) == 2 and pool.allocated_pages == 2
+    assert pool.high_water == 2 and pool.identity_ok()
+    pool.release("a")
+    assert pool.freed_pages == 2 and pool.in_flight_pages() == 0
+    assert pool.identity_ok()
+    assert sorted(pool._free, reverse=True) == list(range(7, -1, -1))
+
+
+def test_pool_reservation_blocks_overcommit():
+    """Admission reserves the WORST case: a second request that fits the
+    currently-free pages but not the unreserved headroom must be refused —
+    that refusal is what makes mid-flight ``ensure`` infallible."""
+    pool = _mk_pool(num_pages=4, page=4)
+    pool.admit("a", 12)  # reserves 3 of 4 pages, allocates 1
+    assert len(pool._free) == 3  # free pages exist...
+    assert not pool.can_admit(8)  # ...but only 1 is unreserved
+    with pytest.raises(PoolExhausted):
+        pool.admit("b", 8)
+    assert pool.can_admit(4)
+    pool.admit("b", 4)
+    # the reserved pages are really there when "a" grows to its worst case
+    pool.ensure("a", 12)
+    assert len(pool.tables["a"]) == 3 and pool.identity_ok()
+
+
+def test_pool_no_page_shared_between_live_requests():
+    pool = _mk_pool(num_pages=8, page=4)
+    pool.admit("a", 8)
+    pool.admit("b", 8)
+    pool.ensure("a", 8)
+    pool.ensure("b", 8)
+    assert not (set(pool.tables["a"]) & set(pool.tables["b"]))
+    assert pool.identity_ok()
+    pool.release("a")
+    pool.admit("c", 8)
+    pool.ensure("c", 8)  # recycled pages, still disjoint from b
+    assert not (set(pool.tables["c"]) & set(pool.tables["b"]))
+    assert pool.identity_ok()
+
+
+def test_pool_double_admit_rejected():
+    pool = _mk_pool()
+    pool.admit("a", 4)
+    with pytest.raises(ValueError):
+        pool.admit("a", 4)
+
+
+# ---------------------------------------------------------------------------
+# paged == unpaged, at the adapter decode surface
+# ---------------------------------------------------------------------------
+
+
+def test_paged_decode_bitwise_vs_unpaged_shuffled_pages(lm_scenario):
+    """Drive the paged ``step`` by hand on NON-CONTIGUOUS shuffled pages,
+    with a second junk batch row sharing the dispatch, and compare every
+    logits row bitwise against the unpaged ``decode_step`` (B=1, contiguous
+    cache).  This is the layout contract the whole decoder rests on."""
+    import jax
+
+    adapter, cfg, _ = lm_scenario
+    params = LM.lm_zoo(adapter, cfg)["lm-A"]
+    ds = adapter.decode_split(cfg)
+    max_pages, page = 4, 4
+    pool = ds.init_pool(16, page)
+    step = jax.jit(ds.step)
+    step_unpaged = jax.jit(ds.step_unpaged)
+
+    toks = np.asarray(jax.random.randint(jax.random.PRNGKey(3), (10,), 0,
+                                         cfg.vocab_size))
+    table = [7, 2, 11, 5]  # deliberately shuffled physical pages
+    junk_table = [9, 0, 13, 3]
+    cache = ds.init_cache(1, max_pages * page)
+    kv = {"k": pool["k"], "v": pool["v"]}
+    for t in range(len(toks)):
+        tables = jnp.asarray(np.array([table, junk_table], np.int32))
+        lengths = jnp.asarray(np.array([t, max(t - 1, 0)], np.int32))
+        tok_row = jnp.asarray(
+            np.array([toks[t], (int(toks[t]) + 1) % cfg.vocab_size],
+                     np.int32))
+        out, kv = step(params, kv, tables, lengths, tok_row)
+        ref, cache = step_unpaged(params, cache,
+                                  jnp.full((1, 1), int(toks[t]), jnp.int32))
+        np.testing.assert_array_equal(np.asarray(out)[0, 0],
+                                      np.asarray(ref)[0, 0])
+
+
+# ---------------------------------------------------------------------------
+# StreamingDecoder: continuous batching over the merged scenario
+# ---------------------------------------------------------------------------
+
+
+def test_streaming_decode_merged_group_dispatch_discipline(lm_scenario):
+    """All requests complete; the merged (A, B, D, E) group advances with
+    EXACTLY one shared-trunk and one suffix-bank dispatch per step, the
+    foreign C through the fused singleton path; outputs replay bitwise
+    against the unpaged decode."""
+    adapter, cfg, plan = lm_scenario
+    eng = _engine(adapter, cfg, plan)
+    assert ["lm-A", "lm-B", "lm-D", "lm-E"] in eng.prefix_groups()
+    reqs = _requests(cfg, n_per_model=2)
+    stats = eng.serve_decode(reqs, record_logits=True, **DECODE_KW)
+    assert stats["completed"] == len(reqs)
+    assert stats["lost_in_flight"] == 0 and stats["unadmitted"] == 0
+    assert stats["tokens_decoded"] == sum(r.max_new_tokens for r in reqs)
+    assert stats["group_steps"] >= 1
+    assert stats["trunk_dispatches"] == stats["group_steps"]
+    assert stats["bank_dispatches"] == stats["group_steps"]
+    assert stats["head_dispatches"] == 0  # bank-congruent: never per-member
+    assert stats["singleton_dispatches"] >= 1  # lm-C
+    assert stats["pool_identity_ok"]
+    # a request with prompt S and N new tokens is live for S + N - 1 steps
+    for c in eng.last_decoder.completions:
+        assert c.steps == len(c.request.prompt) + c.request.max_new_tokens - 1
+    assert verify_bitwise(eng.last_decoder)
+
+
+def test_streaming_decode_staggered_admission(lm_scenario):
+    """More requests than slots with MIXED generation lengths: admission
+    back-fills retiring slots every step (continuous batching — never
+    drain), so short requests retiring early let queued work in and the
+    step count strictly beats drain-the-cohort scheduling."""
+    adapter, cfg, plan = lm_scenario
+    eng = _engine(adapter, cfg, plan)
+    reqs = _requests(cfg, n_per_model=4)  # 20 requests, 6 slots
+    for i, r in enumerate(reqs):
+        r.max_new_tokens = 3 + (i * 3) % 5  # 3..7, staggered retirements
+    stats = eng.serve_decode(reqs, **DECODE_KW)
+    assert stats["completed"] == len(reqs)
+    assert stats["max_active"] <= DECODE_KW["max_slots"]
+    assert stats["admitted"] == stats["retired"] == len(reqs)
+    assert stats["tokens_decoded"] == sum(r.max_new_tokens for r in reqs)
+    # drain-style comparator: admit a cohort, run it dry, admit the next —
+    # each cohort costs its LONGEST member's S + N - 1 steps
+    k = DECODE_KW["max_slots"]
+    drained = sum(
+        max(len(r.prompt) + r.max_new_tokens - 1 for r in reqs[i:i + k])
+        for i in range(0, len(reqs), k))
+    assert stats["steps"] < drained
+    assert stats["pool_identity_ok"]
+
+
+def test_streaming_decode_mid_stream_hot_swap(lm_scenario):
+    """apply_plan while requests are mid-decode: ONE pool epoch bump, all
+    in-flight requests survive and complete, and the merged trunk group
+    forms immediately (singleton dispatches before the swap, shared trunk +
+    bank after)."""
+    adapter, cfg, plan = lm_scenario
+    eng = _engine(adapter, cfg)  # UNMERGED
+    assert all(len(g) == 1 for g in eng.prefix_groups())
+    seen = {}
+
+    def on_step(dec, step):
+        if step == 3 and not seen:
+            seen["in_flight"] = len(dec.slots)
+            seen["singletons_before"] = dec.stats["singleton_dispatches"]
+            eng.apply_plan(plan)
+
+    reqs = _requests(cfg, n_per_model=2)
+    stats = eng.serve_decode(reqs, on_step=on_step, **DECODE_KW)
+    assert seen["in_flight"] > 0
+    assert stats["completed"] == len(reqs)
+    assert stats["lost_in_flight"] == 0
+    assert stats["epoch_bumps"] == 1
+    assert stats["swap_survivors"] == seen["in_flight"]
+    assert ["lm-A", "lm-B", "lm-D", "lm-E"] in eng.prefix_groups()
+    # merged-group steps really happened after the swap
+    assert stats["trunk_dispatches"] >= 1
+    assert stats["bank_dispatches"] >= 1
+    assert stats["pool_identity_ok"]
+    # pool epochs recorded the swap on the surviving slots' completions
+    swapped = [c for c in eng.last_decoder.completions
+               if c.retire_epoch > c.admit_epoch]
+    assert len(swapped) == seen["in_flight"]
+
+
+def test_streaming_decode_rejects_oversized_request(lm_scenario):
+    adapter, cfg, plan = lm_scenario
+    eng = _engine(adapter, cfg, plan)
+    dec = StreamingDecoder(eng, **DECODE_KW)
+    with pytest.raises(ValueError):
+        dec.submit(DecodeRequest("lm-A", np.zeros(12, np.int32),
+                                 max_new_tokens=9))  # 12+9-1 > max_len 16
+
+
+def test_streaming_decoder_requires_page_aligned_max_len(lm_scenario):
+    adapter, cfg, plan = lm_scenario
+    eng = _engine(adapter, cfg, plan)
+    with pytest.raises(ValueError):
+        StreamingDecoder(eng, page_size=8, max_len=20)
+
+
+# ---------------------------------------------------------------------------
+# EdgeExecutor per-request decode baseline (the honest denominator)
+# ---------------------------------------------------------------------------
+
+
+def test_executor_decode_baseline_stats_and_structure(lm_scenario):
+    from repro.serving.costs import costs_for
+    from repro.serving.executor import EdgeExecutor
+    from repro.serving.workload import instances_from_store
+
+    adapter, cfg, _ = lm_scenario
+    store = ParamStore.from_models(LM.lm_zoo(adapter, cfg))
+    fwd = {m: adapter.bound_forward(cfg) for m in LM.MIDS}
+    ex = EdgeExecutor(
+        store,
+        instances_from_store(store, "tiny-yolo", model_ids=list(LM.MIDS)),
+        fwd, capacity_bytes=10**9,
+        costs={"tiny-yolo": costs_for("tiny-yolo")})
+    programs = [ModelProgram.from_adapter(adapter, m, cfg=cfg)
+                for m in LM.MIDS]
+    reqs = _requests(cfg, n_per_model=1, prompt_len=3, max_new=5)
+    stats = ex.serve_decode(reqs, programs, max_len=16)
+    assert stats["completed"] == len(reqs)
+    # stats mirror the engine lane's vocabulary: one chunked prompt step +
+    # max_new - 1 single-token steps per request
+    assert stats["tokens_decoded"] == 5 * len(reqs)
+    assert stats["steps"] == 5 * len(reqs)
+    assert stats["prompt_tokens"] == 3 * len(reqs)
+    assert stats["tokens_per_s"] > 0
+    assert len(ex.decode_completions) == len(reqs)
+    for c in ex.decode_completions:
+        assert len(c.tokens) == c.request.max_new_tokens
+        assert all(isinstance(t, int) for t in c.tokens)
+
+
+def test_executor_and_engine_decode_agree_on_tokens(lm_scenario):
+    """Same requests, same (merged) weights, two serving paths: the
+    per-request baseline's greedy tokens agree with the merged paged
+    engine's (argmax absorbs the chunked-prefill reduction-order noise; the
+    decode steps themselves are exact in ref mode)."""
+    adapter, cfg, plan = lm_scenario
+    reqs = _requests(cfg, n_per_model=1, prompt_len=3, max_new=5)
+
+    from repro.serving.costs import costs_for
+    from repro.serving.executor import EdgeExecutor
+    from repro.serving.workload import instances_from_store
+
+    store = ParamStore.from_models(LM.lm_zoo(adapter, cfg))
+    store.apply_plan(plan)  # baseline serves the SAME merged weights
+    fwd = {m: adapter.bound_forward(cfg) for m in LM.MIDS}
+    ex = EdgeExecutor(
+        store,
+        instances_from_store(store, "tiny-yolo", model_ids=list(LM.MIDS)),
+        fwd, capacity_bytes=10**9,
+        costs={"tiny-yolo": costs_for("tiny-yolo")})
+    programs = [ModelProgram.from_adapter(adapter, m, cfg=cfg)
+                for m in LM.MIDS]
+    ex.serve_decode(reqs, programs, max_len=16)
+    base = {id(c.request): c.tokens for c in ex.decode_completions}
+
+    eng = _engine(adapter, cfg, plan)
+    eng.serve_decode(reqs, **DECODE_KW)
+    for c in eng.last_decoder.completions:
+        assert c.tokens == base[id(c.request)]

@@ -143,6 +143,128 @@ def test_page_gather_sweep(dtype, P, page, N, rng):
 
 
 # ---------------------------------------------------------------------------
+# decode_attention edge cases (DESIGN.md D1): the decode hot path feeds this
+# kernel fresh-admitted rows (length 0 after the bump convention), ragged
+# lengths that never align to block_k, every GQA ratio the zoo uses, and
+# bf16 caches — each must match the jnp oracle (f32 accumulation) exactly
+# where the contract is exact and within bf16 tolerance elsewhere.
+# ---------------------------------------------------------------------------
+
+
+def test_decode_attention_length_zero_is_exact_zeros(rng):
+    """A fully-masked row (length 0) must emit EXACT zeros from both the
+    kernel body and the ref oracle — not NaN from a 0/0 softmax.  The paged
+    decoder relies on this: padding rows replicate a real row's table but
+    their outputs are discarded, and the guarantee that garbage contributes
+    nothing is what makes paged == unpaged bitwise."""
+    ks = jax.random.split(rng, 3)
+    B, Smax, Hq, Hkv, D = 3, 128, 4, 2, 64
+    q = jax.random.normal(ks[0], (B, Hq, D))
+    kc = jax.random.normal(ks[1], (B, Smax, Hkv, D))
+    vc = jax.random.normal(ks[2], (B, Smax, Hkv, D))
+    lengths = jnp.array([0, 7, 0], jnp.int32)
+    out = decode_attention(q, kc, vc, lengths, interpret=True)
+    ref = R.decode_attention_ref(q, kc, vc, lengths)
+    np.testing.assert_array_equal(np.asarray(out[0]), 0.0)
+    np.testing.assert_array_equal(np.asarray(out[2]), 0.0)
+    np.testing.assert_array_equal(np.asarray(ref[0]), 0.0)
+    np.testing.assert_array_equal(np.asarray(ref[2]), 0.0)
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_allclose(np.asarray(out[1]), np.asarray(ref[1]), **TOL)
+
+
+@pytest.mark.parametrize("lengths", [[1, 37, 129], [63, 64, 65], [255, 2, 130]])
+def test_decode_attention_ragged_lengths_vs_block_k(lengths, rng):
+    """Lengths that straddle block_k boundaries (the common case — decode
+    lengths grow by one per step and are never block-aligned)."""
+    ks = jax.random.split(rng, 3)
+    B, Smax, Hq, Hkv, D = 3, 256, 8, 2, 64
+    q = jax.random.normal(ks[0], (B, Hq, D))
+    kc = jax.random.normal(ks[1], (B, Smax, Hkv, D))
+    vc = jax.random.normal(ks[2], (B, Smax, Hkv, D))
+    lens = jnp.array(lengths, jnp.int32)
+    out = decode_attention(q, kc, vc, lens, block_k=64, interpret=True)
+    ref = R.decode_attention_ref(q, kc, vc, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+
+
+@pytest.mark.parametrize("Hq,Hkv", [(4, 4), (8, 2), (8, 1)])
+def test_decode_attention_gqa_group_sizes(Hq, Hkv, rng):
+    """GQA group sizes 1 (MHA), 4, and 8 (MQA) — the head-replication
+    indexing inside the kernel vs the oracle's repeat."""
+    ks = jax.random.split(rng, 3)
+    B, Smax, D = 2, 128, 64
+    q = jax.random.normal(ks[0], (B, Hq, D))
+    kc = jax.random.normal(ks[1], (B, Smax, Hkv, D))
+    vc = jax.random.normal(ks[2], (B, Smax, Hkv, D))
+    lengths = jnp.array([5, 128], jnp.int32)
+    out = decode_attention(q, kc, vc, lengths, interpret=True)
+    ref = R.decode_attention_ref(q, kc, vc, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+
+
+def test_decode_attention_bf16_accumulates_f32(rng):
+    """bf16 q/k/v: the kernel accumulates in f32, so it must track the
+    all-f32 oracle within bf16 input-rounding error — far tighter than a
+    bf16-accumulated softmax-weighted sum would manage."""
+    ks = jax.random.split(rng, 3)
+    B, Smax, Hq, Hkv, D = 2, 256, 8, 2, 64
+    qf = jax.random.normal(ks[0], (B, Hq, D))
+    kf = jax.random.normal(ks[1], (B, Smax, Hkv, D))
+    vf = jax.random.normal(ks[2], (B, Smax, Hkv, D))
+    lengths = jnp.array([100, 256], jnp.int32)
+    out = decode_attention(qf.astype(jnp.bfloat16), kf.astype(jnp.bfloat16),
+                           vf.astype(jnp.bfloat16), lengths, interpret=True)
+    ref = R.decode_attention_ref(qf.astype(jnp.bfloat16).astype(jnp.float32),
+                                 kf.astype(jnp.bfloat16).astype(jnp.float32),
+                                 vf.astype(jnp.bfloat16).astype(jnp.float32),
+                                 lengths)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_page_gather_permutation_roundtrip(rng):
+    """Gathering a full permutation reproduces the pool rows exactly in
+    permuted order, and the pool itself is untouched (gather is a copy)."""
+    P, page = 16, 64
+    pool = jax.random.normal(rng, (P, page))
+    pool_before = np.asarray(pool).copy()
+    perm = np.random.default_rng(0).permutation(P)
+    out = page_gather(pool, jnp.asarray(perm), interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), pool_before[perm])
+    np.testing.assert_array_equal(np.asarray(pool), pool_before)
+
+
+def test_page_gather_duplicate_pages(rng):
+    """The same physical page referenced from several table slots (padding
+    rows in the decoder replicate a live row's table): every duplicate slot
+    must read back the identical bytes."""
+    P, page = 8, 32
+    pool = jax.random.normal(rng, (P, page))
+    table = jnp.array([3, 3, 0, 7, 3, 0], jnp.int32)
+    out = np.asarray(page_gather(pool, table, interpret=True))
+    np.testing.assert_array_equal(out, np.asarray(pool)[np.array(table)])
+    np.testing.assert_array_equal(out[0], out[1])
+    np.testing.assert_array_equal(out[1], out[4])
+    np.testing.assert_array_equal(out[2], out[5])
+
+
+def test_page_gather_requires_explicit_interpret():
+    """Mode is decided ONLY by kernels.ops / REPRO_KERNEL_MODE: the raw
+    kernels take `interpret` as a required keyword — no silent default that
+    could route a kernel-mode deployment through the interpreter."""
+    pool = jnp.zeros((4, 8))
+    table = jnp.zeros((2,), jnp.int32)
+    with pytest.raises(TypeError):
+        page_gather(pool, table)  # noqa: missing required kwarg
+    q = jnp.zeros((1, 2, 8))
+    kc = jnp.zeros((1, 16, 2, 8))
+    with pytest.raises(TypeError):
+        decode_attention(q, kc, kc, jnp.zeros((1,), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
 # ops-dispatch mode matrix: the PUBLIC entry points (what the serving hot
 # path calls) under the ambient REPRO_KERNEL_MODE must match the pure-jnp
 # oracles.  scripts/ci.sh runs these under BOTH CPU-executable modes

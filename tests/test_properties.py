@@ -378,3 +378,61 @@ def test_property_rebind_interleaving_preserves_queued_requests(ops, seed):
     assert len(eng.completions) - completions0 == submitted
     live = {k for b in store.bindings.values() for k in b.values()}
     assert set(store.buffers) == live  # revert GC'd every orphan
+
+
+# ---------------------------------------------------------------------------
+# paged KV pool (DESIGN.md D1): page ownership under arbitrary interleavings
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=st.lists(st.tuples(st.sampled_from(["admit", "grow", "release"]),
+                              st.integers(0, 5), st.integers(1, 24)),
+                    min_size=1, max_size=60),
+       num_pages=st.integers(2, 12), page=st.sampled_from([1, 2, 4]))
+def test_property_paged_pool_accounting_identity(ops, num_pages, page):
+    """Random admit / grow / release interleavings on a PagedKVPool: after
+    EVERY operation the accounting identity holds — lifetime allocated ==
+    live in-flight + lifetime freed, no physical page referenced by two live
+    page tables, free list disjoint from live pages and jointly exhaustive.
+    Refused admissions (insufficient unreserved headroom) must leave the
+    pool untouched, and a within-reservation ``grow`` may never raise."""
+    from repro.serving.decode import PagedKVPool, PoolExhausted
+
+    def init(P, pg):
+        z = np.zeros((1, P, pg, 1, 1))
+        return {"k": z, "v": z}
+
+    pool = PagedKVPool(init, num_pages, page)
+    worst = {}  # rid -> admitted worst-case token budget
+    grown = {}  # rid -> tokens ensured so far
+    for kind, rid, tokens in ops:
+        if kind == "admit" and rid not in pool.tables:
+            if pool.can_admit(tokens):
+                pool.admit(rid, tokens)
+                worst[rid] = tokens
+                grown[rid] = min(tokens, page)
+            else:
+                before = (pool.allocated_pages, pool.freed_pages,
+                          len(pool._free), sorted(pool.tables))
+                with pytest.raises(PoolExhausted):
+                    pool.admit(rid, tokens)
+                assert (pool.allocated_pages, pool.freed_pages,
+                        len(pool._free), sorted(pool.tables)) == before
+        elif kind == "grow" and rid in pool.tables:
+            # the admission reservation makes within-budget growth infallible
+            target = min(max(grown[rid] + 1, tokens), worst[rid])
+            pool.ensure(rid, target)  # must NOT raise
+            grown[rid] = max(grown[rid], target)
+        elif kind == "release" and rid in pool.tables:
+            pool.release(rid)
+            worst.pop(rid), grown.pop(rid)
+        assert pool.identity_ok(), (kind, rid, tokens)
+        live = [p for t in pool.tables.values() for p in t]
+        assert len(live) == len(set(live))  # no page owned twice
+    for rid in list(pool.tables):
+        pool.release(rid)
+    assert pool.identity_ok()
+    assert pool.in_flight_pages() == 0
+    assert pool.allocated_pages == pool.freed_pages
+    assert sorted(pool._free) == list(range(num_pages))
