@@ -16,6 +16,7 @@ from repro.core.validation import meets_targets, validate
 from repro.data.synthetic import VisionStream
 from repro.models import vision as VI
 from repro.train.optimizer import AdamW
+from repro.utils import stable_seed
 
 
 def pretrain(cfg, params, stream, steps=280, lr=3e-3):
@@ -42,7 +43,7 @@ def main():
                "cam-B": VisionStream(4, 32, seed=8)}
     params, orig_acc = {}, {}
     for mid, stream in streams.items():
-        p0 = VI.init_small_cnn(cfg, jax.random.PRNGKey(hash(mid) % 2**31))
+        p0 = VI.init_small_cnn(cfg, jax.random.PRNGKey(stable_seed(mid)))
         params[mid] = pretrain(cfg, p0, stream)
         val = stream.batch_at(0)
         orig_acc[mid] = float(VI.small_cnn_accuracy(cfg, params[mid], val))

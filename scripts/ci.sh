@@ -8,13 +8,19 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export REPRO_KERNEL_MODE=ref
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
-# API-boundary guard (DESIGN.md P3): the merge pipeline talks to models only
-# through registered MergeableAdapters — no repro.core / repro.serving module
-# may import the vision family directly.
-if grep -RnE "repro\.models\.vision|models import vision" \
-     src/repro/core src/repro/serving; then
-  echo "API boundary violation: core/serving must reach models through" \
-       "repro.models.registry adapters, never repro.models.vision" >&2
+# Static invariant gate (DESIGN.md A7): the AST rule engine enforces the
+# A-series invariants — layering DAG (subsumes the old vision-import grep,
+# now catching aliased/importlib forms too), kernel-dispatch discipline,
+# epoch-bump discipline, injected clocks/RNG, tracer hygiene, stable ids —
+# with --strict pragma hygiene.  The JSON report is the CI artifact; gate is
+# zero unsuppressed findings.
+mkdir -p artifacts/analysis
+if ! python -m repro.analysis --strict --json > artifacts/analysis/ANALYSIS.json; then
+  echo "static analysis failed — findings follow (full report in" \
+       "artifacts/analysis/ANALYSIS.json; fix at the cited line or add an" \
+       "inline '# repro: allow[RULE-ID] reason' pragma with a justification;" \
+       "rule catalog: python -m repro.analysis --list-rules)" >&2
+  python -m repro.analysis --strict >&2 || true
   exit 1
 fi
 
@@ -146,8 +152,12 @@ test -f artifacts/benchmarks/BENCH_decode_smoke.json
 
 # kernel-mode matrix: the public ops dispatch layer must match the jnp
 # oracles under EVERY CPU-executable REPRO_KERNEL_MODE (ref = oracle pass,
-# interpret = kernel bodies executed on CPU), incl. the bank kernel sweeps
+# interpret = kernel bodies executed on CPU), incl. the bank kernel sweeps.
+# The abstract contract checker runs first in each lane: signature/shape/
+# dtype congruence over the whole OP_TABLE via jax.eval_shape (no device,
+# milliseconds), so a skewed kernel fails before the numeric sweep starts.
 for mode in ref interpret; do
+  REPRO_KERNEL_MODE="$mode" python -m repro.analysis --contracts-only
   REPRO_KERNEL_MODE="$mode" python -m pytest -q tests/test_kernels.py \
     -k "ops_mode or bank_matmul"
 done

@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# One-command local lint loop: the same static gates scripts/ci.sh runs,
+# without the test/benchmark lanes.  Run from anywhere inside the repo.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+# AST invariant rules (A-series) with strict pragma hygiene
+python -m repro.analysis --strict
+
+# abstract kernel contracts in both CPU-executable dispatch lanes
+for mode in ref interpret; do
+  REPRO_KERNEL_MODE="$mode" python -m repro.analysis --contracts-only
+done
+echo "lint OK"

@@ -1,0 +1,39 @@
+"""repro.analysis — the repo-native static invariant checker (DESIGN.md A7).
+
+Seven PRs of merge-aware serving rest on invariants that used to be enforced
+by convention and after-the-fact tests: exactly ONE epoch bump per store
+mutation, kernels reachable only through ``kernels/ops.py`` with ``interpret``
+as a required keyword, injected clocks in the deterministic subsystems, the
+core/serving <-> models adapter boundary, tracer hygiene on jit surfaces, and
+the blake2-not-``hash()`` id lesson from PR 1.  This package proves them on
+every commit instead of a reviewer re-deriving them per PR:
+
+* :mod:`repro.analysis.engine` — AST rule engine: file walker over ``src/``
+  (plus ``benchmarks/`` and ``examples/``), rule registry, ``# repro:
+  allow[RULE-ID] reason`` suppression pragmas, findings with file:line and a
+  fix hint, human and ``--json`` output.
+* :mod:`repro.analysis.rules` — the A-series rules (A101..A601), each one
+  invariant with the PR that motivated it (DESIGN.md "A-series: enforced
+  invariants").
+* :mod:`repro.analysis.contracts` — abstract kernel-contract verification:
+  ``jax.eval_shape`` over the ``kernels.ops.OP_TABLE`` dispatch table proves,
+  with no device and no data, that every op's kernel/interpret/ref triple has
+  congruent signatures and output shapes/dtypes across a swept shape grid,
+  that bf16 inputs accumulate in f32 where the contract makes it visible,
+  and that block-divisibility guards raise instead of miscomputing.
+
+CLI::
+
+    python -m repro.analysis [--strict] [--json] [--contracts]
+    python -m repro.analysis --contracts-only      # the CI kernel lanes
+    python -m repro.analysis --list-rules
+"""
+from repro.analysis.engine import (  # noqa: F401
+    Finding,
+    Report,
+    Rule,
+    all_rules,
+    analyze_paths,
+    analyze_source,
+    repo_root,
+)

@@ -1,0 +1,14 @@
+"""The A-series rules (DESIGN.md "A-series: enforced invariants").
+
+Importing this package registers every rule with the engine.  Rule ids are
+stable — they appear in suppression pragmas and in DESIGN.md — so renumber
+nothing; retire a rule by deleting its module and its DESIGN.md row.
+"""
+from repro.analysis.rules import (  # noqa: F401
+    determinism,
+    epochs,
+    ids,
+    kernels,
+    layering,
+    tracers,
+)

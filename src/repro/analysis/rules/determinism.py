@@ -1,0 +1,96 @@
+"""A301/A302 — injected clocks and seeded RNG (DESIGN.md A1/D2).
+
+The lifecycle tests (PR 5) and the fault-injection harness (PR 6) replay
+drift scenarios deterministically by injecting a fake clock and a seeded RNG;
+the streaming scheduler's deadline math (PR 7) is only testable because time
+comes in through a parameter.  A direct ``time.monotonic()`` buried in a
+helper silently re-couples a subsystem to the wall clock and the replay
+harness can no longer freeze it.  The rule flags *calls*, not references:
+``clock: Callable[[], float] = time.monotonic`` as a parameter default is
+exactly the sanctioned injection idiom."""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.engine import rule
+
+# Subsystems whose behavior the test harnesses replay deterministically.
+CLOCKED_PACKAGES = ("core", "serving", "runtime")
+
+WALL_CLOCK_CALLS = {
+    "time.time", "time.time_ns",
+    "time.monotonic", "time.monotonic_ns",
+    "time.perf_counter", "time.perf_counter_ns",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+    "datetime.date.today",
+}
+
+UNSEEDED_RANDOM_PREFIXES = ("random.",)
+NUMPY_RANDOM = ("numpy.random.", "np.random.")
+
+
+def _is_call(ctx, node):
+    parent = ctx.parent(node)
+    return isinstance(parent, ast.Call) and parent.func is node
+
+
+@rule(
+    "A301",
+    "no wall-clock calls in deterministic subsystems",
+    "core/, serving/ and runtime/ never CALL time.time/monotonic/"
+    "perf_counter(_ns), datetime.now/utcnow or date.today; time is injected "
+    "(`clock: Callable[[], float] = time.monotonic` parameter defaults are "
+    "references, not calls, and stay legal).",
+    "take `clock: Callable[[], float] = time.monotonic` as a parameter or "
+    "dataclass field and call self.clock()/clock()",
+    "PR 5 (lifecycle replay) / PR 6 (fault-injection determinism)",
+)
+def wall_clock_injection(ctx):
+    if not ctx.in_package(*CLOCKED_PACKAGES):
+        return
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, (ast.Attribute, ast.Name)) \
+                and _is_call(ctx, node):
+            qn = ctx.qualname(node)
+            if qn in WALL_CLOCK_CALLS:
+                yield node.lineno, (f"calls {qn}() — wall-clock reads must "
+                                    "come through an injected clock")
+
+
+@rule(
+    "A302",
+    "no unseeded global RNG in deterministic subsystems",
+    "core/, serving/ and runtime/ never call the process-global "
+    "random.*/numpy.random.* state; randomness flows from an explicit "
+    "random.Random(seed) / numpy.random.default_rng(seed) / jax PRNG key.",
+    "thread a `rng` argument (random.Random(seed) or "
+    "np.random.default_rng(seed)) from the config seed",
+    "PR 5/PR 6 (seeded drift + fault schedules)",
+)
+def seeded_rng(ctx):
+    if not ctx.in_package(*CLOCKED_PACKAGES):
+        return
+    for node in ast.walk(ctx.tree):
+        if not (isinstance(node, (ast.Attribute, ast.Name))
+                and _is_call(ctx, node)):
+            continue
+        qn = ctx.qualname(node)
+        if qn is None:
+            continue
+        if qn == "random.Random" or qn.startswith("random.Random."):
+            continue  # instantiating an explicit, seedable generator
+        if any(qn.startswith(p) for p in UNSEEDED_RANDOM_PREFIXES):
+            yield node.lineno, (f"calls the global RNG {qn}() — seedless "
+                                "randomness breaks scenario replay")
+            continue
+        for p in NUMPY_RANDOM:
+            if not qn.startswith(p):
+                continue
+            tail = qn[len(p):]
+            call = ctx.parent(node)
+            if tail == "default_rng" and call.args:
+                break  # np.random.default_rng(seed): explicit and seeded
+            yield node.lineno, (f"calls {qn}() — use "
+                                "np.random.default_rng(seed) and pass the "
+                                "generator in")
+            break

@@ -1,0 +1,72 @@
+"""A101/A102 — kernel-dispatch discipline (DESIGN.md A5/S2/D1).
+
+The serving hot path's mode story only holds if ``kernels/ops.py`` is the
+single place that decides kernel vs interpret vs ref: a direct import of a
+kernel module would hard-wire a backend past ``REPRO_KERNEL_MODE``, and an
+``interpret`` default on a kernel entry point would let a kernel-mode
+deployment silently run the Python interpreter (the PR 7 lesson: page_gather
+and decode_attention were converted to required keywords; A102 freezes that
+for every kernel)."""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.engine import rule
+
+KERNELS = "repro.kernels"
+# ops is the dispatch layer; ref holds the pure-jnp oracles (tests and
+# benchmarks compare against them — importing an oracle is not importing a
+# kernel).  Everything else under repro.kernels is a Pallas kernel module.
+ALLOWED_MODULES = {KERNELS, f"{KERNELS}.ops", f"{KERNELS}.ref"}
+
+
+@rule(
+    "A101",
+    "kernel imports go through kernels.ops",
+    "Only kernels/ops.py may import Pallas kernel modules; everyone else "
+    "calls the mode-dispatching entry points in repro.kernels.ops (or the "
+    "jnp oracles in repro.kernels.ref).",
+    "import repro.kernels.ops and call the public entry point; mode is "
+    "decided by REPRO_KERNEL_MODE, never by the call site",
+    "PR 4/PR 7 (kernels.ops dispatch layer)",
+)
+def kernel_import_discipline(ctx):
+    if ctx.rel.startswith("src/repro/kernels/"):
+        return  # the kernel package itself (incl. ops.py) is the one owner
+    for line, mod in ctx.literal_imports():
+        if mod.startswith(KERNELS) and mod not in ALLOWED_MODULES:
+            yield line, (f"direct kernel-module import '{mod}' bypasses the "
+                         "kernels.ops dispatch layer")
+
+
+@rule(
+    "A102",
+    "kernel entry points require interpret",
+    "Every public kernel entry point declares `interpret` as a keyword-only "
+    "argument with NO default, so the execution mode can only come from "
+    "kernels/ops.py.",
+    "move `interpret` after a bare `*` and drop its default; ops.py passes "
+    "interpret=(mode == 'interpret')",
+    "PR 7 satellite (page_gather/decode_attention required kwarg)",
+)
+def kernel_interpret_required(ctx):
+    if not ctx.rel.startswith("src/repro/kernels/"):
+        return
+    if ctx.rel.rsplit("/", 1)[-1] in ("ops.py", "ref.py", "__init__.py"):
+        return
+    for node in ctx.tree.body:
+        if not isinstance(node, ast.FunctionDef) or node.name.startswith("_"):
+            continue
+        a = node.args
+        if any(arg.arg == "interpret" for arg in a.args + a.posonlyargs):
+            yield node.lineno, (f"{node.name}: `interpret` must be "
+                                "keyword-only (currently positional)")
+            continue
+        kw = {arg.arg: default
+              for arg, default in zip(a.kwonlyargs, a.kw_defaults)}
+        if "interpret" not in kw:
+            yield node.lineno, (f"{node.name}: kernel entry point does not "
+                                "declare an `interpret` keyword")
+        elif kw["interpret"] is not None:
+            yield node.lineno, (f"{node.name}: `interpret` must not have a "
+                                "default — mode is kernels/ops.py's call")

@@ -1,0 +1,68 @@
+"""A401 — declared layering DAG (DESIGN.md A2/S3).
+
+PR 3's adapter boundary ("core/ and serving/ never import models/ —
+vision models attach through the MergeAdapter registry") started as a shell
+grep in ci.sh that only caught the spelled-out ``from repro.models import``
+form; an aliased or ``importlib.import_module("repro.models...")`` import
+sailed past it.  This rule generalizes the boundary to the full package DAG
+and resolves imports through the AST, so aliasing and literal-string dynamic
+imports are caught too.  Edges are *allowed direct imports*; the DAG is the
+architecture doc the reviewer otherwise keeps in their head."""
+from __future__ import annotations
+
+from repro.analysis.engine import rule
+
+#: package -> packages it may import directly (src/repro only; transitive
+#: reach comes from following edges, not from listing them twice).
+ALLOWED_IMPORTS = {
+    "utils": set(),
+    "kernels": {"utils"},
+    "distributed": {"utils"},
+    "train": {"distributed", "utils"},
+    "data": {"train", "utils"},
+    "core": {"train", "utils"},
+    "models": {"core", "kernels", "distributed", "utils"},
+    "configs": {"core", "models", "utils"},
+    "ckpt": {"core", "distributed", "train", "utils"},
+    "runtime": {"ckpt", "distributed", "utils"},
+    "serving": {"core", "configs", "runtime", "utils"},
+    "launch": {"ckpt", "configs", "core", "data", "distributed", "kernels",
+               "models", "runtime", "serving", "train", "utils"},
+    "analysis": {"kernels", "utils"},
+}
+
+
+def _package_of(rel: str):
+    parts = rel.split("/")
+    if len(parts) >= 3 and parts[0] == "src" and parts[1] == "repro":
+        return parts[2].removesuffix(".py") if len(parts) == 3 else parts[2]
+    return None
+
+
+@rule(
+    "A401",
+    "imports follow the declared package DAG",
+    "Each package under src/repro imports only the packages its DAG row "
+    "allows; in particular core/ and serving/ reach models/ exclusively via "
+    "the MergeAdapter registry.  Resolution is AST-based, so aliased and "
+    "importlib/__import__ string-literal forms count.",
+    "depend on the lower layer's public API, or register through the "
+    "adapter/registry seam; widening the DAG is a DESIGN.md change",
+    "PR 3 (adapter API boundary grep, upgraded) / PR 6 (serving layering)",
+)
+def layering_dag(ctx):
+    pkg = _package_of(ctx.rel)
+    if pkg is None or pkg not in ALLOWED_IMPORTS:
+        return
+    allowed = ALLOWED_IMPORTS[pkg] | {pkg}
+    seen = set()  # one finding per (line, offending package)
+    for line, mod in ctx.literal_imports():
+        if not mod.startswith("repro."):
+            continue
+        target = mod.split(".")[1]
+        if target in ALLOWED_IMPORTS and target not in allowed \
+                and (line, target) not in seen:
+            seen.add((line, target))
+            yield line, (f"repro.{pkg} imports {mod} — the layering DAG "
+                         f"allows {pkg} -> "
+                         f"{{{', '.join(sorted(ALLOWED_IMPORTS[pkg]))}}}")

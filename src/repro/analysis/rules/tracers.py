@@ -1,0 +1,128 @@
+"""A501 — tracer hygiene on jit surfaces (DESIGN.md A4/K2).
+
+``float(x)``/``int(x)``/``bool(x)``/``x.item()`` on a traced array aborts
+tracing with a ConcretizationTypeError at call time — but only on the first
+call with a real tracer, so the bug hides until a code path finally jits.
+The rule finds functions that flow through ``jax.jit`` (decorator form,
+``functools.partial(jax.jit, ...)`` decorator form, or a module-level
+``jax.jit(fn)`` naming a local FunctionDef) and flags concretization of
+values derived from their array parameters.  Parameters named in
+``static_argnames`` are Python values at trace time and exempt; so are
+``.shape/.ndim/.size/.dtype`` reads, which are static on tracers."""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.engine import rule
+
+CONCRETIZERS = {"float", "int", "bool"}
+STATIC_ATTRS = {"shape", "ndim", "size", "dtype"}
+
+
+def _static_argnames(call):
+    """static_argnames/static_argnums keyword of a jax.jit(...) call ->
+    set of names (best-effort over string/tuple literals)."""
+    names = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                names.add(v.value)
+            elif isinstance(v, (ast.Tuple, ast.List)):
+                names.update(e.value for e in v.elts
+                             if isinstance(e, ast.Constant)
+                             and isinstance(e.value, str))
+    return names
+
+
+def _jit_call_of(ctx, deco):
+    """The jax.jit(...) Call a decorator represents, or None.
+
+    Handles ``@jax.jit``, ``@jax.jit(...)`` and
+    ``@functools.partial(jax.jit, static_argnames=...)``.
+    """
+    if ctx.qualname(deco) == "jax.jit":
+        return deco  # bare @jax.jit (no static args)
+    if isinstance(deco, ast.Call):
+        qn = ctx.qualname(deco.func)
+        if qn == "jax.jit":
+            return deco
+        if qn in ("functools.partial", "partial") and deco.args \
+                and ctx.qualname(deco.args[0]) == "jax.jit":
+            return deco
+    return None
+
+
+def _jit_targets(ctx):
+    """FunctionDef -> static-arg-name set, for every function that flows
+    through jax.jit in this file."""
+    defs = {n.name: n for n in ast.walk(ctx.tree)
+            if isinstance(n, ast.FunctionDef)}
+    targets = {}
+    for fn in defs.values():
+        for deco in fn.decorator_list:
+            call = _jit_call_of(ctx, deco)
+            if call is not None:
+                statics = _static_argnames(call) if isinstance(call, ast.Call) else set()
+                targets[fn] = targets.get(fn, set()) | statics
+    # module-level fn2 = jax.jit(fn, static_argnames=...)
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Call) and ctx.qualname(node.func) == "jax.jit" \
+                and node.args and isinstance(node.args[0], ast.Name) \
+                and node.args[0].id in defs:
+            fn = defs[node.args[0].id]
+            targets[fn] = targets.get(fn, set()) | _static_argnames(node)
+    return targets
+
+
+def _param_names(fn):
+    a = fn.args
+    return {p.arg for p in a.posonlyargs + a.args + a.kwonlyargs
+            if p.arg not in ("self", "cls")}
+
+
+def _mentions(node, names):
+    """True when the expression references any of the given names, ignoring
+    static attribute reads like ``q.shape[0]``."""
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name) and n.id in names:
+            parent = getattr(n, "_repro_parent", None)
+            if isinstance(parent, ast.Attribute) \
+                    and parent.attr in STATIC_ATTRS:
+                continue
+            return True
+    return False
+
+
+@rule(
+    "A501",
+    "no tracer concretization in jit-flowing functions",
+    "Functions that flow through jax.jit never force traced values to "
+    "Python scalars via float()/int()/bool()/.item(); static_argnames "
+    "parameters and .shape/.ndim/.size/.dtype reads are exempt.",
+    "keep the math in jnp (jnp.where/lax.cond for branches); if the value "
+    "is genuinely static, declare it in static_argnames",
+    "PR 4 (kernel jit wrappers) / PR 7 (decode scheduler jit surfaces)",
+)
+def tracer_hygiene(ctx):
+    for fn, statics in _jit_targets(ctx).items():
+        tainted = _param_names(fn) - statics
+        if not tainted:
+            continue
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                # float(x)/int(x)/bool(x) on a parameter-derived value
+                if isinstance(node.func, ast.Name) \
+                        and node.func.id in CONCRETIZERS \
+                        and node.func.id not in ctx.aliases \
+                        and node.args and _mentions(node.args[0], tainted):
+                    yield node.lineno, (
+                        f"{fn.name}: {node.func.id}() concretizes a traced "
+                        "value — this aborts under jax.jit")
+                # x.item()
+                elif isinstance(node.func, ast.Attribute) \
+                        and node.func.attr == "item" \
+                        and _mentions(node.func.value, tainted):
+                    yield node.lineno, (
+                        f"{fn.name}: .item() concretizes a traced value — "
+                        "this aborts under jax.jit")

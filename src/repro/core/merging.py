@@ -47,6 +47,7 @@ class MergeTrainer:
     ef_epochs: int = 2
     min_delta: float = 1e-3  # minimum accuracy lift that counts as progress
     min_data_fraction: float = 0.25
+    clock: Callable[[], float] = time.monotonic  # injected for replay tests
 
     def __post_init__(self):
         if self.optimizer is None:
@@ -81,7 +82,7 @@ class MergeTrainer:
     # -- main loop -------------------------------------------------------------
 
     def train(self, store: ParamStore, models: list) -> MergeResult:
-        t0 = time.monotonic()
+        t0 = self.clock()
         active = list(models)
         failed: set = set()
         data_frac = {m.model_id: 1.0 for m in models}
@@ -124,7 +125,7 @@ class MergeTrainer:
 
             if meets_targets(accs, active):
                 return MergeResult(True, last_accs, failed, epoch,
-                                   time.monotonic() - t0, frac_log)
+                                   self.clock() - t0, frac_log)
 
             # Early-failure is *relative*: a model stalls only if it made no
             # progress while other below-target models did (paper: "not
@@ -175,4 +176,4 @@ class MergeTrainer:
             {m.model_id: accs[m.model_id] for m in models if m.model_id not in failed},
             [m for m in models if m.model_id not in failed],
         ) and not failed
-        return MergeResult(ok, last_accs, failed, epoch, time.monotonic() - t0, frac_log)
+        return MergeResult(ok, last_accs, failed, epoch, self.clock() - t0, frac_log)

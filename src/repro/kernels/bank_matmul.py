@@ -84,7 +84,8 @@ def bank_matmul(
     block_m: int = 128,
     block_f: int = 128,
     block_k: int = 128,
-    interpret: bool = True,
+    *,
+    interpret: bool,
 ) -> jax.Array:
     """Returns (N, M, F) float32 with out[n] = x[n] @ w[n] (+ b[n])."""
     N, K, F = w.shape

@@ -107,7 +107,8 @@ def flash_attention(
     scale: Optional[float] = None,
     block_q: int = 128,
     block_k: int = 128,
-    interpret: bool = True,
+    *,
+    interpret: bool,
 ) -> jax.Array:
     B, S, Hq, D = q.shape
     Hkv = k.shape[2]

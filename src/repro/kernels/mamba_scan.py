@@ -63,7 +63,8 @@ def mamba_scan(
     h0: jax.Array,  # (B, di, n)
     chunk: int = 128,
     block_di: int = 512,
-    interpret: bool = True,
+    *,
+    interpret: bool,
 ):
     """Returns (y (B,S,di) float32, h_last (B,di,n) float32)."""
     B, S, di = dt.shape

@@ -10,6 +10,7 @@ on CPU hosts and "kernel" when a TPU is present.
 """
 from __future__ import annotations
 
+import dataclasses
 import os
 from typing import Optional
 
@@ -80,3 +81,36 @@ def bank_matmul(x, w, b=None, mode: Optional[str] = None, **kw):
     if mode == "ref":
         return _ref.bank_matmul_ref(x, w, b)
     return _bank_kernel(x, w, b, interpret=(mode == "interpret"), **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class OpSpec:
+    """One dispatchable op, machine-readable: the contract checker
+    (repro.analysis.contracts) proves kernel/ref congruence abstractly over
+    this table, and tests/test_kernels.py drives its mode matrix from it —
+    adding an op without registering it here fails both."""
+
+    name: str            # public entry-point name in this module
+    kernel: object       # Pallas entry point (interpret=bool keyword-only)
+    ref: object          # pure-jnp oracle in repro.kernels.ref
+    dispatch: object     # the mode-dispatching wrapper above
+    array_args: tuple    # positional array params, in call order
+    optional_args: tuple = ()  # trailing array params that may be None
+
+
+OP_TABLE: dict = {
+    s.name: s for s in (
+        OpSpec("flash_attention", _flash_kernel, _ref.flash_attention_ref,
+               flash_attention, ("q", "k", "v")),
+        OpSpec("decode_attention", _decode_kernel, _ref.decode_attention_ref,
+               decode_attention, ("q", "k_cache", "v_cache", "lengths")),
+        OpSpec("rg_lru_scan", _rg_lru_kernel, _ref.rg_lru_ref,
+               rg_lru_scan, ("a", "b", "h0")),
+        OpSpec("mamba_scan", _mamba_kernel, _ref.mamba_scan_ref,
+               mamba_scan, ("dt", "dtx", "Bmat", "Cmat", "A", "h0")),
+        OpSpec("page_gather", _gather_kernel, _ref.page_gather_ref,
+               page_gather, ("pool", "page_table")),
+        OpSpec("bank_matmul", _bank_kernel, _ref.bank_matmul_ref,
+               bank_matmul, ("x", "w"), optional_args=("b",)),
+    )
+}

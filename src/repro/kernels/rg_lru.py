@@ -51,7 +51,8 @@ def rg_lru_scan(
     h0: jax.Array,  # (B, d)
     chunk: int = 256,
     block_d: int = 512,
-    interpret: bool = True,
+    *,
+    interpret: bool,
 ):
     """Returns (y (B,S,d) float32, h_last (B,d) float32)."""
     B, S, d = a.shape

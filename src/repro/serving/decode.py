@@ -227,11 +227,14 @@ class StreamingDecoder:
     def __init__(self, engine: MergeAwareEngine, page_size: int = 8,
                  num_pages: int = 128, max_slots: int = 8,
                  max_len: int = 32, buckets: Optional[tuple] = None,
-                 record_logits: bool = False):
+                 record_logits: bool = False,
+                 clock: Optional[Callable[[], float]] = None):
         if max_len % page_size:
             raise ValueError("max_len must be a multiple of page_size")
         self.engine = engine
         self.store = engine.store
+        # default to the engine's clock so one injected fake drives both
+        self.clock = clock if clock is not None else engine.clock
         self.page_size = page_size
         self.num_pages = num_pages
         self.max_slots = max_slots
@@ -246,7 +249,7 @@ class StreamingDecoder:
         self._pools: dict = {}  # init_pool callable key -> PagedKVPool
         self._compiled: dict = {}
         self._rid = 0
-        self._t0 = time.monotonic()
+        self._t0 = self.clock()
         self._epoch = self.store.epoch
         self.stats = {
             "steps": 0, "tokens_decoded": 0, "prompt_tokens": 0,
@@ -344,7 +347,7 @@ class StreamingDecoder:
         pool = self.pool_for(s.request.instance_id)
         pool.release(rid)
         self.completions.append(DecodeCompletion(
-            s.request, s.out_tokens, time.monotonic() - self._t0,
+            s.request, s.out_tokens, self.clock() - self._t0,
             steps=s.steps, logits=s.logits,
             admit_epoch=s.admit_epoch, retire_epoch=pool.epoch))
         self.stats["retired"] += 1
@@ -466,16 +469,16 @@ class StreamingDecoder:
             self.submit(req)
         if warmup:
             self._warmup()
-        self._t0 = time.monotonic()
+        self._t0 = self.clock()
         while (self.queue or self.slots) and \
-                time.monotonic() - self._t0 < horizon_s:
+                self.clock() - self._t0 < horizon_s:
             self._admit()
             if not self.slots:  # queue non-empty but nothing admittable
                 break
             self.step()
             if on_step is not None:
                 on_step(self, self.stats["steps"])
-        elapsed = time.monotonic() - self._t0
+        elapsed = self.clock() - self._t0
         pools_ok = all(p.identity_ok() for p in self._pools.values())
         return {
             "completed": len(self.completions),

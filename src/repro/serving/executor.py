@@ -100,8 +100,10 @@ class EdgeExecutor:
         simulate_dma: bool = True,
         idle_sleep_s: float = 2e-4,
         buckets: tuple = (1, 2, 4, 8),
+        clock: Callable[[], float] = time.monotonic,
     ):
         self.store = store
+        self.clock = clock  # injected so harness replays can freeze time
         self.scheduler = Scheduler(instances, capacity_bytes, costs)
         self.forward = {
             iid: jax.jit(fn) for iid, fn in forward_fns.items()
@@ -143,13 +145,13 @@ class EdgeExecutor:
                 for b in ladder:
                     wb, _ = pad_stack([warmup] * b, b)
                     jax.block_until_ready(self.forward[iid](params, wb))
-        t0 = time.monotonic()
+        t0 = self.clock()
         idx = 0
         empty_streak = 0
-        while time.monotonic() - t0 < horizon_s:
+        while self.clock() - t0 < horizon_s:
             iid = order[idx % len(order)]
             idx += 1
-            now = time.monotonic() - t0
+            now = self.clock() - t0
             self._drop_expired(now)
             q = self.queues[iid]
             if not q:
@@ -172,7 +174,7 @@ class EdgeExecutor:
                                    bucket_for(len(taken), ladder))
             out = self.forward[iid](params, stacked)
             jax.block_until_ready(out)
-            done = time.monotonic() - t0
+            done = self.clock() - t0
             for j, req in enumerate(taken):
                 self.completions.append(Completion(req, out[j], done))
         met = sum(1 for c in self.completions if c.met_sla)
@@ -233,9 +235,9 @@ class EdgeExecutor:
 
         stats = {"steps": 0, "tokens_decoded": 0, "prompt_tokens": 0}
         completions: list = []
-        t0 = time.monotonic()
+        t0 = self.clock()
         for req in order:
-            if time.monotonic() - t0 > horizon_s:
+            if self.clock() - t0 > horizon_s:
                 break
             iid = req.instance_id
             dec = progs[iid].decode
@@ -258,9 +260,9 @@ class EdgeExecutor:
                 out.append(int(np.argmax(np.asarray(logits)[0, 0])))
                 stats["tokens_decoded"] += 1
             completions.append(
-                DecodeCompletion(req, out, time.monotonic() - t0))
+                DecodeCompletion(req, out, self.clock() - t0))
         self.decode_completions = completions
-        elapsed = time.monotonic() - t0
+        elapsed = self.clock() - t0
         return {
             "completed": len(completions),
             "elapsed_s": elapsed,
@@ -336,9 +338,11 @@ class AsyncDMA:
     bookkeeping still runs (stall/hidden stats) but nothing sleeps — the path
     a real DMA queue would take."""
 
-    def __init__(self, gbps: float, simulate: bool = True):
+    def __init__(self, gbps: float, simulate: bool = True,
+                 clock: Callable[[], float] = time.monotonic):
         self.gbps = gbps
         self.simulate = simulate
+        self.clock = clock
         self._inflight: dict = {}  # key -> (t_start, duration_s)
         self.stall_s = 0.0
         self.hidden_s = 0.0
@@ -348,7 +352,7 @@ class AsyncDMA:
         return nbytes / 1e9 / self.gbps
 
     def start(self, key, nbytes: int) -> None:
-        self._inflight[key] = (time.monotonic(), self.seconds_for(nbytes))
+        self._inflight[key] = (self.clock(), self.seconds_for(nbytes))
         if nbytes:
             self.transfers += 1
 
@@ -356,7 +360,7 @@ class AsyncDMA:
         """Block until the transfer for ``key`` is done; returns the visible
         stall.  A key never started (cold miss) pays the full transfer."""
         entry = self._inflight.pop(key, None)
-        now = time.monotonic()
+        now = self.clock()
         if entry is None:
             remaining = self.seconds_for(nbytes)
             if nbytes:
@@ -396,8 +400,10 @@ class MergeAwareEngine:
         buckets: tuple = (1, 2, 4, 8),
         idle_sleep_s: float = 2e-4,
         suffix_bank: bool = True,
+        clock: Callable[[], float] = time.monotonic,
     ):
         self.store = store
+        self.clock = clock  # shared with the DMA model below
         self.scheduler = Scheduler(instances, capacity_bytes, costs)
         self.programs = {p.instance_id: p for p in programs}
         missing = set(self.programs) ^ {i.instance_id for i in instances}
@@ -410,7 +416,7 @@ class MergeAwareEngine:
         self._prefix_compiled: dict = {}
         self._suffix = {p.instance_id: (jax.jit(p.suffix) if p.suffix else None)
                         for p in programs}
-        self.dma = AsyncDMA(dma_gbps, simulate=simulate_dma)
+        self.dma = AsyncDMA(dma_gbps, simulate=simulate_dma, clock=clock)
         self.buckets = tuple(sorted(buckets))
         self.idle_sleep_s = idle_sleep_s
         self.suffix_bank = suffix_bank
@@ -717,7 +723,7 @@ class MergeAwareEngine:
                 self.stats["suffix_dispatches"] += 1
                 jax.block_until_ready(bank_out)
                 slot = {iid: i for i, iid in enumerate(group)}
-                done = time.monotonic() - t0
+                done = self.clock() - t0
                 for j, r in enumerate(mb.requests):
                     self.completions.append(
                         Completion(r, bank_out[slot[r.instance_id], j], done))
@@ -750,7 +756,7 @@ class MergeAwareEngine:
                 self.stats["forward_runs"] += 1
             for o in outs.values():
                 jax.block_until_ready(o)
-            done = time.monotonic() - t0
+            done = self.clock() - t0
             for j, r in enumerate(mb.requests):
                 row = pos[r.instance_id][j]
                 self.completions.append(Completion(r, outs[r.instance_id][row], done))
@@ -809,12 +815,12 @@ class MergeAwareEngine:
         skipped_before = self.skipped
         stall_before, hidden_before = self.dma.stall_s, self.dma.hidden_s
         epoch_start = self.store.epoch
-        t0 = time.monotonic()
+        t0 = self.clock()
         gi = 0
         empty_streak = 0
-        while time.monotonic() - t0 < horizon_s:
+        while self.clock() - t0 < horizon_s:
             groups = self.prefix_groups()  # re-plan if an epoch moved
-            now = time.monotonic() - t0
+            now = self.clock() - t0
             self._drop_expired(now)
             if not any(self.queues.values()):
                 if drain:

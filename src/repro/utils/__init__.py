@@ -1,3 +1,7 @@
+from repro.utils.ids import (
+    stable_hash,
+    stable_seed,
+)
 from repro.utils.tree import (
     flatten_paths,
     unflatten_paths,

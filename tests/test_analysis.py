@@ -1,0 +1,303 @@
+"""The invariant checker checking itself: every A-series rule trips on a
+minimal fixture (and ONLY once), pragmas suppress with strict-mode hygiene,
+the shipped tree is clean with zero suppressions, and the abstract kernel
+contracts both hold for the real OP_TABLE and reject a deliberately skewed
+fake op."""
+import textwrap
+
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import analyze_paths, analyze_source
+from repro.analysis.contracts import (
+    Case, GuardCase, OpContract, _sds, build_contracts, run_contracts,
+)
+from repro.analysis.engine import all_rules
+from repro.kernels.ops import OP_TABLE, OpSpec
+
+
+def findings_for(rule_id, rel, source):
+    fs, _ = analyze_source(rel, textwrap.dedent(source), rules=[rule_id])
+    return fs
+
+
+# ---------------------------------------------------------------------------
+# one fixture per rule: trips exactly once, at the expected line
+# ---------------------------------------------------------------------------
+
+RULE_FIXTURES = {
+    "A101": ("src/repro/serving/bad.py", """\
+        import repro.kernels.flash_attention as fa
+
+        def f(q, k, v):
+            return fa.flash_attention(q, k, v, interpret=False)
+        """),
+    "A102": ("src/repro/kernels/newop.py", """\
+        def newop(x, interpret=True):
+            return x
+        """),
+    "A201": ("src/repro/core/badstore.py", """\
+        class Store:
+            def bump_epoch(self):
+                self.epoch += 1
+
+            def merge(self, key, leaf):
+                self.buffers[key] = leaf
+        """),
+    "A202": ("src/repro/serving/badswap.py", """\
+        def hot_swap(store, plan):
+            store.epoch = store.epoch + 1
+        """),
+    "A301": ("src/repro/serving/badclock.py", """\
+        import time
+
+        def serve(clock=time.monotonic):
+            return time.monotonic()
+        """),
+    "A302": ("src/repro/core/badrng.py", """\
+        import numpy as np
+
+        def jitter():
+            return np.random.rand(3)
+        """),
+    "A401": ("src/repro/core/badlayer.py", """\
+        import repro.models.vision as V
+
+        def attach(store):
+            return V.SmallCNNConfig
+        """),
+    "A501": ("src/repro/kernels/badtrace.py", """\
+        import jax
+
+        @jax.jit
+        def f(x):
+            return float(x) * 2
+        """),
+    "A601": ("src/repro/core/badid.py", """\
+        def plan_key(sig):
+            return hash(sig) % 2**31
+        """),
+}
+
+
+@pytest.mark.parametrize("rule_id", sorted(RULE_FIXTURES))
+def test_rule_fires_exactly_once(rule_id):
+    rel, src = RULE_FIXTURES[rule_id]
+    fs = findings_for(rule_id, rel, src)
+    assert len(fs) == 1, [f.format() for f in fs]
+    assert fs[0].rule == rule_id and not fs[0].suppressed
+    assert fs[0].hint  # every finding carries an actionable fix hint
+
+
+def test_every_registered_rule_has_a_fixture():
+    assert set(RULE_FIXTURES) == set(all_rules())
+
+
+# ---------------------------------------------------------------------------
+# negative space: the sanctioned idioms do NOT trip
+# ---------------------------------------------------------------------------
+
+
+def test_clock_reference_as_default_is_legal():
+    fs = findings_for("A301", "src/repro/serving/ok.py", """\
+        import time
+
+        def serve(clock=time.monotonic):
+            return clock()
+        """)
+    assert fs == []
+
+
+def test_seeded_rng_is_legal():
+    fs = findings_for("A302", "src/repro/core/ok.py", """\
+        import numpy as np
+        import random
+
+        def jitter(seed):
+            g = np.random.default_rng(seed)
+            r = random.Random(seed)
+            return g.random() + r.random()
+        """)
+    assert fs == []
+
+
+def test_hashability_probe_is_legal():
+    fs = findings_for("A601", "src/repro/serving/ok.py", """\
+        def cache_key(key):
+            try:
+                hash(key)
+            except TypeError:
+                key = repr(key)
+            return key
+        """)
+    assert fs == []
+
+
+def test_single_bump_and_private_helpers_are_legal():
+    fs = findings_for("A201", "src/repro/core/ok.py", """\
+        class Store:
+            def bump_epoch(self):
+                self.epoch += 1
+
+            def merge(self, key, leaf):
+                self.buffers[key] = leaf
+                self._gc()
+                self.bump_epoch()
+
+            def _gc(self):
+                self.buffers.pop("stale", None)
+        """)
+    assert fs == []
+
+
+def test_static_argnames_concretization_is_legal():
+    fs = findings_for("A501", "src/repro/kernels/ok.py", """\
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, static_argnames=("scale",))
+        def f(x, scale):
+            return x * float(scale)
+        """)
+    assert fs == []
+
+
+# ---------------------------------------------------------------------------
+# pragmas + strict mode
+# ---------------------------------------------------------------------------
+
+
+def test_pragma_suppresses_finding():
+    fs, pragmas = analyze_source("src/repro/core/p.py", textwrap.dedent("""\
+        def plan_key(sig):
+            return hash(sig)  # repro: allow[A601] in-process cache key only
+        """), rules=["A601"])
+    assert len(fs) == 1 and fs[0].suppressed
+    assert fs[0].reason == "in-process cache key only"
+    assert pragmas[0].used
+
+
+def test_standalone_pragma_covers_next_statement():
+    fs, _ = analyze_source("src/repro/core/p.py", textwrap.dedent("""\
+        def plan_key(sig):
+            # repro: allow[A601] in-process cache key only
+            return hash(sig)
+        """), rules=["A601"])
+    assert len(fs) == 1 and fs[0].suppressed
+
+
+def _write_tree(tmp_path, rel, source):
+    p = tmp_path / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(textwrap.dedent(source))
+
+
+def test_strict_gates_on_pragma_hygiene(tmp_path):
+    _write_tree(tmp_path, "src/repro/core/h.py", """\
+        def f(sig):
+            x = hash(sig)  # repro: allow[A601]
+            # repro: allow[A999] unknown rule
+            y = 1
+            return x + y  # repro: allow[A601] fires nowhere here
+        """)
+    report = analyze_paths(root=tmp_path, paths=["src/repro"])
+    # the A601 finding itself is suppressed -> non-strict passes
+    assert report.ok(strict=False)
+    assert not report.findings and len(report.suppressed) == 1
+    # strict: no-reason (A001), unknown id (A002), unused pragma (A003)
+    assert not report.ok(strict=True)
+    assert sorted(f.rule for f in report.pragma_findings) == \
+        ["A001", "A002", "A003", "A003"]  # A999 pragma is also unused
+
+
+def test_shipped_tree_is_clean_with_zero_suppressions():
+    """The acceptance bar: `python -m repro.analysis --strict` exits 0 on
+    the repo, with an EMPTY suppression baseline."""
+    report = analyze_paths()
+    assert report.ok(strict=True), \
+        [f.format() for f in report.gating(strict=True)]
+    assert report.suppressed == []
+    assert report.files_scanned > 50
+
+
+# ---------------------------------------------------------------------------
+# kernel contracts
+# ---------------------------------------------------------------------------
+
+
+def test_contracts_hold_for_real_op_table():
+    res = run_contracts(modes=("ref", "interpret"))
+    assert res["ok"], res["failures"]
+    assert set(res["ops"]) == set(OP_TABLE)
+    assert res["checks"] > 0
+
+
+def test_contract_cases_cover_every_op():
+    assert set(build_contracts()) == set(OP_TABLE)
+
+
+def _fake_table(kernel, ref):
+    def dispatch(x, mode=None, **kw):
+        if mode == "ref":
+            return ref(x)
+        return kernel(x, interpret=(mode == "interpret"), **kw)
+
+    return {"fake_op": OpSpec("fake_op", kernel, ref, dispatch, ("x",))}
+
+
+def test_contracts_reject_shape_skewed_op():
+    def kernel(x, *, interpret):
+        return jnp.zeros((x.shape[0], 4), x.dtype)
+
+    def ref(x):  # oracle disagrees with the kernel: one column wider
+        return jnp.zeros((x.shape[0], 5), x.dtype)
+
+    cases = {"fake_op": OpContract(cases=(
+        Case("skew", lambda dt: dict(x=_sds((2, 3), dt)),
+             lambda dt: _sds((2, 5), dt)),
+    ))}
+    res = run_contracts(table=_fake_table(kernel, ref), cases=cases,
+                        modes=("interpret",))
+    assert not res["ok"]
+    assert any("fake_op:skew" in f and "(2, 4)" in f for f in res["failures"])
+
+
+def test_contracts_reject_signature_skewed_op():
+    def kernel(x, interpret=True):  # positional + defaulted: both illegal
+        return x
+
+    def ref(x):
+        return x
+
+    cases = {"fake_op": OpContract(cases=())}
+    res = run_contracts(table=_fake_table(kernel, ref), cases=cases,
+                        modes=("interpret",))
+    assert any("keyword-only" in f for f in res["failures"])
+
+
+def test_contracts_reject_missing_guard():
+    def kernel(x, *, interpret):  # accepts anything: guard never fires
+        return x
+
+    def ref(x):
+        return x
+
+    cases = {"fake_op": OpContract(
+        cases=(),
+        guards=(GuardCase("must_reject", lambda dt: dict(x=_sds((2, 3), dt))),),
+    )}
+    res = run_contracts(table=_fake_table(kernel, ref), cases=cases,
+                        modes=("interpret",))
+    assert any("must_reject" in f and "expected" in f for f in res["failures"])
+
+
+def test_contracts_flag_op_without_cases():
+    def kernel(x, *, interpret):
+        return x
+
+    def ref(x):
+        return x
+
+    res = run_contracts(table=_fake_table(kernel, ref), cases={},
+                        modes=("interpret",))
+    assert any("without contract cases" in f for f in res["failures"])

@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import ref as R
+from repro.kernels import ops, ref as R
 from repro.kernels.bank_matmul import bank_matmul
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.flash_attention import flash_attention
@@ -319,19 +319,30 @@ def _ops_case(op, rng):
     raise ValueError(op)
 
 
-OPS = ["flash_attention", "decode_attention", "mamba_scan", "rg_lru_scan",
-       "page_gather", "bank_matmul"]
+# the mode matrix is driven by the machine-readable dispatch table, so an op
+# added to kernels/ops.py without an OP_TABLE entry (or an _ops_case) fails
+# here, and the contract checker (repro.analysis.contracts) proves the same
+# table abstractly in CI before this numeric sweep runs
+OPS = sorted(ops.OP_TABLE)
+
+
+def test_op_table_is_the_public_surface():
+    """Every OP_TABLE row points at this module's public dispatcher and a
+    real ref oracle; the roles are distinct callables."""
+    for name, spec in ops.OP_TABLE.items():
+        assert spec.name == name
+        assert getattr(ops, name) is spec.dispatch
+        assert spec.ref is getattr(R, spec.ref.__name__)
+        assert spec.kernel is not spec.ref is not spec.dispatch
 
 
 @pytest.mark.parametrize("op", OPS)
 def test_ops_mode_matrix_matches_oracle(op, rng):
-    from repro.kernels import ops
-
     mode = ops.default_mode()
     if mode == "kernel":
         pytest.skip("TPU kernel mode not exercisable on this host")
     args, kw, ref_fn = _ops_case(op, rng)
-    out = getattr(ops, op)(*args, **kw)
+    out = ops.OP_TABLE[op].dispatch(*args, **kw)
     ref = ref_fn()
     for o, r in zip(jax.tree_util.tree_leaves(out),
                     jax.tree_util.tree_leaves(ref)):
