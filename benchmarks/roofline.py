@@ -129,7 +129,75 @@ def analyse(cell: dict) -> dict:
     }
 
 
+def run_bank_collectives(quiet: bool = False) -> dict:
+    """DESIGN.md S3: why the serve tier shards the suffix-bank GEMM's BANK
+    axis — in collective bytes, not assertion.  The same bank GEMM
+    ``(N, K, M) x (B, K) -> (N, B, M)`` is lowered under three
+    partitionings of the forced 2x4 mesh and the compiled HLO's collectives
+    are summed via ``distributed.collectives.parse_collectives``:
+
+    * ``bank_axis``       — the serve tier's ``shard_bank_fn`` (leading
+      batch-like axis over ``model``): shard-local, ZERO collective bytes,
+      which is also why it stays bitwise-identical to one device;
+    * ``tp_contraction``  — tensor-parallel K sharding: partial sums force
+      an all-reduce of every activation output;
+    * ``fsdp_style``      — weights sharded at rest on the output feature
+      dim, activations replicated: the output (or the weights) must be
+      all-gathered each dispatch.
+
+    Emitted as ``roofline_collectives`` with modeled ICI seconds per lane;
+    degrades to a skip row below 8 devices (the forced-CPU CI lane binds)."""
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.collectives import parse_collectives
+    from repro.distributed.sharding import shard_bank_fn
+
+    if jax.device_count() < 8:
+        return emit("roofline_collectives", [
+            {"lane": "skipped", "reason": f"{jax.device_count()} devices < 8"}],
+            {"sharded": False, "devices": jax.device_count()}, quiet=quiet)
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    N, B, K, M = 8, 16, 128, 256
+    kw, kx = jax.random.split(jax.random.PRNGKey(0))
+    w = jax.random.normal(kw, (N, K, M), jnp.float32)
+    x = jax.random.normal(kx, (B, K), jnp.float32)
+
+    def bank_gemm(bank_w, feats):
+        return jnp.einsum("bk,nkm->nbm", feats, bank_w)
+
+    sh = lambda *spec: NamedSharding(mesh, P(*spec))  # noqa: E731
+    lanes = {
+        "bank_axis": jax.jit(shard_bank_fn(bank_gemm, mesh, "model")),
+        "tp_contraction": jax.jit(
+            bank_gemm, in_shardings=(sh(None, "model", None), sh(None, "model")),
+            out_shardings=sh()),
+        "fsdp_style": jax.jit(
+            bank_gemm, in_shardings=(sh(None, None, "model"), sh()),
+            out_shardings=sh()),
+    }
+    rows, wire = [], {}
+    for lane, fn in lanes.items():
+        stats = parse_collectives(fn.lower(w, x).compile().as_text())
+        wire[lane] = stats.wire_bytes
+        rows.append({
+            "lane": lane, "wire_bytes": stats.wire_bytes,
+            "collective_s": stats.wire_bytes / LINK_BW,
+            "by_kind": {k: v for k, v in sorted(stats.by_kind_bytes.items())},
+        })
+    derived = {
+        "sharded": True, "devices": jax.device_count(), "mesh": "2x4",
+        "bank_axis_collective_free": wire["bank_axis"] == 0,
+        "weight_sharding_pays_collectives": (
+            wire["tp_contraction"] > 0 and wire["fsdp_style"] > 0),
+    }
+    return emit("roofline_collectives", rows, derived, quiet=quiet)
+
+
 def run(tag: str = ""):
+    run_bank_collectives()
     cells = [c for c in load_cells(tag) if c.get("ok") and c.get("kind") != "skip"]
     rows = [analyse(c) for c in cells]
     rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))

@@ -20,7 +20,7 @@ def main(argv=None):
         fig4_commonality, fig5_potential, fig9_powerlaw, fig10_e2e,
         fig11_savings, fig12_baselines, fig13_incremental, fig14_bandwidth,
         lm_merging, overload, plan_search, roofline, serve_throughput,
-        table1_memory, table2_times, table3_sweeps,
+        shard_serve, table1_memory, table2_times, table3_sweeps,
     )
 
     modules = [
@@ -44,6 +44,7 @@ def main(argv=None):
         ("overload", overload),
         ("ablation_ordering", ablation_ordering),
         ("roofline", roofline),
+        ("shard_serve", shard_serve),
     ]
     if not args.fast:
         from benchmarks import fig7_sharing_accuracy

@@ -20,12 +20,15 @@ ALLOWED_IMPORTS = {
     "distributed": {"utils"},
     "train": {"distributed", "utils"},
     "data": {"train", "utils"},
-    "core": {"train", "utils"},
+    # core/serving may import distributed (the S3 mesh-sharded serve tier:
+    # MeshPlacement injection, shard_map'd bank dispatch) but NEVER launch —
+    # mesh/rule construction stays with the launcher/benchmark callers
+    "core": {"distributed", "train", "utils"},
     "models": {"core", "kernels", "distributed", "utils"},
     "configs": {"core", "models", "utils"},
     "ckpt": {"core", "distributed", "train", "utils"},
     "runtime": {"ckpt", "distributed", "utils"},
-    "serving": {"core", "configs", "runtime", "utils"},
+    "serving": {"core", "configs", "distributed", "runtime", "utils"},
     "launch": {"ckpt", "configs", "core", "data", "distributed", "kernels",
                "models", "runtime", "serving", "train", "utils"},
     "analysis": {"kernels", "utils"},

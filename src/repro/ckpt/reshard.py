@@ -38,3 +38,19 @@ def reshard_params(params: Any, rules: LogicalRules):
     return jax.tree_util.tree_map(
         lambda x, s: jax.device_put(np.asarray(x), s), params, sh
     )
+
+
+def reshard_store(store: Any, rules: Optional[LogicalRules],
+                  bank_axis: str = "model"):
+    """Re-place a ParamStore onto the mesh in ``rules`` — the plan-receiving
+    path when the edge box runs a *different* mesh than the sender
+    (``distributed.elastic.plan_for_devices`` picks the local shape): builds
+    a fresh ``MeshPlacement`` and installs it, re-``device_put``-ing every
+    buffer under the new rules.  ``rules=None`` clears the placement (back
+    to single-device semantics).  Returns the installed placement."""
+    from repro.distributed.partitioning import MeshPlacement
+
+    placement = (MeshPlacement(rules, bank_axis=bank_axis)
+                 if rules is not None else None)
+    store.set_placement(placement)
+    return placement

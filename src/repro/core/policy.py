@@ -185,22 +185,30 @@ class MergePlan:
         return cls(1, tuple(pgs), provenance or {})
 
 
-def encode_weights(store: ParamStore, keys: list) -> dict:
-    """Serialize shared-buffer values for a plan payload."""
+def encode_weights(store: ParamStore, keys: list,
+                   base: Optional[dict] = None,
+                   quantize: bool = False) -> dict:
+    """Serialize shared-buffer values for a plan payload.  ``base`` maps a
+    key to the value the receiving edge box currently holds under it (the
+    previously deployed plan): unchanged buffers ship as zero-payload
+    ``same`` entries and, with ``quantize``, changed float buffers ship as
+    int8 residuals — the delta-compressed wire format (DESIGN.md S3).
+    Without ``base`` every entry is a ``full`` bitwise payload."""
+    from repro.core.signatures import encode_weight_entry
+
     out = {}
     for k in keys:
         arr = np.asarray(store.buffers[k])
-        out[k] = {
-            "dtype": str(arr.dtype),
-            "shape": list(arr.shape),
-            "data": base64.b64encode(arr.tobytes()).decode("ascii"),
-        }
+        out[k] = encode_weight_entry(
+            arr, base=None if base is None else base.get(k),
+            quantize=quantize)
     return out
 
 
-def decode_weight(entry: dict):
-    buf = base64.b64decode(entry["data"])
-    return np.frombuffer(buf, dtype=entry["dtype"]).reshape(entry["shape"])
+def decode_weight(entry: dict, base=None):
+    from repro.core.signatures import decode_weight_entry
+
+    return decode_weight_entry(entry, base=base)
 
 
 # ---------------------------------------------------------------------------

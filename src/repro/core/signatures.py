@@ -118,3 +118,87 @@ def signature_match_fraction(a: list[LayerRecord], b: list[LayerRecord]) -> floa
     cb = Counter(r.signature for r in b)
     matched = sum((ca & cb).values())
     return matched / max(len(a), len(b), 1)
+
+
+# ---------------------------------------------------------------------------
+# MergePlan weight-payload wire codec (DESIGN.md S3): delta vs the previously
+# deployed plan + optional int8 residual quantization, for shipping plans
+# over the constrained cloud->edge link (the paper's fig14 bandwidth axis).
+# ---------------------------------------------------------------------------
+
+
+def encode_weight_entry(arr, base=None, quantize: bool = False) -> dict:
+    """One shared-buffer wire entry.  ``base`` is the value the receiving
+    edge box currently holds under the same key (the previously deployed
+    plan); kinds:
+
+    * ``full``  — raw bytes (bitwise; no base, shape/dtype drift, or an
+      unquantized change);
+    * ``same``  — bitwise-unchanged vs base: zero payload, the edge reuses
+      its resident buffer (post-apply serving stays bitwise-identical);
+    * ``delta_q8`` — int8 residual ``round((arr - base)/scale)`` with a
+      per-leaf amax scale (``distributed.compression`` discipline): 4x fewer
+      payload bytes for float32, lossy within the drift-monitor threshold.
+
+    Entries without a ``kind`` field decode as ``full`` (pre-S3 plans)."""
+    import base64
+
+    arr = np.asarray(arr)
+    meta = {"dtype": str(arr.dtype), "shape": list(arr.shape)}
+    if base is not None:
+        b = np.asarray(base)
+        if b.shape == arr.shape and b.dtype == arr.dtype:
+            if np.array_equal(b, arr):
+                return {**meta, "kind": "same"}
+            if quantize and arr.dtype.kind == "f":
+                from repro.distributed.compression import quantize_int8
+
+                q, scale = quantize_int8(arr.astype(np.float32)
+                                         - b.astype(np.float32))
+                return {**meta, "kind": "delta_q8", "scale": scale,
+                        "data": base64.b64encode(q.tobytes()).decode("ascii")}
+    return {**meta, "kind": "full",
+            "data": base64.b64encode(arr.tobytes()).decode("ascii")}
+
+
+def decode_weight_entry(entry: dict, base=None) -> np.ndarray:
+    """Reconstruct a wire entry on the edge.  Delta kinds require ``base``
+    (the buffer currently deployed under the entry's key)."""
+    import base64
+
+    kind = entry.get("kind", "full")
+    shape, dtype = entry["shape"], entry["dtype"]
+    if kind == "full":
+        buf = base64.b64decode(entry["data"])
+        return np.frombuffer(buf, dtype=dtype).reshape(shape)
+    if base is None:
+        raise ValueError(f"wire entry kind={kind!r} needs the previously "
+                         "deployed buffer as base")
+    b = np.asarray(base)
+    if tuple(b.shape) != tuple(shape) or str(b.dtype) != dtype:
+        raise ValueError(f"delta base mismatch: base {b.shape}/{b.dtype} vs "
+                         f"entry {tuple(shape)}/{dtype}")
+    if kind == "same":
+        return b
+    if kind == "delta_q8":
+        from repro.distributed.compression import dequantize_int8
+
+        q = np.frombuffer(base64.b64decode(entry["data"]),
+                          dtype=np.int8).reshape(shape)
+        return (b.astype(np.float32)
+                + dequantize_int8(q, entry["scale"])).astype(dtype)
+    raise ValueError(f"unknown wire entry kind {kind!r}")
+
+
+def entry_wire_bytes(entry: dict) -> int:
+    """Decoded payload bytes an entry puts on the wire (data + scale);
+    structural JSON overhead is measured by the benchmark on the serialized
+    plan itself."""
+    import base64
+
+    n = len(base64.b64decode(entry["data"])) if "data" in entry else 0
+    return n + (4 if "scale" in entry else 0)
+
+
+def weights_wire_bytes(weights: Optional[dict]) -> int:
+    return sum(entry_wire_bytes(e) for e in (weights or {}).values())

@@ -14,6 +14,21 @@ buffers — joint retraining needs no parameter-server machinery.
 The store also gives exact memory accounting: resident bytes = unique
 buffers, which is precisely what merging saves on the edge box.
 
+**Mesh-sharded serve tier (DESIGN.md S3).**  A store can carry an injected
+``placement`` (``distributed.partitioning.MeshPlacement`` — core never
+imports ``launch``; the launcher/benchmark builds the logical rules and
+hands them in).  With a placement installed the keys become (shard, buffer)
+aware: every key has a deterministic *home shard* ``shard_of(key) =
+stable_seed(key) % n_shards`` (bookkeeping identity — per-shard epochs and
+DMA/residency attribution), mutators ``device_put`` committed buffers under
+their binding path's partitioning rules, and :meth:`materialize_bank` places
+the stacked suffix bank with its leading bank axis sharded over the mesh's
+``model`` axis — a batch-like axis, so the sharded bank GEMM stays bitwise
+identical to the unsharded dispatch.  Residency semantics: shared trunk
+buffers replicate across shards (every device computes the trunk); private
+buffers live on their home shard — :meth:`resident_shards` is the scheduler's
+per-device admission view.
+
 Serving additionally relies on **cached materialisation**: bindings change
 only at merge/unmerge time (and buffer *values* only at training-commit
 time), so the serve loop can reuse one pytree object per model per *binding
@@ -22,16 +37,24 @@ epoch* instead of rebuilding the dict/unflatten on every request.  The
 previously returned pytree; :meth:`materialize_cached` is the hot-path
 entry point and :attr:`materializations` counts actual rebuilds (one per
 model per epoch when the cache works).
+
+**Per-shard epochs**: alongside the global counter, every shard keeps its
+own epoch in :attr:`shard_epochs`.  ``bump_epoch(keys=...)`` names the
+touched store keys; exactly the home shards of those keys advance once —
+the invalidation granularity for per-shard derived state (a shard's bank
+slice, its DMA residency).  ``keys=None`` (global invalidation — placement
+change, legacy callers) advances every shard.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Any, Iterable, Optional
 
 import jax
 import numpy as np
 
 from repro.core.groups import LayerGroup, disambiguate_base, stable_group_id
+from repro.utils.ids import stable_seed
 from repro.utils.tree import flatten_paths, leaf_bytes, unflatten_paths
 
 
@@ -46,25 +69,99 @@ class ParamStore:
     epoch: int = 0  # bumped on every rebinding / buffer-commit
     materializations: dict = dataclasses.field(default_factory=dict)
     _cache: dict = dataclasses.field(default_factory=dict, repr=False)
+    # mesh placement (distributed.partitioning.MeshPlacement), injected by
+    # the launcher/benchmark — None on a single device (every existing path
+    # unchanged).  Duck-typed so core carries no hard jax.sharding surface.
+    placement: Optional[Any] = None
+    shard_epochs: dict = dataclasses.field(default_factory=dict)
+
+    # -- shard identity -------------------------------------------------------
+
+    @property
+    def n_shards(self) -> int:
+        return self.placement.n_shards if self.placement is not None else 1
+
+    def shard_of(self, key: str) -> int:
+        """Deterministic home shard of a store key (bookkeeping identity:
+        per-shard epochs, residency/DMA attribution) — stable across
+        processes and independent of physical placement."""
+        return stable_seed(key) % self.n_shards
+
+    def resident_shards(self, key: str) -> tuple:
+        """Shards on which a resident copy of ``key`` lives: shared buffers
+        replicate across the mesh (every device runs the trunk), private
+        buffers live on their home shard.  The scheduler's per-device
+        admission view; recomputed per binding epoch."""
+        if self.n_shards == 1:
+            return (0,)
+        shared = self._cache.get("__shared_keys__")
+        if shared is None:
+            shared = self._cache["__shared_keys__"] = frozenset(self.shared_keys())
+        if key in shared:
+            return tuple(range(self.n_shards))
+        return (self.shard_of(key),)
 
     # -- cache bookkeeping ----------------------------------------------------
 
-    def bump_epoch(self) -> int:
-        """Invalidate all cached pytrees (bindings or buffer values changed)."""
+    def bump_epoch(self, keys: Optional[Iterable] = None) -> int:
+        """Invalidate all cached pytrees (bindings or buffer values changed).
+        ``keys`` names the store keys the mutation touched: their home shards'
+        epochs advance exactly once; ``None`` advances every shard (global
+        invalidation)."""
         self.epoch += 1
+        shards = (range(self.n_shards) if keys is None
+                  else {self.shard_of(k) for k in keys})
+        for s in shards:
+            self.shard_epochs[s] = self.shard_epochs.get(s, 0) + 1
         self._cache.clear()
         return self.epoch
 
     def update_buffers(self, new: dict) -> None:
         """Commit new buffer values (e.g. after joint retraining) and
-        invalidate cached pytrees that reference the old arrays."""
+        invalidate cached pytrees that reference the old arrays.  Only the
+        touched keys' home shards advance their epoch."""
+        if self.placement is not None and new:
+            paths = self._paths_for(set(new))
+            new = {k: self._place(v, paths.get(k)) for k, v in new.items()}
         self.buffers.update(new)
+        self.bump_epoch(keys=new.keys())
+
+    # -- placement ------------------------------------------------------------
+
+    def _place(self, value, path: Optional[str]):
+        """``device_put`` a committed buffer under its binding path's
+        partitioning rules (no-op without a placement)."""
+        if self.placement is None:
+            return value
+        return self.placement.place(value, path)
+
+    def _paths_for(self, keys: set) -> dict:
+        """A representative binding path per key (partitioning rules key on
+        the path tail; every binding of a shared key is congruent)."""
+        out: dict = {}
+        for binding in self.bindings.values():
+            for p, k in binding.items():
+                if k in keys and k not in out:
+                    out[k] = p
+        return out
+
+    def set_placement(self, placement: Optional[Any]) -> None:
+        """Install (or clear) the mesh placement and re-place every buffer —
+        the elastic mesh-change path (``ckpt.reshard.reshard_store``): a plan
+        received by a box running a different mesh re-places its buffers
+        here.  Global invalidation: every shard's epoch advances once."""
+        self.placement = placement
+        if placement is not None:
+            paths = self._paths_for(set(self.buffers))
+            for k in list(self.buffers):
+                self.buffers[k] = self._place(self.buffers[k], paths.get(k))
         self.bump_epoch()
 
     # -- construction ---------------------------------------------------------
 
     @classmethod
-    def from_models(cls, models: dict) -> "ParamStore":
+    def from_models(cls, models: dict,
+                    placement: Optional[Any] = None) -> "ParamStore":
         """models: {model_id: params_pytree}."""
         buffers: dict = {}
         bindings: dict = {}
@@ -73,9 +170,10 @@ class ParamStore:
             bindings[mid] = {}
             for path, leaf in flat.items():
                 key = _private_key(mid, path)
-                buffers[key] = leaf
+                buffers[key] = (placement.place(leaf, path)
+                                if placement is not None else leaf)
                 bindings[mid][path] = key
-        return cls(buffers, bindings)
+        return cls(buffers, bindings, placement=placement)
 
     # -- merging --------------------------------------------------------------
 
@@ -92,33 +190,39 @@ class ParamStore:
             lambda p: any(k.startswith(p) for k in self.buffers),
         )
         keys = []
+        touched: set = set()
         for ci, col in enumerate(group.columns()):
             if len(col) < 2:
                 continue  # single appearance: nothing to share
             gid = f"{base}:c{ci}"
             d = donor if donor and ci == 0 else (col[0].model_id, col[0].path)
             donor_key = self.bindings[d[0]][d[1]]
-            self.buffers[gid] = self.buffers[donor_key]
+            self.buffers[gid] = self._place(self.buffers[donor_key],
+                                            col[0].path)
+            touched.add(gid)
             for r in col:
                 old = self.bindings[r.model_id][r.path]
                 self.bindings[r.model_id][r.path] = gid
                 if old != gid:
+                    touched.add(old)
                     self._gc_key(old)
             keys.append(gid)
         if keys:
-            self.bump_epoch()
+            self.bump_epoch(keys=touched)
         return keys
 
     def unmerge(self, group: LayerGroup) -> None:
         """Give every member back a private copy of its current weights
         (used when reverting a failed/drifted configuration)."""
+        touched: set = set()
         for r in group.records:
             cur = self.bindings[r.model_id][r.path]
             priv = _private_key(r.model_id, r.path)
-            self.buffers[priv] = self.buffers[cur]
+            self.buffers[priv] = self._place(self.buffers[cur], r.path)
             self.bindings[r.model_id][r.path] = priv
+            touched.update((cur, priv))
         self._gc_unreferenced()  # shared buffers may now be orphaned
-        self.bump_epoch()
+        self.bump_epoch(keys=touched)
 
     def _gc_key(self, key: str) -> None:
         for binding in self.bindings.values():
@@ -135,7 +239,9 @@ class ParamStore:
     # -- plan round-trip (cloud -> edge) ---------------------------------------
 
     def export_plan(self, groups: list, provenance: Optional[dict] = None,
-                    include_weights: bool = False):
+                    include_weights: bool = False,
+                    delta_base: Optional[dict] = None,
+                    quantize: bool = False):
         """Build a serializable ``MergePlan`` from committed groups and the
         store's *current* bindings: for each column actually bound to one
         shared (non-private) key, record the key, the donor appearance
@@ -143,7 +249,13 @@ class ParamStore:
         records.  Columns that no longer share (e.g. drift-reverted) are
         dropped — the plan reflects store reality, not planner intent.
         ``include_weights`` additionally carries the shared-buffer values so
-        a retrained configuration reproduces bitwise on a fresh store."""
+        a retrained configuration reproduces bitwise on a fresh store.
+
+        ``delta_base`` (key -> previously shipped value) delta-encodes the
+        payload against the plan already deployed on the receiving edge box:
+        bitwise-unchanged buffers ship as zero-payload ``same`` entries and,
+        with ``quantize``, changed buffers as int8 residuals — the
+        constrained-link wire format (DESIGN.md S3)."""
         from repro.core.policy import (
             ColumnBinding, MergePlan, PlanGroup, encode_weights,
         )
@@ -165,7 +277,9 @@ class ParamStore:
                 shared.append(key)
             if cols:
                 pgs.append(PlanGroup(g.signature, tuple(cols)))
-        weights = encode_weights(self, shared) if include_weights else None
+        weights = (encode_weights(self, shared, base=delta_base,
+                                  quantize=quantize)
+                   if include_weights else None)
         return MergePlan(1, tuple(pgs), provenance or {}, weights)
 
     def _plan_key_remap(self, plan) -> dict:
@@ -208,32 +322,47 @@ class ParamStore:
         cached pytrees are invalidated in a single step.  Reproduces the
         bindings ``merge_group`` would have built group-by-group; plan keys
         colliding with a foreign group's shared buffers are remapped, never
-        silently aliased."""
+        silently aliased.
+
+        Delta-encoded weight entries (``same``/``delta_q8`` — export_plan's
+        ``delta_base`` path) reconstruct against the buffer this store
+        currently holds under the same (post-remap) key: the edge's deployed
+        copy of the previously shipped plan."""
         from repro.core.policy import decode_weight
 
         carried = plan.shared_weights or {}
         remap = self._plan_key_remap(plan)
-        staged: list = []  # (key, value, [(model_id, path), ...])
+        staged: list = []  # (key, value, paths, [(model_id, path), ...])
         for pg in plan.groups:
             for col in pg.columns:
+                final = remap.get(col.key, col.key)
                 if col.key in carried:
-                    val = jax.numpy.asarray(decode_weight(carried[col.key]))
+                    entry = carried[col.key]
+                    base = (self.buffers.get(final)
+                            if isinstance(entry, dict)
+                            and entry.get("kind", "full") != "full" else None)
+                    val = jax.numpy.asarray(decode_weight(entry, base=base))
                 else:
                     dm, dp = col.donor
                     val = self.buffers[self.bindings[dm][dp]]
                 staged.append(
-                    (remap.get(col.key, col.key), val,
+                    (final, val, col.members[0].path,
                      [(r.model_id, r.path) for r in col.members])
                 )
         keys = []
-        for key, val, members in staged:
-            self.buffers[key] = val
-            for mid, path in members:
-                self.bindings[mid][path] = key
+        touched: set = set()
+        for key, val, path, members in staged:
+            self.buffers[key] = self._place(val, path)
+            touched.add(key)
+            for mid, mpath in members:
+                old = self.bindings[mid][mpath]
+                if old != key:
+                    touched.add(old)
+                self.bindings[mid][mpath] = key
             keys.append(key)
         self._gc_unreferenced()
         if keys:
-            self.bump_epoch()
+            self.bump_epoch(keys=touched)
         return keys
 
     # -- materialisation ------------------------------------------------------
@@ -287,6 +416,10 @@ class ParamStore:
                 [self.buffers[self.bindings[m][p]] for m in model_ids])
             for p in use
         }
+        if self.placement is not None:
+            # Bank axis (leading, batch-like) sharded over the mesh's model
+            # axis — the sharded bank GEMM's input placement (DESIGN.md S3).
+            flat = {p: self.placement.place_bank(a) for p, a in flat.items()}
         tree = unflatten_paths(flat)
         self._cache[ckey] = tree
         bid = self.bank_id(model_ids)
@@ -300,6 +433,20 @@ class ParamStore:
         ids = model_ids if model_ids is not None else list(self.bindings.keys())
         keys = {self.bindings[m][p] for m in ids for p in self.bindings[m]}
         return sum(leaf_bytes(self.buffers[k]) for k in keys)
+
+    def resident_bytes_by_shard(self, model_ids: Optional[list] = None) -> dict:
+        """Per-shard resident bytes for a set of models: shared buffers count
+        on every shard (replicated trunk), private buffers on their home
+        shard — the per-device admission view the sharded scheduler budgets
+        against."""
+        ids = model_ids if model_ids is not None else list(self.bindings.keys())
+        keys = {self.bindings[m][p] for m in ids for p in self.bindings[m]}
+        out = {s: 0 for s in range(self.n_shards)}
+        for k in keys:
+            nbytes = leaf_bytes(self.buffers[k])
+            for s in self.resident_shards(k):
+                out[s] += nbytes
+        return out
 
     def model_bytes(self, model_id: str) -> int:
         return sum(

@@ -16,6 +16,7 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def _quantize_leaf(g: jax.Array):
@@ -27,6 +28,21 @@ def _quantize_leaf(g: jax.Array):
 
 def _dequantize_leaf(q: jax.Array, scale: jax.Array):
     return q.astype(jnp.float32) * scale
+
+
+def quantize_int8(x) -> tuple:
+    """Host-side (numpy) twin of :func:`_quantize_leaf`, used by the
+    MergePlan wire codec (core/signatures.py): per-leaf amax scale, int8
+    payload.  Returns ``(q int8 ndarray, scale float)``."""
+    x = np.asarray(x, np.float32)
+    amax = float(np.max(np.abs(x))) + 1e-12 if x.size else 1e-12
+    scale = amax / 127.0
+    q = np.clip(np.round(x / scale), -127, 127).astype(np.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale: float, dtype="float32"):
+    return (np.asarray(q, np.float32) * scale).astype(dtype)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -148,3 +148,68 @@ def param_shardings(params, rules: LogicalRules):
         specs,
         is_leaf=lambda x: isinstance(x, P),
     )
+
+
+class MeshPlacement:
+    """Placement policy for ParamStore buffers on a device mesh (DESIGN.md S3).
+
+    The serve-path counterpart of :func:`param_shardings`: individual store
+    buffers are placed by their binding *path* through the same suffix rules
+    (shared trunks mostly replicate; large matrices FSDP-shard where they
+    divide), while suffix-bank materialisations shard their leading *bank*
+    axis over ``bank_axis`` — a batch-like axis, so no contraction is ever
+    split and the sharded bank GEMM stays bitwise-identical to the unsharded
+    replay.  ``n_shards`` (the ``bank_axis`` mesh extent) is also the store's
+    shard count for per-shard epochs and residency accounting.
+
+    Injected into :class:`repro.core.store.ParamStore` by the launcher /
+    benchmark (core never imports ``launch``; the rules arrive pre-built).
+    """
+
+    def __init__(self, rules: LogicalRules, bank_axis: str = "model"):
+        if bank_axis not in rules.mesh.shape:
+            raise ValueError(f"mesh has no axis {bank_axis!r}: "
+                             f"{tuple(rules.mesh.axis_names)}")
+        self.rules = rules
+        self.bank_axis = bank_axis
+
+    @property
+    def mesh(self) -> Mesh:
+        return self.rules.mesh
+
+    @property
+    def n_shards(self) -> int:
+        return int(self.rules.mesh.shape[self.bank_axis])
+
+    def leaf_sharding(self, path: Optional[str], shape) -> NamedSharding:
+        """Sharding for one buffer addressed by its binding path (the same
+        suffix rules as :func:`param_specs`, divisibility-guarded).  A buffer
+        with no known path replicates under the default rule."""
+        shape = tuple(shape)
+        logical = leaf_logical_axes(path or "", shape)
+        spec = self.rules.resolve(logical)
+        fixed = []
+        for dim, axes in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+            fixed.append(axes if _divisible(self.rules.mesh, axes, dim) else None)
+        return NamedSharding(self.rules.mesh, P(*fixed))
+
+    def place(self, arr, path: Optional[str] = None):
+        """``device_put`` one buffer under its path-derived sharding."""
+        import jax
+
+        return jax.device_put(
+            arr, self.leaf_sharding(path, getattr(arr, "shape", ())))
+
+    def bank_sharding(self, n_bank: int) -> NamedSharding:
+        """Leading-axis sharding for a stacked suffix bank: the bank axis is
+        batch-like (one slice per member), so sharding it over ``bank_axis``
+        keeps every contraction device-local.  Non-dividing banks replicate —
+        the divisibility guard, same rule as :func:`param_specs`."""
+        if n_bank % self.n_shards == 0 and self.n_shards > 1:
+            return NamedSharding(self.rules.mesh, P(self.bank_axis))
+        return NamedSharding(self.rules.mesh, P())
+
+    def place_bank(self, arr):
+        import jax
+
+        return jax.device_put(arr, self.bank_sharding(int(arr.shape[0])))

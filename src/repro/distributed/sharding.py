@@ -106,3 +106,24 @@ def logical_to_spec(rules: Optional[LogicalRules], logical_axes: Sequence[Axis])
     if rules is None:
         return P()
     return rules.resolve(logical_axes)
+
+
+def shard_bank_fn(fn, mesh: Mesh, axis: str):
+    """Wrap a bank fan-out callable ``(bank_params, feats) -> (N, ...)`` to
+    run shard-locally over the leading bank axis via ``shard_map``: every
+    bank leaf splits its member axis over ``axis``, features replicate, and
+    the callable traces against the LOCAL member count (N / extent) — so a
+    Pallas grouped GEMM's grid and BlockSpecs, and the ref oracle's unrolled
+    member loop, both become shard-local without touching the kernel.  The
+    bank axis is batch-like (no contraction is split), so the sharded output
+    is bitwise identical to the unsharded dispatch (DESIGN.md S3).
+
+    Caller guarantees N divides the axis extent (the divisibility guard in
+    ``MeshPlacement.bank_sharding``)."""
+    from jax.experimental.shard_map import shard_map
+
+    # in_specs are pytree prefixes: P(axis) shards every bank leaf's leading
+    # dim; P() replicates the whole feats tree.  check_rep=False: the kernel
+    # body (pallas_call in interpret mode) has no replication rule.
+    return shard_map(fn, mesh=mesh, in_specs=(P(axis), P()),
+                     out_specs=P(axis), check_rep=False)

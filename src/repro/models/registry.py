@@ -154,6 +154,10 @@ class DecodeSplit:
     head_paths: Optional[frozenset] = None
     head_signature: Optional[tuple] = None
     bank_head: Optional[Callable] = None  # (bank_params, hidden) -> (N, ...)
+    # chunked prompt admission (optional): (params, pool, tables, lengths,
+    # tokens (B, C)) -> (hidden (B, C, d), pool) — C sequential trunk steps
+    # in ONE dispatch, bitwise identical to C single-token trunk_step calls
+    prefill_chunk: Optional[Callable] = None
 
 
 class MergeableAdapter:
@@ -488,11 +492,16 @@ class DenseLMAdapter(MergeableAdapter):
             def bank(bank_params, hidden, _cfg=cfg):
                 return transformer.bank_head(_cfg, bank_params, hidden)
 
+        def prefill_chunk(params, pool, tables, lengths, tokens, _cfg=cfg):
+            return transformer.paged_prefill_chunk(
+                _cfg, params, pool, tables, lengths, tokens)
+
         return DecodeSplit(trunk_step, head_fn, step, step_unpaged,
                            init_pool, init_cache, sp.prefix_paths,
                            head_paths=sp.suffix_paths,
                            head_signature=sp.suffix_signature,
-                           bank_head=bank)
+                           bank_head=bank,
+                           prefill_chunk=prefill_chunk)
 
 
 class FamilyAdapter(MergeableAdapter):

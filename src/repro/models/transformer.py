@@ -580,6 +580,29 @@ def paged_trunk_step(cfg: DenseLMConfig, params: dict, pool: dict,
     return x, {"k": pk, "v": pv}
 
 
+def paged_prefill_chunk(cfg: DenseLMConfig, params: dict, pool: dict,
+                        tables: jax.Array, lengths: jax.Array,
+                        tokens: jax.Array) -> tuple:
+    """Chunked prompt admission (DESIGN.md D1/S3): ingest ``tokens`` (B, C)
+    prompt tokens per row in ONE dispatch by unrolling C sequential
+    :func:`paged_trunk_step` calls inside a single trace.  Bitwise by
+    construction — the trace contains exactly the same ops in the same order
+    as C separate single-token dispatches, so tokens/logits stay identical
+    to token-by-token prefill; what changes is dispatch count (1 vs C) and
+    host round-trips.  Returns (hidden (B, C, d), new_pool); the hidden
+    states are discarded by prefill callers (no logits are emitted for
+    prompt positions — the decoder always routes the LAST prompt token
+    through the normal single-token step)."""
+    C = tokens.shape[1]
+    lengths = lengths.astype(jnp.int32)
+    hs = []
+    for c in range(C):
+        h, pool = paged_trunk_step(cfg, params, pool, tables,
+                                   lengths + jnp.int32(c), tokens[:, c])
+        hs.append(h)
+    return jnp.concatenate(hs, axis=1), pool
+
+
 def paged_decode_step(cfg: DenseLMConfig, params: dict, pool: dict,
                       tables: jax.Array, lengths: jax.Array,
                       tokens: jax.Array) -> tuple:

@@ -222,12 +222,26 @@ class StreamingDecoder:
     Prompt tokens stream through the same decode path one per step
     (mixed prefill/decode): a request with prompt S and N new tokens is live
     for exactly S + N - 1 steps.
+
+    **Chunked prefill admission** (``chunked_prefill=True``, DESIGN.md S3):
+    slots still consuming their prompt fast-forward up to ``page_size``
+    prompt tokens per step in ONE ``prefill_chunk`` dispatch (C sequential
+    trunk steps unrolled inside a single trace — bitwise identical ops in
+    identical order, so tokens AND logits replay exactly as token-by-token
+    prefill) before the group's normal single-token step.  The LAST prompt
+    token always goes through the normal step: it emits the first generated
+    token through the unchanged decode path.  Chunk dispatches are counted
+    in ``prefill_chunk_dispatches`` — never in ``trunk_dispatches`` — so the
+    one-trunk-dispatch-per-group-step discipline gate is unaffected.  A
+    prompt-S request is live for ceil-fewer steps; every D1 gate (bitwise
+    tokens+logits, zero lost in-flight, pool identity) holds unchanged.
     """
 
     def __init__(self, engine: MergeAwareEngine, page_size: int = 8,
                  num_pages: int = 128, max_slots: int = 8,
                  max_len: int = 32, buckets: Optional[tuple] = None,
                  record_logits: bool = False,
+                 chunked_prefill: bool = False,
                  clock: Optional[Callable[[], float]] = None):
         if max_len % page_size:
             raise ValueError("max_len must be a multiple of page_size")
@@ -243,6 +257,7 @@ class StreamingDecoder:
         self.buckets = tuple(sorted(b for b in (buckets or engine.buckets)
                                     if b <= max_slots)) or (max_slots,)
         self.record_logits = record_logits
+        self.chunked_prefill = chunked_prefill
         self.queue: deque = deque()
         self.slots: dict = {}  # rid -> _Slot, insertion-ordered
         self.completions: list = []
@@ -257,6 +272,8 @@ class StreamingDecoder:
             "head_dispatches": 0, "singleton_dispatches": 0,
             "group_steps": 0, "admitted": 0, "retired": 0,
             "epoch_bumps": 0, "max_active": 0, "swap_survivors": 0,
+            "prefill_chunks": 0, "prefill_chunk_tokens": 0,
+            "prefill_chunk_dispatches": 0,
         }
 
     # -- plumbing -------------------------------------------------------------
@@ -309,6 +326,7 @@ class StreamingDecoder:
             r = self.engine.scheduler.load(req.instance_id, 1)
             self.engine.dma.wait((req.instance_id, "decode"),
                                  r["loaded_bytes"])
+            self.engine.dma.account(r["loaded_bytes_by_shard"])
             self.slots[rid] = _Slot(
                 rid, req, [int(t) for t in req.prompt],
                 logits=[] if self.record_logits else None,
@@ -336,8 +354,14 @@ class StreamingDecoder:
         for group in groups:
             slots = [s for s in self.slots.values()
                      if s.request.instance_id in group]
-            if slots:
-                self._run_group_step(group, slots)
+            if not slots:
+                continue
+            if self.chunked_prefill:
+                chunk = [s for s in slots
+                         if len(s.prompt) - 1 - s.pos >= 2]
+                if chunk:
+                    self._run_prefill_chunks(group, chunk)
+            self._run_group_step(group, slots)
         self.stats["steps"] += 1
         for rid in [r for r, s in self.slots.items() if s.finished]:
             self._retire(rid)
@@ -351,6 +375,52 @@ class StreamingDecoder:
             steps=s.steps, logits=s.logits,
             admit_epoch=s.admit_epoch, retire_epoch=pool.epoch))
         self.stats["retired"] += 1
+
+    def _run_prefill_chunks(self, group: list, slots: list) -> None:
+        """Fast-forward prompt-consuming slots by up to ``page_size`` prompt
+        tokens in ONE ``prefill_chunk`` dispatch per chunk size, always
+        leaving the LAST prompt token for the normal single-token step (which
+        emits the first generated token through the unchanged decode path).
+        Bitwise by construction: the chunk trace is exactly the C sequential
+        trunk steps it replaces, and padded rows replicate the last real row
+        (duplicate identical page writes, outputs discarded)."""
+        dec = self._decode(group[0])
+        if dec.prefill_chunk is None:
+            return
+        pool = self.pool_for(group[0])
+        params = self._params(group[0])
+        by_k: dict = {}
+        for s in slots:
+            k = min(self.page_size, len(s.prompt) - 1 - s.pos)
+            by_k.setdefault(k, []).append(s)
+        for k, ss in sorted(by_k.items()):
+            bucket = bucket_for(len(ss), self.buckets)
+            for s in ss:
+                pool.ensure(s.rid, s.length + k)
+            tables = pool.table_rows([s.rid for s in ss], self.max_pages)
+            tokens = np.array([s.prompt[s.pos:s.pos + k] for s in ss],
+                              np.int32)
+            lengths = np.array([s.length for s in ss], np.int32)
+            if bucket > len(ss):
+                pad = bucket - len(ss)
+                tables = np.concatenate(
+                    [tables, np.repeat(tables[-1:], pad, 0)])
+                tokens = np.concatenate(
+                    [tokens, np.repeat(tokens[-1:], pad, 0)])
+                lengths = np.concatenate(
+                    [lengths, np.repeat(lengths[-1:], pad)])
+            kv = {"k": pool.k, "v": pool.v}
+            _, kv = self._fn("prefill", dec.prefill_chunk, k)(
+                params, kv, jnp.asarray(tables), jnp.asarray(lengths),
+                jnp.asarray(tokens))
+            pool.k, pool.v = kv["k"], kv["v"]
+            self.stats["prefill_chunk_dispatches"] += 1
+            for s in ss:
+                s.length += k
+                s.pos += k
+                self.stats["prefill_chunks"] += 1
+                self.stats["prefill_chunk_tokens"] += k
+                self.stats["prompt_tokens"] += k
 
     def _run_group_step(self, group: list, slots: list) -> None:
         lead = group[0]
@@ -386,7 +456,12 @@ class StreamingDecoder:
                         and dec.bank_head is not None)
             if bankable:
                 bank_params = self.engine._bank_params(group)
-                out = self._fn("bank", dec.bank_head,
+                # under a mesh placement the fan-out is shard_map'd over the
+                # bank axis (engine-cached wrapper, stable identity for the
+                # jit cache) — bitwise identical, scaled over devices
+                bank_fn = self.engine.maybe_shard_bank(dec.bank_head,
+                                                       len(group))
+                out = self._fn("bank", bank_fn,
                                len(group))(bank_params, hidden)
                 self.stats["bank_dispatches"] += 1
                 member_row = {iid: n for n, iid in enumerate(group)}
@@ -447,8 +522,10 @@ class StreamingDecoder:
                         params, kv, *args)
                     if (self.engine._group_bankable(tuple(group))
                             and dec.bank_head is not None):
+                        bank_fn = self.engine.maybe_shard_bank(
+                            dec.bank_head, len(group))
                         jax.block_until_ready(
-                            self._fn("bank", dec.bank_head, len(group))(
+                            self._fn("bank", bank_fn, len(group))(
                                 self.engine._bank_params(group), hidden))
                     for iid in group:
                         jax.block_until_ready(
@@ -458,6 +535,27 @@ class StreamingDecoder:
                     out, _ = self._fn("step", dec.step)(
                         self._params(group[0]), kv, *args)
                     jax.block_until_ready(out)
+            if self.chunked_prefill and dec.prefill_chunk is not None:
+                # compile exactly the chunk sizes the queued prompts will
+                # need (pos advances k + 1 per step: chunk then normal step)
+                ks: set = set()
+                for req in self.queue:
+                    if req.instance_id not in group:
+                        continue
+                    pos, S = 0, len(req.prompt)
+                    while S - 1 - pos >= 2:
+                        k = min(self.page_size, S - 1 - pos)
+                        ks.add(k)
+                        pos += k + 1
+                params = self._params(group[0])
+                for k in sorted(ks):
+                    for b in self.buckets:
+                        _, out_kv = self._fn("prefill", dec.prefill_chunk, k)(
+                            params, kv,
+                            jnp.zeros((b, self.max_pages), jnp.int32),
+                            jnp.zeros((b,), jnp.int32),
+                            jnp.zeros((b, k), jnp.int32))
+                        jax.block_until_ready(out_kv["k"])
 
     def run(self, requests: list, horizon_s: float = 60.0,
             on_step: Optional[Callable] = None,

@@ -347,9 +347,19 @@ class AsyncDMA:
         self.stall_s = 0.0
         self.hidden_s = 0.0
         self.transfers = 0
+        # per-shard transferred-bytes ledger (DESIGN.md S3): the sharded
+        # engine attributes each load's bytes to the shards they land on
+        self.bytes_by_shard: dict = {}
 
     def seconds_for(self, nbytes: int) -> float:
         return nbytes / 1e9 / self.gbps
+
+    def account(self, shard_bytes: dict) -> None:
+        """Credit a completed load's bytes to the shards they landed on
+        (``Scheduler.load``'s ``loaded_bytes_by_shard``)."""
+        for s, b in shard_bytes.items():
+            if b:
+                self.bytes_by_shard[s] = self.bytes_by_shard.get(s, 0) + b
 
     def start(self, key, nbytes: int) -> None:
         self._inflight[key] = (self.clock(), self.seconds_for(nbytes))
@@ -404,7 +414,14 @@ class MergeAwareEngine:
     ):
         self.store = store
         self.clock = clock  # shared with the DMA model below
-        self.scheduler = Scheduler(instances, capacity_bytes, costs)
+        # with a mesh-sharded store the capacity budget is PER-SHARD and
+        # admission checks every shard's slice (replicated trunk everywhere,
+        # private suffixes on their home shard) — DESIGN.md S3
+        self.scheduler = Scheduler(
+            instances, capacity_bytes, costs,
+            shard_fn=(store.resident_shards if store.n_shards > 1 else None),
+            n_shards=store.n_shards,
+        )
         self.programs = {p.instance_id: p for p in programs}
         missing = set(self.programs) ^ {i.instance_id for i in instances}
         if missing:
@@ -434,6 +451,7 @@ class MergeAwareEngine:
         self._sigs: dict = {}  # iid -> binding signature, per groups epoch
         self._bankable: dict = {}  # group tuple -> bool, per groups epoch
         self._bank_compiled: dict = {}  # (callable, sig, N) -> jitted bank fn
+        self._bank_sharded: dict = {}  # (callable, N, mesh, axis) -> shard_map'd fn
 
     # -- prefix compile cache (one trace per shared-prefix group) --------------
 
@@ -497,25 +515,62 @@ class MergeAwareEngine:
             self._bankable[group] = hit
         return hit
 
+    def _bank_sharding_active(self, n_bank: int) -> bool:
+        """Sharded bank dispatch is on iff the store carries a mesh placement
+        with >1 shards on the bank axis AND the bank divides evenly over
+        them (indivisible banks fall back to the replicated local dispatch —
+        still bitwise, just not scaled)."""
+        pl = self.store.placement
+        return (pl is not None and self.store.n_shards > 1
+                and n_bank % self.store.n_shards == 0)
+
+    def maybe_shard_bank(self, fn, n_bank: int):
+        """Wrap a bank fan-out callable ``(bank_params, feats) -> (N, ...)``
+        in a ``shard_map`` over the placement's bank axis when sharding is
+        active for ``n_bank`` (DESIGN.md S3): each device runs the SAME
+        computation over its N/n_shards bank slice with replicated
+        activations — the bank axis is batch-like, no contraction is split,
+        so outputs stay bitwise identical to the unsharded dispatch while
+        the grid (and Pallas BlockSpecs) become shard-local.  Cached per
+        (callable, N, mesh, axis) so repeat callers (and the streaming
+        decoder's jit cache) see a stable function identity."""
+        if not self._bank_sharding_active(n_bank):
+            return fn
+        from repro.distributed.sharding import shard_bank_fn
+
+        pl = self.store.placement
+        key = (self._callable_key(fn), n_bank, pl.mesh, pl.bank_axis)
+        wrapped = self._bank_sharded.get(key)
+        if wrapped is None:
+            wrapped = shard_bank_fn(fn, pl.mesh, pl.bank_axis)
+            self._bank_sharded[key] = wrapped
+        return wrapped
+
     def _bank_fn(self, group: list):
         """Jitted bank fan-out for a group: the adapter's fused
         ``bank_suffix`` when provided (``ops.bank_matmul`` grouped GEMM on
         TPU; the unrolled bitwise oracle in ``ref`` mode), else ``vmap`` of
         the member suffix over the stacked bank — the fallback for suffixes
-        with no bank-aware callable (allclose-grade, still one dispatch)."""
+        with no bank-aware callable (allclose-grade, still one dispatch).
+        Under an active mesh placement the callable is shard_map'd over the
+        bank axis first (:meth:`maybe_shard_bank`), so the dispatch scales
+        with devices at unchanged output bits."""
         lead = self.programs[group[0]]
+        sharded = self._bank_sharding_active(len(group))
+        mesh = self.store.placement.mesh if sharded else None
         if lead.bank_suffix is not None:
             key = (self._callable_key(lead.bank_suffix),
-                   lead.suffix_signature, len(group))
+                   lead.suffix_signature, len(group), mesh)
             base = lead.bank_suffix
         else:
             key = (self._callable_key(lead.suffix), "vmap",
-                   lead.suffix_signature, len(group))
+                   lead.suffix_signature, len(group), mesh)
             base = None
         fn = self._bank_compiled.get(key)
         if fn is None:
-            fn = jax.jit(base if base is not None
-                         else jax.vmap(lead.suffix, in_axes=(0, None)))
+            base_fn = (base if base is not None
+                       else jax.vmap(lead.suffix, in_axes=(0, None)))
+            fn = jax.jit(self.maybe_shard_bank(base_fn, len(group)))
             self._bank_compiled[key] = fn
         return fn
 
@@ -845,9 +900,15 @@ class MergeAwareEngine:
                 continue
             empty_streak = 0
             max_batch = min(len(reqs), self.buckets[-1])
-            loaded = sum(self.scheduler.load(iid, max_batch)["loaded_bytes"]
-                         for iid in group)
+            loaded = 0
+            shard_bytes: dict = {}
+            for iid in group:
+                r = self.scheduler.load(iid, max_batch)
+                loaded += r["loaded_bytes"]
+                for s, b in r["loaded_bytes_by_shard"].items():
+                    shard_bytes[s] = shard_bytes.get(s, 0) + b
             self.dma.wait(tuple(group), loaded)
+            self.dma.account(shard_bytes)
             # prefetch the NEXT group's incremental bytes; the transfer's
             # clock runs while this group computes (§3.2 pipelining, made
             # real).  Sized by peek (pre-eviction estimate).
@@ -875,6 +936,7 @@ class MergeAwareEngine:
             "binding_epochs": self.store.epoch - epoch_start + 1,
             "dma_stall_s": self.dma.stall_s - stall_before,
             "dma_hidden_s": self.dma.hidden_s - hidden_before,
+            "dma_bytes_by_shard": dict(self.dma.bytes_by_shard),
             # lifetime count (compiles usually happen in warmup, so the
             # per-call delta under-reports): distinct compiled prefixes —
             # a 4-member shared group contributes 1, not 4

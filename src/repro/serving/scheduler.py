@@ -74,13 +74,22 @@ class Scheduler:
     """Admission + eviction + swap accounting over one GPU (edge box)."""
 
     def __init__(self, instances: list, capacity_bytes: int,
-                 costs: dict, pcie_gbps: float = 16.0, merged: bool = True):
+                 costs: dict, pcie_gbps: float = 16.0, merged: bool = True,
+                 shard_fn=None, n_shards: int = 1):
         self.instances = {i.instance_id: i for i in instances}
         self.order = (merging_aware_order(instances) if merged
                       else sorted(instances, key=lambda i: i.instance_id))
         self.mem = MemoryState.empty(capacity_bytes)
         self.costs = costs
         self.pcie_gbps = pcie_gbps
+        # sharded admission (DESIGN.md S3): with shard_fn (key -> tuple of
+        # resident shards, e.g. ParamStore.resident_shards) capacity_bytes
+        # becomes PER-SHARD — a key counts against every shard it resides on
+        # (replicated trunk on all, private suffix on its home shard), so a
+        # merged group whose total exceeds one device's budget still admits
+        # when each shard's slice fits.
+        self.shard_fn = shard_fn
+        self.n_shards = max(int(n_shards), 1) if shard_fn is not None else 1
         # cumulative swap-churn counters (the ingestion/overload monitors
         # read these; per-call accounting stays in load()'s return value)
         self.stats = {"loads": 0, "loaded_bytes": 0, "evictions": 0}
@@ -89,6 +98,21 @@ class Scheduler:
 
     def _activation_bytes(self, inst: Instance, batch: int) -> int:
         return int(self.costs[inst.model_id].activation_gb(batch) * 1e9)
+
+    def _shards_of(self, key) -> tuple:
+        return self.shard_fn(key) if self.shard_fn is not None else (0,)
+
+    def _bytes_by_shard(self, items) -> dict:
+        """items: iterable of (key, bytes) -> {shard: bytes} under the
+        residency map (replicated keys count on every resident shard)."""
+        out = {s: 0 for s in range(self.n_shards)}
+        for k, b in items:
+            for s in self._shards_of(k):
+                out[s] += b
+        return out
+
+    def resident_bytes_by_shard(self) -> dict:
+        return self._bytes_by_shard(self.mem.resident.items())
 
     def load(self, instance_id: str, batch: int) -> dict:
         """Make ``instance_id`` runnable; returns swap accounting."""
@@ -100,7 +124,13 @@ class Scheduler:
         evicted = []
 
         def fits():
-            return self.mem.used_bytes + need_bytes + act <= self.mem.capacity_bytes
+            if self.shard_fn is None:
+                return (self.mem.used_bytes + need_bytes + act
+                        <= self.mem.capacity_bytes)
+            used = self.resident_bytes_by_shard()
+            need = self._bytes_by_shard(need_keys.items())
+            return all(used[s] + need[s] + act <= self.mem.capacity_bytes
+                       for s in range(self.n_shards))
 
         # Evict most-recently-run first (its next turn is the furthest away
         # under round-robin); never evict keys the incoming instance needs.
@@ -139,6 +169,8 @@ class Scheduler:
         load_ms = 1000.0 * need_bytes / 1e9 / self.pcie_gbps
         return {
             "loaded_bytes": need_bytes,
+            "loaded_keys": list(need_keys),
+            "loaded_bytes_by_shard": self._bytes_by_shard(need_keys.items()),
             "load_ms": load_ms,
             "evicted": evicted,
             "resident_bytes": self.mem.used_bytes,
@@ -211,6 +243,7 @@ class Scheduler:
         sim = Scheduler(
             list(self.instances.values()), self.mem.capacity_bytes,
             self.costs, self.pcie_gbps,
+            shard_fn=self.shard_fn, n_shards=self.n_shards,
         )
         sim.order = self.order
         for _ in range(2):

@@ -1,0 +1,294 @@
+"""DESIGN.md S3 — mesh-sharded ParamStore + delta-compressed plan shipping.
+
+Two tiers:
+
+* **Wire codec** (runs everywhere): the MergePlan weight-payload entry kinds
+  (``full`` / ``same`` / ``delta_q8``), their round-trips, error bounds and
+  failure modes, and ``export_plan``'s delta/quantize plumbing.
+* **Forced-8 mesh tier** (``skipif`` below 8 devices): ParamStore round
+  trips under a 2x4 ``MeshPlacement`` — merged/applied/resharded stores must
+  materialize BITWISE what the unplaced store does, and per-shard epoch
+  bookkeeping must advance exactly the touched shards.  The conftest mandate
+  keeps ``XLA_FLAGS`` out of test code, so these are exercised by the ci.sh
+  lane that sets ``--xla_force_host_platform_device_count=8`` in the
+  environment; on a plain host they skip.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import MergePlan, ParamStore, enumerate_groups, records_from_params
+from repro.core.signatures import (
+    decode_weight_entry, encode_weight_entry, entry_wire_bytes,
+    weights_wire_bytes,
+)
+from repro.models import vision as VI
+
+CFG = VI.SmallCNNConfig(task="classification", n_classes=4, depth=1,
+                        width=8, n_stages=2)
+
+forced8 = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs 8 devices (ci.sh forced-CPU lane sets "
+           "--xla_force_host_platform_device_count=8)")
+
+
+def _perturb(params, seed, scale=0.01):
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    ks = jax.random.split(jax.random.PRNGKey(seed), len(leaves))
+    return jax.tree_util.tree_unflatten(
+        treedef, [l + scale * jax.random.normal(k, l.shape)
+                  for l, k in zip(leaves, ks)])
+
+
+def _zoo():
+    base = VI.init_small_cnn(CFG, jax.random.PRNGKey(0))
+    return {"A": base, "B": _perturb(base, 1),
+            "C": VI.init_small_cnn(CFG, jax.random.PRNGKey(42))}
+
+
+def _trunk_groups(zoo):
+    recs = sum((records_from_params(p, m) for m, p in zoo.items()), [])
+    return [g for g in enumerate_groups(recs)
+            if not any(r.path.startswith("head/") for r in g.records)]
+
+
+def _merged(placement=None):
+    zoo = _zoo()
+    store = ParamStore.from_models(zoo, placement=placement)
+    groups = _trunk_groups(zoo)
+    for g in groups:
+        store.merge_group(g)
+    return zoo, store, groups
+
+
+def _placement():
+    from repro.distributed.partitioning import MeshPlacement
+    from repro.distributed.sharding import LogicalRules
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    # serve-tier rules: no logical-axis map -> every weight replicates; only
+    # the bank's leading axis shards (what keeps sharded serving bitwise)
+    return MeshPlacement(LogicalRules(mesh, {}), bank_axis="model")
+
+
+def _materialize_equal(a: ParamStore, b: ParamStore, mids) -> bool:
+    for mid in mids:
+        la = jax.tree_util.tree_leaves(a.materialize(mid))
+        lb = jax.tree_util.tree_leaves(b.materialize(mid))
+        if not all(np.array_equal(np.asarray(x), np.asarray(y))
+                   for x, y in zip(la, lb)):
+            return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# wire codec (runs everywhere)
+# ---------------------------------------------------------------------------
+
+
+def test_wire_entry_full_roundtrip_bitwise():
+    arr = np.arange(24, dtype=np.float32).reshape(4, 6) / 7
+    e = encode_weight_entry(arr)
+    assert e["kind"] == "full"
+    assert entry_wire_bytes(e) == arr.nbytes
+    assert np.array_equal(decode_weight_entry(e), arr)
+
+
+def test_wire_entry_same_is_zero_payload_and_bitwise():
+    arr = np.arange(12, dtype=np.float32).reshape(3, 4)
+    e = encode_weight_entry(arr, base=arr.copy())
+    assert e["kind"] == "same" and "data" not in e
+    assert entry_wire_bytes(e) == 0
+    out = decode_weight_entry(e, base=arr)
+    assert np.array_equal(out, arr)
+
+
+def test_wire_entry_delta_q8_quarter_bytes_bounded_error():
+    rng = np.arange(256, dtype=np.float32).reshape(16, 16)
+    base = np.sin(rng)
+    delta = 1e-3 * np.cos(rng)
+    arr = base + delta
+    e = encode_weight_entry(arr, base=base, quantize=True)
+    assert e["kind"] == "delta_q8"
+    assert entry_wire_bytes(e) == arr.size + 4  # int8 payload + scale
+    out = decode_weight_entry(e, base=base)
+    # round-to-nearest int8 with per-leaf amax scale: error <= scale/2
+    scale = np.max(np.abs(delta)) / 127.0
+    assert np.max(np.abs(out - arr)) <= scale
+
+
+def test_wire_entry_unquantized_change_ships_full():
+    base = np.ones((4, 4), np.float32)
+    e = encode_weight_entry(base * 2, base=base)
+    assert e["kind"] == "full"
+
+
+def test_wire_entry_base_drift_falls_back_full():
+    arr = np.ones((4, 4), np.float32)
+    e = encode_weight_entry(arr, base=np.ones((2, 8), np.float32),
+                            quantize=True)
+    assert e["kind"] == "full"  # shape drift: delta would be meaningless
+
+
+def test_wire_entry_delta_kinds_require_base():
+    arr = np.ones((4,), np.float32)
+    same = encode_weight_entry(arr, base=arr)
+    with pytest.raises(ValueError):
+        decode_weight_entry(same)
+    with pytest.raises(ValueError):
+        decode_weight_entry(same, base=np.ones((8,), np.float32))
+
+
+def test_wire_entry_legacy_without_kind_decodes_full():
+    arr = np.arange(8, dtype=np.float32)
+    e = encode_weight_entry(arr)
+    del e["kind"]  # pre-S3 plans carried no kind field
+    assert np.array_equal(decode_weight_entry(e), arr)
+
+
+def test_export_plan_delta_base_marks_unchanged_same():
+    _, store, groups = _merged()
+    base = {k: np.asarray(store.buffers[k]) for k in store.shared_keys()}
+    plan = store.export_plan(groups, include_weights=True, delta_base=base)
+    kinds = {e.get("kind") for e in plan.shared_weights.values()}
+    assert kinds == {"same"}
+    assert weights_wire_bytes(plan.shared_weights) == 0
+
+
+def test_export_plan_quantized_delta_applies_within_bound():
+    _, store, groups = _merged()
+    base = {k: np.asarray(store.buffers[k]) for k in store.shared_keys()}
+    k0 = sorted(base)[0]
+    true_val = base[k0] + np.float32(1e-3) * np.cos(
+        np.arange(base[k0].size, dtype=np.float32)).reshape(base[k0].shape)
+    store.update_buffers({k0: true_val})
+
+    plan = store.export_plan(groups, include_weights=True, delta_base=base,
+                             quantize=True)
+    kinds = {k: e.get("kind") for k, e in plan.shared_weights.items()}
+    assert kinds[k0] == "delta_q8"
+    assert all(v == "same" for k, v in kinds.items() if k != k0)
+
+    # edge twin holding the base deployment applies the shipped delta
+    edge, _ = _merged()[1:]
+    edge.apply_plan(MergePlan.from_json(plan.to_json()))
+    got = np.asarray(edge.buffers[k0])
+    scale = np.max(np.abs(true_val - base[k0])) / 127.0
+    assert np.max(np.abs(got - true_val)) <= scale
+    for k in kinds:  # unchanged keys stay bitwise
+        if k != k0:
+            assert np.array_equal(np.asarray(edge.buffers[k]), base[k])
+
+
+# ---------------------------------------------------------------------------
+# forced-8 mesh tier
+# ---------------------------------------------------------------------------
+
+
+@forced8
+def test_placement_resolves_four_bank_shards():
+    pl = _placement()
+    assert pl.n_shards == 4
+    from jax.sharding import PartitionSpec as P
+
+    assert pl.bank_sharding(8).spec == P("model")
+    assert pl.bank_sharding(7).spec == P()  # indivisible bank falls back
+
+
+@forced8
+def test_merge_unmerge_roundtrip_bitwise_vs_unplaced():
+    zoo, placed, groups = _merged(placement=_placement())
+    _, plain, _ = _merged()
+    assert placed.n_shards == 4
+    assert _materialize_equal(placed, plain, zoo)
+    x = jax.random.normal(jax.random.PRNGKey(7), (4, 32, 32, 3))
+    for mid in zoo:
+        a = VI.small_cnn_forward(CFG, placed.materialize(mid), x)
+        b = VI.small_cnn_forward(CFG, plain.materialize(mid), x)
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    placed.unmerge(groups[0])
+    plain.unmerge(groups[0])
+    assert _materialize_equal(placed, plain, zoo)
+
+
+@forced8
+def test_apply_plan_bitwise_and_bumps_only_touched_shards():
+    _, cloud, groups = _merged()
+    plan = MergePlan.from_json(cloud.export_plan(
+        groups, include_weights=True).to_json())
+
+    edge = ParamStore.from_models(_zoo(), placement=_placement())
+    before = dict(edge.shard_epochs)
+    keys = edge.apply_plan(plan)
+    touched = {edge.shard_of(k) for k in keys}
+    for s in range(edge.n_shards):
+        want = 1 if s in touched else 0
+        assert edge.shard_epochs.get(s, 0) - before.get(s, 0) == want
+    assert _materialize_equal(edge, cloud, list(edge.bindings))
+
+
+@forced8
+def test_update_buffers_bumps_only_home_shard():
+    _, store, _ = _merged(placement=_placement())
+    priv = next(k for k in sorted(store.buffers)
+                if ":" in k and k not in store.shared_keys())
+    before = dict(store.shard_epochs)
+    store.update_buffers({priv: np.asarray(store.buffers[priv]) + 1.0})
+    bumped = [s for s in range(store.n_shards)
+              if store.shard_epochs.get(s, 0) != before.get(s, 0)]
+    assert bumped == [store.shard_of(priv)]
+
+
+@forced8
+def test_reshard_store_installs_placement_and_stays_bitwise():
+    from repro.ckpt.reshard import reshard_store
+    from repro.distributed.elastic import plan_for_devices
+    from repro.distributed.sharding import LogicalRules
+
+    zoo, store, _ = _merged()
+    ref = {m: jax.tree_util.tree_map(np.asarray, store.materialize(m))
+           for m in zoo}
+    # the receiving box picks its own mesh shape from its surviving devices
+    mp = plan_for_devices(jax.device_count(), model_parallel=4)
+    assert mp.shape == (2, 4) and mp.axes == ("data", "model")
+    mesh = jax.make_mesh(mp.shape, mp.axes)
+    pl = reshard_store(store, LogicalRules(mesh, {}))
+    assert store.placement is pl and store.n_shards == 4
+    for m in zoo:  # re-placing buffers moves devices, never bits
+        got = jax.tree_util.tree_leaves(store.materialize(m))
+        assert all(np.array_equal(np.asarray(a), b) for a, b in
+                   zip(got, jax.tree_util.tree_leaves(ref[m])))
+    assert reshard_store(store, None) is None  # back to single-box
+    assert store.n_shards == 1
+
+
+@forced8
+def test_shard_bank_fn_bitwise_vs_unsharded():
+    from repro.distributed.sharding import shard_bank_fn
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    w = jax.random.normal(jax.random.PRNGKey(0), (8, 16, 32))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16))
+
+    def bank_gemm(bank_w, feats):
+        return jnp.einsum("bk,nkm->nbm", feats, bank_w)
+
+    sharded = jax.jit(shard_bank_fn(bank_gemm, mesh, "model"))
+    assert np.array_equal(np.asarray(sharded(w, x)),
+                          np.asarray(bank_gemm(w, x)))
+
+
+@forced8
+def test_resident_bytes_by_shard_replicates_shared():
+    _, store, _ = _merged(placement=_placement())
+    by_shard = store.resident_bytes_by_shard()
+    shared = store.shared_keys()
+    live = {k for b in store.bindings.values() for k in b.values()}
+    shared_bytes = sum(np.asarray(store.buffers[k]).nbytes for k in shared)
+    for s in range(store.n_shards):
+        priv = sum(np.asarray(store.buffers[k]).nbytes for k in live - shared
+                   if store.shard_of(k) == s)
+        assert by_shard[s] == shared_bytes + priv
+    assert max(by_shard.values()) < store.resident_bytes()
