@@ -1,0 +1,400 @@
+"""Mixed-family zoo: ONE MergeAwareEngine serving transformer + ssm +
+griffin + moe variants off one merged ParamStore (ISSUE 10).
+
+    PYTHONPATH=src python -m benchmarks.mixed_zoo [--json] [--smoke]
+
+The scenario the promoted adapters exist for: two fine-tune variants per
+family — ``dense`` (transformer), ``ssm`` (Mamba), ``hybrid`` (Griffin),
+``moe`` — all speaking the same ``MergeableAdapter`` contract.  Every
+variant carries the SAME token-embedding table (LM fleets routinely share a
+tokenizer-tied embedding across backbones), trunks diverge by a small
+fine-tuning perturbation within each family and heads diverge hard.  The
+full pipeline runs end to end:
+
+1. **Plan** — family-aware ``RepresentationSimilarityScorer`` (ssm trunks
+   never cluster with transformer trunks even where shapes coincide;
+   embed/final_norm/lm_head stay cross-family with CKA arbitrating) +
+   ``StagedPlanner`` over all eight models' trunk records.  The committed
+   plan must contain within-family trunk groups AND the 8-member
+   cross-family embedding group, serialized through the MergePlan JSON
+   wire format.
+2. **Serve** — one engine, eight programs (four families), shared-prefix
+   micro-batches within each family's merged pair, suffix-bank fan-out for
+   the private heads.  Before serving, the ``kernels.ops`` dispatch
+   counters are reset; after, ``mamba_scan``/``rg_lru_scan``/
+   ``flash_attention`` must all have fired — the regression this benchmark
+   pins is exactly "the scan kernels exist but nothing on the serving hot
+   path ever dispatches them".
+3. **Verify** — every served row replayed against the direct per-model
+   forward on the same merged bindings: BITWISE equal, in the default
+   ``ref`` oracle mode AND in ``interpret`` mode (Pallas kernel bodies
+   executing on CPU), each mode compared against direct forwards traced in
+   that same mode.
+4. **Decode** — the same engine's streaming tier: paged state + continuous
+   batching with all four families in flight at once (``StreamingDecoder``
+   carrying KV pages for dense/moe, first-slot recurrent state for
+   ssm/griffin), completions replayed through each family's unpaged
+   ``decode_step`` bitwise.
+
+Artifact: ``BENCH_mixed_zoo.json`` (``--smoke`` shrinks the trace and emits
+``BENCH_mixed_zoo_smoke.json`` — the ``REPRO_KERNEL_MODE=interpret`` CI
+lane).
+"""
+import argparse
+import contextlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+
+FAMILIES = ("dense", "ssm", "hybrid", "moe")
+MIN_SIMILARITY = 0.7
+BUCKETS = (1, 2, 4)
+SEQ = 8
+PAGE_SIZE = 4
+MAX_LEN = 16
+PROMPT_LEN = 4
+MAX_NEW = 8
+
+
+def zoo_members() -> dict:
+    """{model_id: (adapter, cfg, params)} — two variants per family, one
+    shared embedding table across ALL eight (tokenizer-tied), trunks
+    perturbed 0.005 within family, heads perturbed 1.0 per variant."""
+    from repro.models.registry import get_adapter
+    from repro.utils.tree import flatten_paths, unflatten_paths
+
+    embed = 0.02 * jax.random.normal(jax.random.PRNGKey(999), (64, 32))
+    members = {}
+    for fi, fam in enumerate(FAMILIES):
+        adapter = get_adapter(fam)
+        cfg = adapter.default_config()
+        base = flatten_paths(adapter.init(cfg, jax.random.PRNGKey(fi)))
+        assert base["embed/table"].shape == embed.shape, fam
+        base["embed/table"] = embed.astype(base["embed/table"].dtype)
+        for vi, variant in enumerate(("A", "B")):
+            flat = dict(base)
+            ks = jax.random.split(jax.random.PRNGKey(100 + 10 * fi + vi),
+                                  len(flat))
+            for (path, leaf), k in zip(sorted(flat.items()), ks):
+                if path == "embed/table":
+                    continue  # the cross-family merge target stays shared
+                head = path.startswith(("final_norm/", "lm_head/"))
+                # variant A keeps the family base; B fine-tunes the trunk
+                # gently (CKA must keep the pair coherent) — heads always
+                # diverge hard so suffixes stay private
+                scale = 1.0 if head else (0.005 if variant == "B" else 0.0)
+                if scale:
+                    flat[path] = leaf + scale * jax.random.normal(
+                        k, leaf.shape, leaf.dtype)
+            members[f"{fam}-{variant}"] = (adapter, cfg, unflatten_paths(flat))
+    return members
+
+
+def plan_zoo(members):
+    """Family-aware CKA prefilter + staged search over every model's trunk
+    records; returns (PlanResult, planning store)."""
+    from repro.core import ParamStore, RepresentationSimilarityScorer, StagedPlanner
+    from repro.core.policy import CoherenceSurrogateTrainer, calibration_activations
+
+    store = ParamStore.from_models(
+        {m: p for m, (_, __, p) in members.items()})
+    recs = []
+    for m, (adapter, cfg, params) in members.items():
+        trunk = adapter.split(cfg).prefix_paths
+        recs += [r for r in adapter.records(cfg, params, m)
+                 if r.path in trunk]
+    # one calibration batch through all four families (every adapter is a
+    # token LM, so the same token ids probe every trunk)
+    a0, c0, _ = next(iter(members.values()))
+    batch = a0.calibration_batch(c0, jax.random.PRNGKey(7), 32)
+    scorer = RepresentationSimilarityScorer.from_adapters(
+        members, batch, MIN_SIMILARITY)
+    trainer = CoherenceSurrogateTrainer(
+        calibration_activations(members, batch), MIN_SIMILARITY)
+    regs = [adapter.registered(cfg, m, jax.random.PRNGKey(i + 10),
+                               accuracy_target=0.0)
+            for i, (m, (adapter, cfg, _)) in enumerate(sorted(members.items()))]
+    res = StagedPlanner(store, regs, recs, trainer, scorer=scorer).run()
+    return res, store
+
+
+def zoo_engine(store, members, suffix_bank=True):
+    from repro.serving.costs import costs_for
+    from repro.serving.executor import MergeAwareEngine, ModelProgram
+    from repro.serving.workload import instances_from_store
+
+    mids = sorted(members)
+    programs = [ModelProgram.from_adapter(adapter, m, cfg=cfg)
+                for m, (adapter, cfg, _) in sorted(members.items())]
+    return MergeAwareEngine(
+        store, instances_from_store(store, "tiny-yolo", model_ids=mids),
+        programs, capacity_bytes=10**9,
+        costs={"tiny-yolo": costs_for("tiny-yolo")}, buckets=BUCKETS,
+        suffix_bank=suffix_bank,
+    )
+
+
+def zoo_requests(members, n_per_model):
+    """Deadlines interleave families AND variants round-robin, so every
+    serve pass mixes merged-pair micro-batches from all four families."""
+    from repro.serving.executor import Request
+
+    vocab = min(cfg.vocab_size for _, cfg, __ in members.values())
+    reqs = []
+    for i, m in enumerate(sorted(members)):
+        for j in range(n_per_model):
+            toks = jax.random.randint(jax.random.PRNGKey(100 + 7 * i + j),
+                                      (1, SEQ), 0, vocab)
+            reqs.append(Request(m, toks, 0.0,
+                                10.0 + (j * len(members) + i) * 1e-3))
+    return reqs
+
+
+def decode_requests(members):
+    """One request per model, wave-ordered (all A variants, then all B):
+    with ``max_slots`` = one slot per family, every trunk group carries ONE
+    in-flight row at a time.  The unpaged replay oracle steps B=1, and XLA
+    CPU GEMMs are not row-stable across batch sizes (an M=2 lowering can
+    associate a row's K-reduction differently from M=1 — observed at 2e-7
+    on the ssm in_proj shape), so the strict logits-bitwise decode contract
+    is only well-posed batch-faithfully.  Cross-variant BATCHED bitwiseness
+    is covered by the serve-leg verify, which replays the engine's own
+    padded micro-batches."""
+    from repro.serving.decode import DecodeRequest
+
+    vocab = min(cfg.vocab_size for _, cfg, __ in members.values())
+    reqs = []
+    for j, variant in enumerate(("A", "B")):
+        for i, fam in enumerate(FAMILIES):
+            toks = np.asarray(jax.random.randint(
+                jax.random.PRNGKey(1000 + 13 * i + j), (PROMPT_LEN,), 0,
+                vocab))
+            reqs.append(DecodeRequest(f"{fam}-{variant}", toks,
+                                      max_new_tokens=MAX_NEW,
+                                      deadline_s=60.0))
+    return reqs
+
+
+def _serve(store, members, n_per_model):
+    eng = zoo_engine(store, members)
+    reqs = zoo_requests(members, n_per_model)
+    for r in reqs:
+        eng.submit(r)
+    stats = eng.serve(horizon_s=60.0, warmup=reqs[0].payload)
+    return eng, stats
+
+
+def verify_bitwise(eng, store) -> bool:
+    """Merged serving outputs vs direct forwards on the SAME bindings,
+    mixed-family edition of ``lm_merging.verify_bitwise``: the split/forward
+    callables come from each instance's OWN program, so a griffin suffix
+    never replays a transformer head.  Fresh ``jax.jit`` wrappers per call
+    mean the replay traces under the CURRENT kernel mode."""
+    from repro.serving.workload import deadline_microbatches, pad_stack
+
+    res = {id(c.request): c.result for c in eng.completions}
+    by_iid: dict = {}
+    for c in eng.completions:
+        by_iid.setdefault(c.request.instance_id, []).append(c.request)
+    jitted: dict = {}
+
+    def jit_of(fn):
+        if id(fn) not in jitted:
+            jitted[id(fn)] = jax.jit(fn)
+        return jitted[id(fn)]
+
+    ok = True
+    for group in eng.prefix_groups():
+        greqs = [r for iid in group for r in by_iid.get(iid, [])]
+        for mb in deadline_microbatches(greqs, BUCKETS):
+            batch, _ = pad_stack([r.payload for r in mb.requests], mb.bucket)
+            if len(group) > 1:
+                feats = jit_of(eng.programs[group[0]].prefix)(
+                    store.materialize(group[0]), batch)
+                for j, r in enumerate(mb.requests):
+                    direct = jit_of(eng.programs[r.instance_id].suffix)(
+                        store.materialize(r.instance_id), feats)[j]
+                    ok &= np.array_equal(np.asarray(res[id(r)]),
+                                         np.asarray(direct))
+            else:
+                out = jit_of(eng.programs[group[0]].forward)(
+                    store.materialize(group[0]), batch)
+                for j, r in enumerate(mb.requests):
+                    ok &= np.array_equal(np.asarray(res[id(r)]),
+                                         np.asarray(out[j]))
+    return ok
+
+
+@contextlib.contextmanager
+def kernel_mode(mode):
+    prev = os.environ.get("REPRO_KERNEL_MODE")
+    os.environ["REPRO_KERNEL_MODE"] = mode
+    try:
+        yield
+    finally:
+        if prev is None:
+            del os.environ["REPRO_KERNEL_MODE"]
+        else:
+            os.environ["REPRO_KERNEL_MODE"] = prev
+
+
+def _stats_row(path, resident, stats):
+    return {
+        "path": path, "resident_bytes": resident,
+        "completed": stats.get("completed", ""),
+        "requests_per_s": stats.get("requests_per_s", ""),
+        "prefix_runs": stats.get("prefix_runs", ""),
+        "suffix_dispatches": stats.get("suffix_dispatches", ""),
+        "tokens_decoded": stats.get("tokens_decoded", ""),
+        "sla_fraction": stats.get("sla_fraction", ""),
+    }
+
+
+def run_zoo(n_per_model: int):
+    from repro.core import MergePlan, ParamStore
+    from repro.kernels import ops as kops
+    from repro.serving import decode as sdecode
+
+    members = zoo_members()
+    fam_of = {m: a.family for m, (a, _, __) in members.items()}
+
+    # CLOUD: plan over the mixed zoo, ship JSON
+    res, _ = plan_zoo(members)
+    payload = res.plan.to_json()
+    plan = MergePlan.from_json(payload)
+    cross_member = [pg for pg in plan.groups
+                    if any(len(c.members) >= 2 for c in pg.columns)]
+    cross_family = [pg for pg in plan.groups
+                    if any(len({fam_of[r.model_id] for r in c.members}) >= 2
+                           for c in pg.columns)]
+
+    params_of = {m: p for m, (_, __, p) in members.items()}
+
+    # EDGE baseline: unmerged twin serves the same trace
+    base_store = ParamStore.from_models(params_of)
+    base_resident = base_store.resident_bytes()
+    _, base_stats = _serve(base_store, members, n_per_model)
+
+    # EDGE merged: hot-swap the shipped plan, then serve with the dispatch
+    # counters watching the hot path (the dead-kernel gate)
+    store = ParamStore.from_models(params_of)
+    eng = zoo_engine(store, members)
+    swap = eng.apply_plan(plan)
+    merged_resident = store.resident_bytes()
+    kops.reset_dispatch_counts()
+    reqs = zoo_requests(members, n_per_model)
+    for r in reqs:
+        eng.submit(r)
+    merged_stats = eng.serve(horizon_s=60.0, warmup=reqs[0].payload)
+    bitwise_ref = verify_bitwise(eng, store)
+
+    # streaming decode: all four families in flight through ONE decoder
+    # (max_slots = one per family -> one row per trunk group at a time,
+    # see decode_requests on batch-faithful bitwise verification)
+    decode_kw = dict(page_size=PAGE_SIZE, num_pages=96,
+                     max_slots=len(FAMILIES), max_len=MAX_LEN,
+                     buckets=(1, 2, 4, 8))
+    dec_stats = eng.serve_decode(decode_requests(members),
+                                 record_logits=True, **decode_kw)
+    decode_bitwise = sdecode.verify_bitwise(eng.last_decoder)
+    counts = kops.dispatch_counts()
+
+    # interpret-mode leg: fresh engine + fresh jit wrappers so every traced
+    # op re-reads the mode — Pallas kernel BODIES on the serving hot path,
+    # still bitwise vs direct forwards traced in the same mode
+    with kernel_mode("interpret"):
+        jax.clear_caches()  # drop ref-mode traces so every op re-dispatches
+        kops.reset_dispatch_counts()
+        int_store = ParamStore.from_models(params_of)
+        int_eng = zoo_engine(int_store, members)
+        int_eng.apply_plan(MergePlan.from_json(payload))
+        int_reqs = zoo_requests(members, max(2, n_per_model // 4))
+        for r in int_reqs:
+            int_eng.submit(r)
+        int_eng.serve(horizon_s=60.0, warmup=int_reqs[0].payload)
+        bitwise_interpret = verify_bitwise(int_eng, int_store)
+        counts_interpret = kops.dispatch_counts()
+
+    rows = [
+        _stats_row("unmerged", base_resident, base_stats),
+        _stats_row("merged-plan", merged_resident, merged_stats),
+        _stats_row("merged-decode", merged_resident, dec_stats),
+    ]
+    derived = {
+        "families_served": len(set(fam_of.values())),
+        "models": len(members),
+        "plan_bytes": len(payload),
+        "committed_groups": res.committed,
+        "cross_member_groups": len(cross_member),
+        "cross_family_groups": len(cross_family),
+        "memory_saved_bytes": base_resident - merged_resident,
+        "memory_saved_pct": 100 * (base_resident - merged_resident)
+                            / base_resident,
+        "epoch_bumps": swap["epoch_bumps"],
+        "outputs_bitwise_ref": bitwise_ref,
+        "outputs_bitwise_interpret": bitwise_interpret,
+        "decode_outputs_bitwise": decode_bitwise,
+        "dispatch_mamba_scan": counts.get("mamba_scan", 0),
+        "dispatch_rg_lru_scan": counts.get("rg_lru_scan", 0),
+        "dispatch_flash_attention": counts.get("flash_attention", 0),
+        "dispatch_decode_attention": counts.get("decode_attention", 0),
+        "dispatch_page_gather": counts.get("page_gather", 0),
+        "dispatch_bank_matmul": counts.get("bank_matmul", 0),
+        "dispatch_mamba_scan_interpret": counts_interpret.get("mamba_scan", 0),
+        "dispatch_rg_lru_scan_interpret": counts_interpret.get("rg_lru_scan", 0),
+    }
+    return rows, derived
+
+
+def run(quiet: bool = False, smoke: bool = False) -> dict:
+    name = "BENCH_mixed_zoo_smoke" if smoke else "BENCH_mixed_zoo"
+    rows, derived = run_zoo(4 if smoke else 8)
+    return emit(name, rows, derived, quiet=quiet)
+
+
+def check(derived: dict) -> list:
+    """Acceptance gates (ISSUE 10); returns the list of violated gates."""
+    gates = {
+        "families_served == 4": derived["families_served"] == 4,
+        "cross_member_groups >= 1": derived["cross_member_groups"] >= 1,
+        "cross_family_groups >= 1": derived["cross_family_groups"] >= 1,
+        "memory_saved_bytes > 0": derived["memory_saved_bytes"] > 0,
+        "outputs_bitwise_ref": bool(derived["outputs_bitwise_ref"]),
+        "outputs_bitwise_interpret": bool(derived["outputs_bitwise_interpret"]),
+        "decode_outputs_bitwise": bool(derived["decode_outputs_bitwise"]),
+        "mamba_scan dispatched": derived["dispatch_mamba_scan"] > 0,
+        "rg_lru_scan dispatched": derived["dispatch_rg_lru_scan"] > 0,
+        "flash_attention dispatched": derived["dispatch_flash_attention"] > 0,
+        "mamba_scan dispatched (interpret)":
+            derived["dispatch_mamba_scan_interpret"] > 0,
+        "rg_lru_scan dispatched (interpret)":
+            derived["dispatch_rg_lru_scan_interpret"] > 0,
+    }
+    return [g for g, ok in gates.items() if not ok]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", action="store_true",
+                    help="print ONLY the artifact JSON to stdout (pipeable); "
+                         "the artifact is always written either way")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small trace -> BENCH_mixed_zoo_smoke (the "
+                         "REPRO_KERNEL_MODE=interpret CI lane)")
+    args = ap.parse_args(argv)
+    out = run(quiet=args.json, smoke=args.smoke)
+    if args.json:
+        print(json.dumps(out, indent=2, default=str))
+    bad = check(out["derived"])
+    if bad:
+        raise SystemExit("mixed_zoo acceptance criteria not met: "
+                         + "; ".join(bad))
+
+
+if __name__ == "__main__":
+    main()

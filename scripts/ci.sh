@@ -150,6 +150,41 @@ REPRO_KERNEL_MODE=interpret python -m benchmarks.decode_serve --json --smoke \
   > /dev/null
 test -f artifacts/benchmarks/BENCH_decode_smoke.json
 
+# mixed-family zoo (ISSUE 10): ONE engine serving transformer + ssm +
+# griffin + moe variants off one merged store, with the kernels.ops dispatch
+# counters watching the hot path (a scan op whose count stays 0 across the
+# serving run is the dead-kernel regression this lane pins)
+python -m benchmarks.mixed_zoo --json > /dev/null
+test -f artifacts/benchmarks/BENCH_mixed_zoo.json
+
+# mixed-zoo smoke lane in interpret mode: the mamba_scan / rg_lru_scan
+# Pallas bodies executing inside the promoted ssm/griffin serving paths
+# (separate artifact so the ref-mode BENCH_mixed_zoo is not clobbered)
+REPRO_KERNEL_MODE=interpret python -m benchmarks.mixed_zoo --json --smoke \
+  > /dev/null
+test -f artifacts/benchmarks/BENCH_mixed_zoo_smoke.json
+
+# mixed-zoo acceptance (ISSUE 10): all four families served by one engine,
+# >=1 committed cross-member group (incl. >=1 spanning families), memory
+# saved > 0, merged serving AND streaming decode outputs bitwise vs direct
+# forwards in ref and interpret modes, and the scan kernels demonstrably
+# dispatched on the serving hot path in both modes
+python - <<'PY'
+import json
+z = json.load(open("artifacts/benchmarks/BENCH_mixed_zoo.json"))["derived"]
+assert z["families_served"] == 4, z
+assert z["cross_member_groups"] >= 1, z
+assert z["cross_family_groups"] >= 1, z
+assert z["memory_saved_bytes"] > 0, z
+assert z["outputs_bitwise_ref"] and z["outputs_bitwise_interpret"], z
+assert z["decode_outputs_bitwise"], z
+assert z["dispatch_mamba_scan"] > 0 and z["dispatch_rg_lru_scan"] > 0, z
+assert z["dispatch_flash_attention"] > 0, z
+assert z["dispatch_mamba_scan_interpret"] > 0, z
+assert z["dispatch_rg_lru_scan_interpret"] > 0, z
+print("mixed-zoo acceptance OK")
+PY
+
 # mesh-sharded serve tier (DESIGN.md S3), forced-8-device CPU lane: the
 # ParamStore shard round-trip tests skip on a 1-device host, so this lane
 # forces a 2x4 host-platform mesh (the flag lives HERE, not in test code —

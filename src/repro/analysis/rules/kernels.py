@@ -70,3 +70,46 @@ def kernel_interpret_required(ctx):
         elif kw["interpret"] is not None:
             yield node.lineno, (f"{node.name}: `interpret` must not have a "
                                 "default — mode is kernels/ops.py's call")
+
+
+# Private scan/attention implementations that shadow a congruent OP_TABLE op.
+# Calling one from a model module puts a jnp fallback on a path the mode
+# matrix believes is kernel-served — the exact dead-kernel bug of ISSUE 10
+# (ssm/griffin recurrences never reached mamba_scan/rg_lru_scan).
+SHADOWED_IMPLS = {
+    "_scan_fused": "mamba_scan",
+    "_scan_diag": "rg_lru_scan",
+    "blocked_causal_attention": "flash_attention",
+}
+
+
+@rule(
+    "A103",
+    "model hot paths dispatch through OP_TABLE ops",
+    "Model modules must not call private scan/attention implementations "
+    "(_scan_fused, _scan_diag, blocked_causal_attention) when a congruent "
+    "OP_TABLE op exists — REPRO_KERNEL_MODE would silently not govern that "
+    "path.  Intentional ref-only call sites (cost probes, packed-position "
+    "layouts the kernel cannot express) carry a `repro: allow[A103]` pragma "
+    "with a reason.",
+    "route through kernels.ops.mamba_scan / rg_lru_scan / flash_attention; "
+    "keep the private implementation only as the oracle behind the op",
+    "ISSUE 10 (dead scan kernels never reached the serving hot path)",
+)
+def model_ops_dispatch(ctx):
+    if not ctx.rel.startswith("src/repro/models/"):
+        return
+    if ctx.rel.rsplit("/", 1)[-1] == "layers.py":
+        return  # layers.py *defines* the jnp implementations
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = node.func
+        name = fn.id if isinstance(fn, ast.Name) else (
+            fn.attr if isinstance(fn, ast.Attribute) else None)
+        op = SHADOWED_IMPLS.get(name)
+        if op:
+            yield node.lineno, (f"call to private `{name}` shadows "
+                                f"OP_TABLE op `{op}` — dispatch through "
+                                f"kernels.ops.{op} (or justify with a "
+                                "pragma)")

@@ -290,6 +290,36 @@ def calibration_activations(members: dict, batch: dict) -> dict:
     }
 
 
+# Mixed-zoo trunk eligibility (ISSUE 10): families whose trunk-internal
+# layers are op-congruent and may share a buffer when signatures match.
+# dense and moe blocks run the identical attention op sequence, so their
+# attn/norm leaves are mutually mergeable; the ssm mixer and the griffin
+# recurrence are different computations even where a shape coincides, so a
+# trunk column never mixes them with transformer trunks.  Families absent
+# from every class only trunk-merge with themselves.
+TRUNK_COMPATIBLE: tuple = (frozenset({"dense", "moe"}),)
+
+# Interface layers — token embedding and the final-norm/unembed suffix —
+# compute the same op in every LM family, so cross-family sharing is decided
+# purely by signature + CKA there (the "embeddings/norms may merge" half of
+# the mixed-zoo eligibility matrix, DESIGN.md).
+INTERFACE_PREFIXES: tuple = ("embed", "final_norm", "lm_head")
+
+
+def trunk_mergeable(fam_a: Optional[str], fam_b: Optional[str]) -> bool:
+    """May trunk-internal layers of these two families share a buffer?
+    Unknown families are conservatively treated as self-only."""
+    if fam_a == fam_b:
+        return True
+    if fam_a is None or fam_b is None:
+        return False
+    return any(fam_a in c and fam_b in c for c in TRUNK_COMPATIBLE)
+
+
+def is_interface_path(path: str) -> bool:
+    return path.split("/", 1)[0] in INTERFACE_PREFIXES
+
+
 class RepresentationSimilarityScorer(MemoryForwardScorer):
     """Training-free prefilter: prune group members whose calibration-batch
     activations diverge from the rest of their column, *before* any retrain
@@ -300,17 +330,27 @@ class RepresentationSimilarityScorer(MemoryForwardScorer):
     responses to a common calibration batch, keyed by the layer the param
     path belongs to (see :func:`default_layer_key`).  Records with no probe
     are conservatively kept (unknown ≠ dissimilar).
+
+    ``families``: optional {model_id: family_name} enabling the mixed-zoo
+    eligibility matrix — trunk-internal columns are first reduced to their
+    largest :func:`trunk_mergeable` class (shape coincidence across e.g. an
+    ssm mixer and a transformer projection is not op-congruence), while
+    interface layers (:data:`INTERFACE_PREFIXES`) stay cross-family and CKA
+    arbitrates as usual.
     """
 
     name = "representation-similarity"
 
     def __init__(self, activations: dict, min_similarity: float = 0.5,
-                 layer_key: Optional[Callable] = None):
+                 layer_key: Optional[Callable] = None,
+                 families: Optional[dict] = None):
         self.activations = activations
         self.min_similarity = min_similarity
         self._layer_key = layer_key or default_layer_key
+        self.families = families
         self.pruned_members = 0
         self.pruned_groups = 0
+        self.pruned_cross_family = 0
         self._sim_cache: dict = {}
         self._gram_cache: dict = {}
 
@@ -320,9 +360,33 @@ class RepresentationSimilarityScorer(MemoryForwardScorer):
                       layer_key: Optional[Callable] = None):
         """Build the scorer through the adapter contract:
         ``members = {model_id: (adapter, cfg, params)}`` plus one shared
-        calibration batch — any registered family calibrates."""
+        calibration batch — any registered family calibrates.  Family
+        eligibility (mixed zoo) comes from each adapter's ``family`` tag."""
         return cls(calibration_activations(members, batch), min_similarity,
-                   layer_key=layer_key)
+                   layer_key=layer_key,
+                   families={mid: adapter.family
+                             for mid, (adapter, _, __) in members.items()})
+
+    def _family_filter(self, col: list) -> list:
+        """Mixed-zoo eligibility: keep the largest trunk-compatible class of
+        a trunk-internal column (deterministic tie-break: the class whose
+        sorted member keys come first).  Interface layers pass through."""
+        if not self.families or all(
+                is_interface_path(r.path) for r in col):
+            return col
+        classes: list = []
+        for r in col:
+            fam = self.families.get(r.model_id)
+            for cl in classes:
+                if trunk_mergeable(fam, self.families.get(cl[0].model_id)):
+                    cl.append(r)
+                    break
+            else:
+                classes.append([r])
+        best = min(classes, key=lambda cl: (-len(cl),
+                                            sorted(r.key for r in cl)[0]))
+        self.pruned_cross_family += len(col) - len(best)
+        return best
 
     def _gram(self, record: LayerRecord):
         lk = self._layer_key(record.path)
@@ -406,6 +470,11 @@ class RepresentationSimilarityScorer(MemoryForwardScorer):
         broken: set = set()  # models whose appearance chain broke earlier
         for col in group.columns():
             col = [r for r in col if r.model_id not in broken]
+            if len(col) >= 2:
+                fcol = self._family_filter(col)
+                broken |= ({r.model_id for r in col}
+                           - {r.model_id for r in fcol})
+                col = fcol
             if len(col) < 2:
                 kept.extend(col)  # unshared appearance: keeps ranks aligned
                 continue

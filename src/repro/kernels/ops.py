@@ -32,8 +32,32 @@ def default_mode() -> str:
     return "kernel" if jax.default_backend() == "tpu" else "ref"
 
 
+# Per-op dispatch counters, incremented at TRACE time (once per compiled
+# shape, not once per device launch).  That is exactly the observable the
+# dead-kernel gates need: an op whose count stays 0 across a serving run was
+# never on any traced hot path — the ssm/griffin bug this table exists to
+# keep fixed (benchmarks/mixed_zoo.py asserts mamba_scan/rg_lru_scan > 0).
+DISPATCH_COUNTS: dict = {}
+
+
+def _count(name: str) -> None:
+    DISPATCH_COUNTS[name] = DISPATCH_COUNTS.get(name, 0) + 1
+
+
+def reset_dispatch_counts() -> None:
+    DISPATCH_COUNTS.clear()
+
+
+def dispatch_counts() -> dict:
+    """Snapshot of {op_name: trace-time dispatch count} since the last
+    reset.  Ops never dispatched are absent (benchmark gates treat missing
+    as 0)."""
+    return dict(DISPATCH_COUNTS)
+
+
 def flash_attention(q, k, v, causal=True, window=None, mode: Optional[str] = None,
                     **kw):
+    _count("flash_attention")
     mode = mode or default_mode()
     if mode == "ref":
         return _ref.flash_attention_ref(q, k, v, causal=causal, window=window)
@@ -42,6 +66,7 @@ def flash_attention(q, k, v, causal=True, window=None, mode: Optional[str] = Non
 
 
 def decode_attention(q, k_cache, v_cache, lengths, mode: Optional[str] = None, **kw):
+    _count("decode_attention")
     mode = mode or default_mode()
     if mode == "ref":
         return _ref.decode_attention_ref(q, k_cache, v_cache, lengths)
@@ -50,6 +75,7 @@ def decode_attention(q, k_cache, v_cache, lengths, mode: Optional[str] = None, *
 
 
 def rg_lru_scan(a, b, h0, mode: Optional[str] = None, **kw):
+    _count("rg_lru_scan")
     mode = mode or default_mode()
     if mode == "ref":
         return _ref.rg_lru_ref(a, b, h0)
@@ -57,6 +83,7 @@ def rg_lru_scan(a, b, h0, mode: Optional[str] = None, **kw):
 
 
 def mamba_scan(dt, dtx, Bmat, Cmat, A, h0, mode: Optional[str] = None, **kw):
+    _count("mamba_scan")
     mode = mode or default_mode()
     if mode == "ref":
         return _ref.mamba_scan_ref(dt, dtx, Bmat, Cmat, A, h0)
@@ -65,6 +92,7 @@ def mamba_scan(dt, dtx, Bmat, Cmat, A, h0, mode: Optional[str] = None, **kw):
 
 
 def page_gather(pool, page_table, mode: Optional[str] = None, **kw):
+    _count("page_gather")
     mode = mode or default_mode()
     if mode == "ref":
         return _ref.page_gather_ref(pool, page_table)
@@ -77,6 +105,7 @@ def bank_matmul(x, w, b=None, mode: Optional[str] = None, **kw):
     suffix fan-out of a merged serving group (DESIGN.md S2).  The ref oracle
     is an unrolled loop of the per-member contraction, so ref-mode serving
     stays bitwise identical to the per-member path."""
+    _count("bank_matmul")
     mode = mode or default_mode()
     if mode == "ref":
         return _ref.bank_matmul_ref(x, w, b)

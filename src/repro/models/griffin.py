@@ -23,8 +23,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.distributed.sharding import constrain
+from repro.kernels import ops as kops
 from repro.models import layers as L
 from repro.models import transformer as T
+from repro.utils.tree import flatten_paths
 
 _RGLRU_C = 8.0
 
@@ -192,9 +194,15 @@ def _scan_diag(a: jax.Array, b: jax.Array, h0: jax.Array, chunk: int,
     a, b: (B,S,d) float32; h0: (B,d).  Returns (h_all, h_last)."""
     B, S, d = a.shape
     chunk = min(chunk, S)
-    if S % chunk != 0:
-        chunk = S
-    nc = S // chunk
+    pad = (-S) % chunk
+    if pad:
+        # Identity-padded tail steps (a=1 carries h through, b=0 injects
+        # nothing) keep the chunked live-memory bound for ragged S instead
+        # of degenerating to one whole-sequence chunk; h_last is exact.
+        a = jnp.pad(a, [(0, 0), (0, pad), (0, 0)], constant_values=1.0)
+        b = jnp.pad(b, [(0, 0), (0, pad), (0, 0)])
+    Sp = S + pad
+    nc = Sp // chunk
     a_c = a.reshape(B, nc, chunk, d).transpose(1, 0, 2, 3)
     b_c = b.reshape(B, nc, chunk, d).transpose(1, 0, 2, 3)
 
@@ -217,24 +225,54 @@ def _scan_diag(a: jax.Array, b: jax.Array, h0: jax.Array, chunk: int,
         h_last, h_chunks = h, jnp.stack(hs)
     else:
         h_last, h_chunks = jax.lax.scan(body, h0, (a_c, b_c))
-    return h_chunks.transpose(1, 0, 2, 3).reshape(B, S, d), h_last
+    return h_chunks.transpose(1, 0, 2, 3).reshape(B, Sp, d)[:, :S], h_last
 
 
-def _recurrent_mixer(cfg: GriffinConfig, p: dict, x: jax.Array, state: Optional[dict]):
+def _run_scan_diag(cfg: GriffinConfig, a, b, h0):
+    """Route the RG-LRU recurrence through the ``kernels.ops`` dispatch seam
+    so ``REPRO_KERNEL_MODE`` governs this hot path.  Ragged sequence lengths
+    pad with identity steps (a=1, b=0 — see :func:`_scan_diag`) up to the
+    next chunk multiple and slice back; the dry-run cost probe keeps the
+    private python-loop scan for its unrolled HLO."""
+    if cfg.probe_unroll:
+        # repro: allow[A103] dry-run cost probe needs python-unrolled chunk HLO
+        return _scan_diag(a, b, h0, cfg.chunk, unroll=True)
+    B, S, d = a.shape
+    chunk = min(cfg.chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        a = jnp.pad(a, [(0, 0), (0, pad), (0, 0)], constant_values=1.0)
+        b = jnp.pad(b, [(0, 0), (0, pad), (0, 0)])
+    h_all, h_last = kops.rg_lru_scan(a, b, h0, chunk=chunk)
+    return h_all[:, :S], h_last
+
+
+def _recurrent_mixer(cfg: GriffinConfig, p: dict, x: jax.Array, state: Optional[dict],
+                     taps: Optional[dict] = None, tap_path: str = ""):
     """Griffin recurrent block. x (B,S,d) -> (y, new_state)."""
     B, S, _ = x.shape
     xb = L.dense(x, p["in_x"]["w"])  # (B,S,dr) recurrent branch
+    if taps is not None:
+        taps[tap_path + "/in_x"] = xb
     gate = jax.nn.gelu(L.dense(x, p["in_gate"]["w"]).astype(jnp.float32))
+    if taps is not None:
+        taps[tap_path + "/in_gate"] = gate
     xb = constrain(xb, "batch", "seq_act", "inner")
     conv_hist = state["conv"] if state is not None else None
     from repro.models.ssm import _conv1d  # shared depthwise causal conv
 
     xc, new_conv = _conv1d(xb, p["conv"]["w"], p["conv"]["b"], conv_hist)
+    if taps is not None:
+        taps[tap_path + "/conv"] = xc
     a, b = _rglru_coeffs(p["rglru"], xc)
     h0 = state["h"] if state is not None else jnp.zeros((B, cfg.d_rnn), jnp.float32)
-    h_all, h_last = _scan_diag(a, b, h0, cfg.chunk, unroll=cfg.probe_unroll)
+    h_all, h_last = _run_scan_diag(cfg, a, b, h0)
+    if taps is not None:
+        taps[tap_path + "/rglru"] = h_all
     y = (h_all * gate).astype(x.dtype)
     out = L.dense(y, p["out_proj"]["w"])
+    if taps is not None:
+        taps[tap_path + "/out_proj"] = out
     return out, {"h": h_last, "conv": new_conv}
 
 
@@ -243,7 +281,8 @@ def _recurrent_mixer(cfg: GriffinConfig, p: dict, x: jax.Array, state: Optional[
 # ---------------------------------------------------------------------------
 
 
-def _attn_full(cfg: GriffinConfig, p: dict, x: jax.Array, positions: jax.Array):
+def _attn_full(cfg: GriffinConfig, p: dict, x: jax.Array, positions: jax.Array,
+               std_positions: bool = False):
     B, S, _ = x.shape
     Hq, Hkv, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     q = L.dense(x, p["wq"]).reshape(B, S, Hq, D)
@@ -252,12 +291,19 @@ def _attn_full(cfg: GriffinConfig, p: dict, x: jax.Array, positions: jax.Array):
     q = L.apply_rope(q, positions, cfg.rope_theta, D)
     k = L.apply_rope(k, positions, cfg.rope_theta, D)
     q = constrain(q, "batch", "seq", "heads", None)
-    attn = L.blocked_causal_attention(
-        q, k, v, positions, window=cfg.window,
-        # probe mode unrolls blocks in python: keep the count low
-        block_q=4096 if cfg.probe_unroll else 1024,
-        unroll=cfg.probe_unroll,
-    )
+    if std_positions and not cfg.probe_unroll:
+        # standard causal layout: the sliding-window Pallas flash kernel
+        # serves the local-attention hot path (PR 4's seam, mode-governed)
+        attn = kops.flash_attention(q, k, v, causal=True, window=cfg.window)
+    else:
+        # repro: allow[A103] packed/offset positions and the dry-run cost
+        # probe need the masked jnp fallback (kernel assumes 0..S-1 layout)
+        attn = L.blocked_causal_attention(
+            q, k, v, positions, window=cfg.window,
+            # probe mode unrolls blocks in python: keep the count low
+            block_q=4096 if cfg.probe_unroll else 1024,
+            unroll=cfg.probe_unroll,
+        )
     return L.dense(attn.reshape(B, S, -1), p["wo"])
 
 
@@ -301,34 +347,60 @@ def _attn_decode(cfg: GriffinConfig, p: dict, cache_l: dict, x: jax.Array,
 # ---------------------------------------------------------------------------
 
 
-def _layer(cfg: GriffinConfig, kind: str, p: dict, x: jax.Array, positions: jax.Array):
+def _layer(cfg: GriffinConfig, kind: str, p: dict, x: jax.Array, positions: jax.Array,
+           std_positions: bool = False,
+           taps: Optional[dict] = None, tap_path: str = ""):
     h = L.apply_norm(cfg.norm, x, p["ln1"])
+    if taps is not None:
+        taps[tap_path + "/ln1"] = h
     if kind == "rec":
-        y, _ = _recurrent_mixer(cfg, p["rec"], h, None)
+        y, _ = _recurrent_mixer(cfg, p["rec"], h, None, taps=taps,
+                                tap_path=tap_path + "/rec")
     else:
-        y = _attn_full(cfg, p["attn"], h, positions)
+        y = _attn_full(cfg, p["attn"], h, positions, std_positions=std_positions)
+        if taps is not None:
+            taps[tap_path + "/attn"] = y
     x = x + y
     h = L.apply_norm(cfg.norm, x, p["ln2"])
-    x = x + L.ffn(h, p["mlp"], act=cfg.act, gated=cfg.gated_ffn)
+    if taps is not None:
+        taps[tap_path + "/ln2"] = h
+    f = L.ffn(h, p["mlp"], act=cfg.act, gated=cfg.gated_ffn)
+    if taps is not None:
+        taps[tap_path + "/mlp"] = f
+    x = x + f
     return constrain(x, "batch", "seq_act", "embed")
 
 
-def _repeat_fwd(cfg: GriffinConfig, p_rep: dict, x: jax.Array, positions: jax.Array):
+def _repeat_fwd(cfg: GriffinConfig, p_rep: dict, x: jax.Array, positions: jax.Array,
+                std_positions: bool = False,
+                taps: Optional[dict] = None, tap_path: str = ""):
     for i, kind in enumerate(cfg.pattern):
-        x = _layer(cfg, kind, p_rep[f"{i}_{kind}"], x, positions)
+        x = _layer(cfg, kind, p_rep[f"{i}_{kind}"], x, positions,
+                   std_positions=std_positions, taps=taps,
+                   tap_path=f"{tap_path}/{i}_{kind}")
     return x
 
 
-def forward(cfg: GriffinConfig, params: dict, tokens: jax.Array,
-            positions: Optional[jax.Array] = None) -> jax.Array:
+def trunk(cfg: GriffinConfig, params: dict, tokens: jax.Array,
+          positions: Optional[jax.Array] = None,
+          taps: Optional[dict] = None) -> jax.Array:
+    """Embedding + griffin repeats — the mergeable *prefix*.  Returns
+    pre-final-norm hidden states (B, S, d); :func:`forward` IS
+    ``head(trunk(x))``, so the serving split is bitwise by construction.
+    ``taps`` need ``scan_layers=False``."""
     B, S = tokens.shape
+    std = positions is None
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
     x = L.embed(tokens, params["embed"]["table"])
     x = x * jnp.sqrt(jnp.asarray(cfg.d_model, x.dtype))  # gemma-style scaling
     x = constrain(x, "batch", "seq_act", "embed")
+    if taps is not None:
+        if cfg.scan_layers:
+            raise ValueError("calibration taps need scan_layers=False")
+        taps["embed"] = x
 
-    rep = lambda p, h: _repeat_fwd(cfg, p, h, positions)
+    rep = lambda p, h: _repeat_fwd(cfg, p, h, positions, std_positions=std)
     if cfg.remat_policy == "full":
         rep = jax.checkpoint(rep)
     elif cfg.remat_policy == "dots":
@@ -339,16 +411,90 @@ def forward(cfg: GriffinConfig, params: dict, tokens: jax.Array,
         x, _ = jax.lax.scan(body, x, params["repeats"])
     else:
         for r in range(cfg.n_repeats):
-            x = rep(params["repeats"][str(r)], x)
+            if taps is None:
+                x = rep(params["repeats"][str(r)], x)
+            else:
+                x = _repeat_fwd(cfg, params["repeats"][str(r)], x, positions,
+                                std_positions=std, taps=taps,
+                                tap_path=f"repeats/{r}")
+    return x
 
+
+def head(cfg: GriffinConfig, params: dict, x: jax.Array,
+         taps: Optional[dict] = None) -> jax.Array:
+    """Final norm + softcapped unembedding — the private *suffix* fan-out."""
     x = L.apply_norm(cfg.norm, x, params["final_norm"])
+    if taps is not None and params["final_norm"]:
+        taps["final_norm"] = x
     if cfg.tie_embeddings:
         logits = L.unembed(x, params["embed"]["table"], transpose=True)
     else:
         logits = L.unembed(x, params["lm_head"]["w"], transpose=False)
     if cfg.logit_softcap is not None:
         logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
-    return constrain(logits, "batch", "seq_act", "vocab")
+    logits = constrain(logits, "batch", "seq_act", "vocab")
+    if taps is not None and not cfg.tie_embeddings:
+        taps["lm_head"] = logits
+    return logits
+
+
+def forward(cfg: GriffinConfig, params: dict, tokens: jax.Array,
+            positions: Optional[jax.Array] = None) -> jax.Array:
+    return head(cfg, params, trunk(cfg, params, tokens, positions))
+
+
+def trunk_paths(params: dict) -> frozenset:
+    """Flat param paths read by :func:`trunk`."""
+    return frozenset(p for p in flatten_paths(params)
+                     if not p.startswith(("final_norm/", "lm_head/")))
+
+
+def head_paths(params: dict, tied: bool = False) -> frozenset:
+    """Flat param paths read by :func:`head`."""
+    out = frozenset(p for p in flatten_paths(params)
+                    if p.startswith(("final_norm/", "lm_head/")))
+    if tied:
+        out = out | {"embed/table"}
+    return out
+
+
+def bank_head(cfg: GriffinConfig, bank_params: dict, x: jax.Array,
+              mode: Optional[str] = None) -> jax.Array:
+    """Every private head of a merged griffin group in ONE dispatch
+    (DESIGN.md S2); ``ref`` mode unrolls per-member heads (bitwise vs the
+    per-member path), other modes run the banked norm + one
+    ``ops.bank_matmul`` + softcap.  Tied configs are not banked."""
+    n_bank = jax.tree_util.tree_leaves(bank_params)[0].shape[0]
+    mode = mode or kops.default_mode()
+    if mode == "ref":
+        members = [jax.tree_util.tree_map(lambda l: l[i], bank_params)
+                   for i in range(n_bank)]
+        return jnp.stack([head(cfg, m, x) for m in members])
+    if cfg.tie_embeddings:
+        raise ValueError("tied-embedding heads have no bank path")
+    fn = bank_params.get("final_norm") or {}
+    if fn:
+        xn = jax.vmap(lambda p: L.apply_norm(cfg.norm, x, p))(fn)
+    else:
+        xn = jnp.broadcast_to(L.apply_norm(cfg.norm, x, fn),
+                              (n_bank,) + x.shape)
+    B, S, d = x.shape
+    logits = kops.bank_matmul(xn.reshape(n_bank, B * S, d),
+                              bank_params["lm_head"]["w"], mode=mode)
+    logits = logits.reshape(n_bank, B, S, -1)
+    if cfg.logit_softcap is not None:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return logits
+
+
+def layer_activations(cfg: GriffinConfig, params: dict,
+                      tokens: jax.Array) -> dict:
+    """Calibration-batch activations keyed by param-path prefix
+    (``core.policy.default_layer_key``).  Non-scan configs only."""
+    taps: dict = {}
+    x = trunk(cfg, params, tokens, taps=taps)
+    head(cfg, params, x, taps=taps)
+    return {k: np.asarray(v) for k, v in taps.items()}
 
 
 def loss_fn(cfg: GriffinConfig, params: dict, batch: dict) -> jax.Array:
@@ -432,3 +578,135 @@ def decode_step(cfg: GriffinConfig, params: dict, cache: dict, tokens: jax.Array
 def prefill(cfg: GriffinConfig, params: dict, tokens: jax.Array, max_len: int):
     cache = init_cache(cfg, tokens.shape[0], max_len)
     return decode_step(cfg, params, cache, tokens)
+
+
+# ---------------------------------------------------------------------------
+# Paged decode (DESIGN.md D1): O(window) state per request in the pool
+# ---------------------------------------------------------------------------
+
+
+def init_state_pool(cfg: GriffinConfig, num_pages: int, page_size: int,
+                    dtype=None) -> dict:
+    """Paged pool for :class:`serving.decode.PagedKVPool`: per-layer-kind
+    dicts under "k"/"v" so the decode loop's pool plumbing stays
+    family-agnostic.  Griffin state is O(window) per request — rec layers
+    carry (h, conv), attn layers a ``window``-slot ring buffer — so, like
+    the mamba pool, a request's state lives wholly in its FIRST page slot
+    (``tables[:, 0]``).  The ring always has the full ``cfg.window`` slots:
+    bitwise parity with :func:`init_cache` (W = min(window, max_len))
+    therefore needs ``window <= max_len`` — the adapter's decode split
+    enforces that."""
+    del page_size
+    dtype = dtype or cfg.dtype
+    R, W, Hs = cfg.n_repeats, cfg.window, cfg.kv_stored_heads
+    k, v = {}, {}
+    for i, kind in enumerate(cfg.pattern):
+        key = f"{i}_{kind}"
+        if kind == "rec":
+            k[key] = jnp.zeros((R, num_pages, cfg.d_rnn), jnp.float32)
+            v[key] = jnp.zeros((R, num_pages, cfg.conv_width - 1, cfg.d_rnn),
+                               dtype)
+        else:
+            k[key] = jnp.zeros((R, num_pages, W, Hs, cfg.head_dim), dtype)
+            v[key] = jnp.zeros((R, num_pages, W, Hs, cfg.head_dim), dtype)
+    return {"k": k, "v": v}
+
+
+def paged_trunk_step(cfg: GriffinConfig, params: dict, pool: dict,
+                     tables: jax.Array, lengths: jax.Array,
+                     tokens: jax.Array):
+    """One decode step over the paged pool: gather each row's state from its
+    page-0 slot, run the SAME per-layer ops as :func:`decode_step` (with
+    per-row positions), scatter back.  Rows with ``lengths == 0`` read exact
+    zeros and the full-state write-back clears the recycled slot, so every
+    step matches the unpaged zero-initialised cache bitwise.
+
+    tokens (B,) int32 -> (hidden (B, 1, d), new_pool)."""
+    tables = tables.astype(jnp.int32)
+    lengths = lengths.astype(jnp.int32)
+    sid = tables[:, 0]
+    fresh = lengths == 0
+    positions = lengths[:, None]  # (B, 1)
+
+    def gather(a):
+        g = a[:, sid]  # (R, B, ...)
+        mask = fresh.reshape((1, -1) + (1,) * (g.ndim - 2))
+        return jnp.where(mask, jnp.zeros_like(g), g)
+
+    layer_state = {}
+    for i, kind in enumerate(cfg.pattern):
+        key = f"{i}_{kind}"
+        if kind == "rec":
+            layer_state[key] = {"h": gather(pool["k"][key]),
+                                "conv": gather(pool["v"][key])}
+        else:
+            layer_state[key] = {"k": gather(pool["k"][key]),
+                                "v": gather(pool["v"][key])}
+
+    x = L.embed(tokens[:, None], params["embed"]["table"])
+    x = x * jnp.sqrt(jnp.asarray(cfg.d_model, x.dtype))
+
+    def repeat_step(h, xs):
+        p_rep, st_rep = xs
+        new_st = {}
+        for i, kind in enumerate(cfg.pattern):
+            key = f"{i}_{kind}"
+            p = p_rep[key]
+            hh = L.apply_norm(cfg.norm, h, p["ln1"])
+            if kind == "rec":
+                y, nst = _recurrent_mixer(cfg, p["rec"], hh, st_rep[key])
+            else:
+                y, nst = _attn_decode(cfg, p["attn"], st_rep[key], hh,
+                                      positions, lengths)
+            h = h + y
+            hh = L.apply_norm(cfg.norm, h, p["ln2"])
+            h = h + L.ffn(hh, p["mlp"], act=cfg.act, gated=cfg.gated_ffn)
+            new_st[key] = nst
+        return h, new_st
+
+    if cfg.scan_layers:
+        x, new_states = jax.lax.scan(repeat_step, x,
+                                     (params["repeats"], layer_state))
+    else:
+        outs = []
+        for r in range(cfg.n_repeats):
+            st = jax.tree_util.tree_map(lambda a: a[r], layer_state)
+            x, nst = repeat_step(x, (params["repeats"][str(r)], st))
+            outs.append(nst)
+        new_states = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
+
+    # duplicate row ids (padded partial groups) scatter identical values
+    new_k, new_v = dict(pool["k"]), dict(pool["v"])
+    for i, kind in enumerate(cfg.pattern):
+        key = f"{i}_{kind}"
+        sub_k = "h" if kind == "rec" else "k"
+        sub_v = "conv" if kind == "rec" else "v"
+        new_k[key] = pool["k"][key].at[:, sid].set(
+            new_states[key][sub_k].astype(pool["k"][key].dtype))
+        new_v[key] = pool["v"][key].at[:, sid].set(
+            new_states[key][sub_v].astype(pool["v"][key].dtype))
+    return x, {"k": new_k, "v": new_v}
+
+
+def paged_prefill_chunk(cfg: GriffinConfig, params: dict, pool: dict,
+                        tables: jax.Array, lengths: jax.Array,
+                        tokens: jax.Array):
+    """Chunked prefill, python-unrolled over :func:`paged_trunk_step` so it
+    is bitwise the token-by-token path.  tokens (B, C) -> ((B, C, d), pool)."""
+    C = tokens.shape[1]
+    lengths = lengths.astype(jnp.int32)
+    hs = []
+    for c in range(C):
+        h, pool = paged_trunk_step(cfg, params, pool, tables,
+                                   lengths + jnp.int32(c), tokens[:, c])
+        hs.append(h)
+    return jnp.concatenate(hs, axis=1), pool
+
+
+def paged_decode_step(cfg: GriffinConfig, params: dict, pool: dict,
+                      tables: jax.Array, lengths: jax.Array,
+                      tokens: jax.Array):
+    """Full paged step for singleton (unmerged) programs: trunk + head."""
+    hidden, new_pool = paged_trunk_step(cfg, params, pool, tables, lengths,
+                                        tokens)
+    return head(cfg, params, hidden), new_pool

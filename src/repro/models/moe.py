@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.distributed.sharding import constrain
+from repro.kernels import ops as kops
 from repro.models import layers as L
 from repro.models import transformer as T
 
@@ -145,7 +146,8 @@ def route(cfg: MoELMConfig, router_w: jax.Array, x: jax.Array):
     return dispatch, combine, aux
 
 
-def moe_ffn(cfg: MoELMConfig, p: dict, x: jax.Array):
+def moe_ffn(cfg: MoELMConfig, p: dict, x: jax.Array,
+            taps: Optional[dict] = None, tap_path: str = ""):
     """x: (B, S, d) -> (y, aux_loss)."""
     B, S, d = x.shape
     N = B * S
@@ -154,6 +156,10 @@ def moe_ffn(cfg: MoELMConfig, p: dict, x: jax.Array):
     G = N // s
     xg = x.reshape(G, s, d)
     dispatch, combine, aux = route(cfg, p["router"]["w"], xg)
+    if taps is not None:
+        # calibration probe of the routing decision itself, reshaped back to
+        # a batch-leading layout for the CKA scorer
+        taps[tap_path + "/router"] = combine.reshape(B, S, cfg.n_experts, -1)
     dispatch = constrain(dispatch.astype(x.dtype), "moe_group", None, "expert", None)
     combine = constrain(combine.astype(jnp.float32), "moe_group", None, "expert", None)
 
@@ -169,8 +175,13 @@ def moe_ffn(cfg: MoELMConfig, p: dict, x: jax.Array):
 
     y = jnp.einsum("gsec,egcd->gsd", combine.astype(x.dtype), eout, preferred_element_type=jnp.float32)
     y = y.astype(x.dtype).reshape(B, S, d)
+    if taps is not None:
+        taps[tap_path + "/experts"] = y
     if cfg.n_shared_experts > 0:
-        y = y + L.ffn(x, p["shared"], act=cfg.act, gated=True)
+        sh = L.ffn(x, p["shared"], act=cfg.act, gated=True)
+        if taps is not None:
+            taps[tap_path + "/shared"] = sh
+        y = y + sh
     return y, aux
 
 
@@ -179,37 +190,65 @@ def moe_ffn(cfg: MoELMConfig, p: dict, x: jax.Array):
 # ---------------------------------------------------------------------------
 
 
-def _block(cfg: MoELMConfig, p: dict, x: jax.Array, positions: jax.Array, dense_ffn: bool):
+def _block(cfg: MoELMConfig, p: dict, x: jax.Array, positions: jax.Array, dense_ffn: bool,
+           std_positions: bool = False,
+           taps: Optional[dict] = None, tap_prefix: str = ""):
     h = L.apply_norm(cfg.norm, x, p["ln1"])
+    if taps is not None:
+        taps[tap_prefix + "ln1"] = h
     q, k, v = T._qkv(cfg, p["attn"], h, positions)
     q = constrain(q, "batch", "seq", "heads", None)
     k = constrain(k, "batch", "seq", "kv_heads", None)
     v = constrain(v, "batch", "seq", "kv_heads", None)
-    mask = L.attention_mask(positions, positions, causal=True, window=cfg.window)
-    attn = L.gqa_attention(q, k, v, mask)
-    x = x + L.dense(attn.reshape(x.shape[0], x.shape[1], -1), p["attn"]["wo"])
+    if std_positions and not cfg.probe_unroll:
+        # standard causal layout: the Pallas flash kernel serves this hot
+        # path, mode-governed (mirrors transformer._block)
+        attn = kops.flash_attention(q, k, v, causal=True, window=cfg.window)
+    else:
+        # packed/offset positions and the dry-run cost probe need the masked
+        # jnp oracle (the kernel assumes a 0..S-1 layout)
+        mask = L.attention_mask(positions, positions, causal=True, window=cfg.window)
+        attn = L.gqa_attention(q, k, v, mask)
+    attn_out = L.dense(attn.reshape(x.shape[0], x.shape[1], -1), p["attn"]["wo"])
+    if taps is not None:
+        taps[tap_prefix + "attn"] = attn_out
+    x = x + attn_out
     h = L.apply_norm(cfg.norm, x, p["ln2"])
+    if taps is not None:
+        taps[tap_prefix + "ln2"] = h
     if dense_ffn:
-        return x + L.ffn(h, p["mlp"], act=cfg.act, gated=cfg.gated_ffn), 0.0
-    y, aux = moe_ffn(cfg, p["moe"], h)
+        f = L.ffn(h, p["mlp"], act=cfg.act, gated=cfg.gated_ffn)
+        if taps is not None:
+            taps[tap_prefix + "mlp"] = f
+        return x + f, 0.0
+    y, aux = moe_ffn(cfg, p["moe"], h, taps=taps, tap_path=tap_prefix + "moe")
     return x + y, aux
 
 
-def forward(cfg: MoELMConfig, params: dict, tokens: jax.Array,
-            positions: Optional[jax.Array] = None):
-    """Returns (logits, aux_loss)."""
+def _stack(cfg: MoELMConfig, params: dict, tokens: jax.Array,
+           positions: Optional[jax.Array] = None,
+           taps: Optional[dict] = None):
+    """Embedding + dense/moe blocks.  Returns (hidden (B,S,d), aux_total)."""
     B, S = tokens.shape
+    std = positions is None
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
     x = L.embed(tokens, params["embed"]["table"])
     x = constrain(x, "batch", "seq_act", "embed")
+    if taps is not None:
+        if cfg.scan_layers:
+            raise ValueError("calibration taps need scan_layers=False")
+        taps["embed"] = x
     aux_total = jnp.zeros((), jnp.float32)
 
     for i in range(cfg.first_dense_layers):
-        x, _ = _block(cfg, params["dense_blocks"][str(i)], x, positions, dense_ffn=True)
+        x, _ = _block(cfg, params["dense_blocks"][str(i)], x, positions,
+                      dense_ffn=True, std_positions=std, taps=taps,
+                      tap_prefix=f"dense_blocks/{i}/")
 
     block = T._maybe_remat(
-        cfg, lambda p, h: _block(cfg, p, h, positions, dense_ffn=False)
+        cfg, lambda p, h: _block(cfg, p, h, positions, dense_ffn=False,
+                                 std_positions=std)
     )
     if cfg.scan_layers:
         def body(carry, p):
@@ -220,15 +259,53 @@ def forward(cfg: MoELMConfig, params: dict, tokens: jax.Array,
     else:
         n_moe = cfg.n_layers - cfg.first_dense_layers
         for i in range(n_moe):
-            x, a = block(params["blocks"][str(i)], x)
+            if taps is None:
+                x, a = block(params["blocks"][str(i)], x)
+            else:
+                x, a = _block(cfg, params["blocks"][str(i)], x, positions,
+                              dense_ffn=False, std_positions=std, taps=taps,
+                              tap_prefix=f"blocks/{i}/")
             aux_total = aux_total + a
+    return x, aux_total
 
-    x = L.apply_norm(cfg.norm, x, params["final_norm"])
-    if cfg.tie_embeddings:
-        logits = L.unembed(x, params["embed"]["table"], transpose=True)
-    else:
-        logits = L.unembed(x, params["lm_head"]["w"], transpose=False)
-    return constrain(logits, "batch", "seq_act", "vocab"), aux_total
+
+def trunk(cfg: MoELMConfig, params: dict, tokens: jax.Array,
+          positions: Optional[jax.Array] = None,
+          taps: Optional[dict] = None) -> jax.Array:
+    """Serving *prefix*: :func:`_stack` with the router aux-loss discarded
+    (inference never consumes it; :func:`loss_fn` recomputes via
+    :func:`forward`).  ``head(trunk(x))`` is bitwise ``forward(x)[0]``."""
+    return _stack(cfg, params, tokens, positions, taps=taps)[0]
+
+
+def head(cfg: MoELMConfig, params: dict, x: jax.Array,
+         taps: Optional[dict] = None) -> jax.Array:
+    """Final norm + unembedding — identical op sequence to the dense LM head
+    (MoE-ness lives entirely in the trunk), so the transformer suffix and its
+    bank path are reused verbatim."""
+    return T.head(cfg, params, x, taps=taps)
+
+
+def bank_head(cfg: MoELMConfig, bank_params: dict, x: jax.Array,
+              mode: Optional[str] = None) -> jax.Array:
+    """Grouped-GEMM fan-out of the private heads (see transformer.bank_head)."""
+    return T.bank_head(cfg, bank_params, x, mode=mode)
+
+
+def forward(cfg: MoELMConfig, params: dict, tokens: jax.Array,
+            positions: Optional[jax.Array] = None):
+    """Returns (logits, aux_loss)."""
+    x, aux_total = _stack(cfg, params, tokens, positions)
+    return head(cfg, params, x), aux_total
+
+
+def layer_activations(cfg: MoELMConfig, params: dict, tokens: jax.Array) -> dict:
+    """Calibration-batch activations keyed by param-path prefix
+    (``core.policy.default_layer_key``).  Non-scan configs only."""
+    taps: dict = {}
+    x = trunk(cfg, params, tokens, taps=taps)
+    head(cfg, params, x, taps=taps)
+    return {k: np.asarray(v) for k, v in taps.items()}
 
 
 def loss_fn(cfg: MoELMConfig, params: dict, batch: dict) -> jax.Array:
@@ -268,11 +345,19 @@ def _block_decode(cfg: MoELMConfig, p: dict, cache_l: dict, x, positions, length
     ck, cv = T._write_kv(cache_l["k"], cache_l["v"], k, v, length, cfg.kv_repl)
     ck = constrain(ck, "batch", "kv_seq", "kv_heads_stored", None)
     cv = constrain(cv, "batch", "kv_seq", "kv_heads_stored", None)
-    Smax = ck.shape[1]
-    kv_positions = jnp.broadcast_to(jnp.arange(Smax, dtype=jnp.int32), (B, Smax))
-    mask = L.attention_mask(positions, kv_positions, causal=True, window=cfg.window)
-    mask = mask & (kv_positions < (length + Sn))[:, None, None, :]
-    attn = L.gqa_attention(q, ck, cv, mask)
+    q = constrain(q, "batch", None, "heads", None)
+    if Sn == 1 and cfg.window is None:
+        # one-token AR decode goes through the public ops layer so
+        # REPRO_KERNEL_MODE governs this hot path (mirrors
+        # transformer._block_decode); length may be scalar or per-row (B,)
+        lengths = jnp.broadcast_to(length + 1, (B,)).astype(jnp.int32)
+        attn = kops.decode_attention(q[:, 0], ck, cv, lengths)[:, None]
+    else:
+        Smax = ck.shape[1]
+        kv_positions = jnp.broadcast_to(jnp.arange(Smax, dtype=jnp.int32), (B, Smax))
+        mask = L.attention_mask(positions, kv_positions, causal=True, window=cfg.window)
+        mask = mask & (kv_positions < (length + Sn))[:, None, None, :]
+        attn = L.gqa_attention(q, ck, cv, mask)
     x = x + L.dense(attn.reshape(B, Sn, -1), p["attn"]["wo"])
     h = L.apply_norm(cfg.norm, x, p["ln2"])
     if dense_ffn:
@@ -341,6 +426,8 @@ def _block_prefill(cfg: MoELMConfig, p: dict, x, positions, max_len: int,
     q = constrain(q, "batch", "seq", "heads", None)
     k = constrain(k, "batch", "seq", "kv_heads", None)
     v = constrain(v, "batch", "seq", "kv_heads", None)
+    # repro: allow[A103] prefill needs the blocked flash-analogue with its
+    # padded-KV emit layout; kernel routing lives in _block/_block_decode
     attn = L.blocked_causal_attention(
         q, k, v, positions, window=cfg.window,
         block_q=cfg.prefill_block_q, unroll=cfg.probe_unroll,
@@ -401,3 +488,125 @@ def prefill(cfg: MoELMConfig, params: dict, tokens: jax.Array, max_len: int):
     cache = {"k": kv["k"], "v": kv["v"], "length": jnp.asarray(S, jnp.int32),
              **cache_extra}
     return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# Split paths (serving prefix/suffix binding)
+# ---------------------------------------------------------------------------
+
+# The moe param tree uses the same top-level suffix layout as the dense LM
+# (final_norm/ + lm_head/, everything else trunk), so the path partitioners
+# are shared verbatim.
+trunk_paths = T.trunk_paths
+head_paths = T.head_paths
+
+
+# ---------------------------------------------------------------------------
+# Paged decode (DESIGN.md D1) — pool storage + per-request page tables
+# ---------------------------------------------------------------------------
+
+
+def init_kv_pool(cfg: MoELMConfig, num_pages: int, page_size: int,
+                 dtype=None) -> dict:
+    """Paged KV pool: k/v (L, P, page, Hs, D), moe layers only.  Paged moe
+    serving requires ``first_dense_layers == 0`` (olmoe-style; the deepseek
+    dense layer 0 would need a second pool) and per-token-independent routing
+    — the serving adapter decodes with ``group_size=1`` so each token is its
+    own routing group and capacity can never drop it."""
+    if cfg.first_dense_layers:
+        raise ValueError(
+            "moe: paged decode supports first_dense_layers=0 only "
+            f"(got {cfg.first_dense_layers})")
+    if cfg.window is not None:
+        raise ValueError("paged decode requires full attention (window=None)")
+    dtype = dtype or cfg.dtype
+    shape = (cfg.n_layers, num_pages, page_size,
+             cfg.kv_stored_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _block_decode_paged(cfg: MoELMConfig, p: dict, pool_l: dict,
+                        x: jax.Array, tables: jax.Array, lengths: jax.Array):
+    """Op-for-op the Sn==1 path of :func:`_block_decode` on the gathered
+    contiguous view (see transformer._block_decode_paged), with the moe FFN
+    tail."""
+    B, Sn, _ = x.shape
+    h = L.apply_norm(cfg.norm, x, p["ln1"])
+    q, k, v = T._qkv(cfg, p["attn"], h, lengths[:, None])
+    pk, pv = T._paged_write(pool_l["k"], pool_l["v"], k, v, tables, lengths,
+                            cfg.kv_repl)
+    ck = constrain(T._paged_view(pk, tables),
+                   "batch", "kv_seq", "kv_heads_stored", None)
+    cv = constrain(T._paged_view(pv, tables),
+                   "batch", "kv_seq", "kv_heads_stored", None)
+    q = constrain(q, "batch", None, "heads", None)
+    attn = kops.decode_attention(q[:, 0], ck, cv, lengths + 1)[:, None]
+    x = x + L.dense(attn.reshape(B, Sn, -1), p["attn"]["wo"])
+    h = L.apply_norm(cfg.norm, x, p["ln2"])
+    y, _ = moe_ffn(cfg, p["moe"], h)
+    return x + y, {"k": pk, "v": pv}
+
+
+def paged_trunk_step(cfg: MoELMConfig, params: dict, pool: dict,
+                     tables: jax.Array, lengths: jax.Array,
+                     tokens: jax.Array) -> tuple:
+    """Shared-trunk paged decode step, ONE new token per row.  tokens (B,)
+    int32; tables (B, maxp); lengths (B,).  Returns (hidden (B, 1, d),
+    new_pool).  Router aux-loss is inference-irrelevant and discarded."""
+    if cfg.window is not None:
+        raise ValueError("paged decode requires full attention (window=None)")
+    if cfg.first_dense_layers:
+        raise ValueError(
+            "moe: paged decode supports first_dense_layers=0 only "
+            f"(got {cfg.first_dense_layers})")
+    tables = tables.astype(jnp.int32)
+    lengths = lengths.astype(jnp.int32)
+    x = L.embed(tokens[:, None], params["embed"]["table"])
+    x = constrain(x, "batch", None, "embed")
+
+    if cfg.scan_layers:
+        def body(carry, p):
+            h, pk, pv, li = carry
+            pool_l = {
+                "k": jax.lax.dynamic_index_in_dim(pk, li, 0, keepdims=False),
+                "v": jax.lax.dynamic_index_in_dim(pv, li, 0, keepdims=False),
+            }
+            h, npl = _block_decode_paged(cfg, p, pool_l, h, tables, lengths)
+            pk = jax.lax.dynamic_update_index_in_dim(pk, npl["k"], li, 0)
+            pv = jax.lax.dynamic_update_index_in_dim(pv, npl["v"], li, 0)
+            return (h, pk, pv, li + 1), None
+
+        (x, pk, pv, _), _ = jax.lax.scan(
+            body, (x, pool["k"], pool["v"], jnp.int32(0)), params["blocks"])
+    else:
+        pk, pv = pool["k"], pool["v"]
+        for i in range(cfg.n_layers):
+            pool_l = {"k": pk[i], "v": pv[i]}
+            x, npl = _block_decode_paged(cfg, params["blocks"][str(i)],
+                                         pool_l, x, tables, lengths)
+            pk = pk.at[i].set(npl["k"])
+            pv = pv.at[i].set(npl["v"])
+    return x, {"k": pk, "v": pv}
+
+
+def paged_prefill_chunk(cfg: MoELMConfig, params: dict, pool: dict,
+                        tables: jax.Array, lengths: jax.Array,
+                        tokens: jax.Array) -> tuple:
+    """Chunked prompt admission: C sequential :func:`paged_trunk_step` calls
+    unrolled inside one trace (bitwise vs token-by-token by construction)."""
+    C = tokens.shape[1]
+    lengths = lengths.astype(jnp.int32)
+    hs = []
+    for c in range(C):
+        h, pool = paged_trunk_step(cfg, params, pool, tables,
+                                   lengths + jnp.int32(c), tokens[:, c])
+        hs.append(h)
+    return jnp.concatenate(hs, axis=1), pool
+
+
+def paged_decode_step(cfg: MoELMConfig, params: dict, pool: dict,
+                      tables: jax.Array, lengths: jax.Array,
+                      tokens: jax.Array) -> tuple:
+    """Paged twin of :func:`decode_step` (logits only — aux discarded)."""
+    x, pool = paged_trunk_step(cfg, params, pool, tables, lengths, tokens)
+    return head(cfg, params, x), pool

@@ -195,19 +195,40 @@ class MergeableAdapter:
     # -- model surface --------------------------------------------------------
 
     def default_config(self):
-        raise NotImplementedError
+        raise NotImplementedError(f"{self.name}: no default config bound")
 
     def init(self, cfg, key):
-        raise NotImplementedError
+        raise NotImplementedError(f"{self.name}: no init bound")
 
     def forward(self, cfg, params, x):
-        raise NotImplementedError
+        raise NotImplementedError(f"{self.name}: no forward bound")
 
     def loss(self, cfg, params, batch):
-        raise NotImplementedError
+        raise NotImplementedError(f"{self.name}: no loss bound")
+
+    def forward_batch(self, cfg, params, batch: dict):
+        """Logits for a calibration batch in the family's batch layout (see
+        module docstring).  The default covers token-only LMs; families with
+        extra inputs or tuple outputs override this, and :meth:`accuracy`
+        stays shared."""
+        out = self.forward(cfg, params, batch["tokens"])
+        return out[0] if isinstance(out, tuple) else out
 
     def accuracy(self, cfg, params, batch):
-        raise NotImplementedError
+        """Default argmax-vs-labels accuracy derived from ``forward`` — the
+        DriftMonitor tier works on every registered family without a
+        family-specific override (satellite of ISSUE 10; this used to be a
+        bare NotImplementedError)."""
+        logits = self.forward_batch(cfg, params, batch)
+        vocab = getattr(cfg, "vocab_size", None)
+        if vocab:
+            logits = logits[..., :vocab]
+        pred = jnp.argmax(logits, axis=-1)
+        correct = (pred == batch["labels"]).astype(jnp.float32)
+        mask = batch.get("mask")
+        if mask is not None:
+            return jnp.sum(correct * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        return jnp.mean(correct)
 
     # -- merge: signature extraction ------------------------------------------
 
@@ -398,7 +419,22 @@ class SmallCNNAdapter(MergeableAdapter):
                            bank_suffix=bank_suffix)
 
 
-class DenseLMAdapter(MergeableAdapter):
+class _TokenLMAdapter(MergeableAdapter):
+    """Shared plumbing for the token-in/logits-out LM adapters (dense, moe,
+    ssm, hybrid): one calibration-batch layout so CKA compares every
+    candidate's response to identical inputs, and the default
+    argmax-vs-labels accuracy applies unchanged."""
+
+    can_calibrate = True
+    can_split = True
+    can_decode = True
+
+    def calibration_batch(self, cfg, key, n: int, seq: int = 8) -> dict:
+        toks = jax.random.randint(key, (n, seq + 1), 0, cfg.vocab_size)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+class DenseLMAdapter(_TokenLMAdapter):
     """Dense decoder-only transformers.  Calibration/split need per-layer
     param paths, so those tiers require ``scan_layers=False`` configs (the
     fine-tune-variant pod scenario); records work for any config, including
@@ -406,9 +442,6 @@ class DenseLMAdapter(MergeableAdapter):
 
     name = "dense"
     family = "dense"
-    can_calibrate = True
-    can_split = True
-    can_decode = True
 
     def default_config(self):
         return transformer.DenseLMConfig(
@@ -428,15 +461,6 @@ class DenseLMAdapter(MergeableAdapter):
 
     def loss(self, cfg, params, batch):
         return transformer.loss_fn(cfg, params, batch)
-
-    def accuracy(self, cfg, params, batch):
-        logits = self.forward(cfg, params, batch["tokens"])
-        pred = jnp.argmax(logits[..., : cfg.vocab_size], axis=-1)
-        return jnp.mean((pred == batch["labels"]).astype(jnp.float32))
-
-    def calibration_batch(self, cfg, key, n: int, seq: int = 8) -> dict:
-        toks = jax.random.randint(key, (n, seq + 1), 0, cfg.vocab_size)
-        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
 
     def layer_activations(self, cfg, params, batch: dict) -> dict:
         return transformer.layer_activations(cfg, params, batch["tokens"])
@@ -504,6 +528,287 @@ class DenseLMAdapter(MergeableAdapter):
                            prefill_chunk=prefill_chunk)
 
 
+class SSMAdapter(_TokenLMAdapter):
+    """Mamba selective-state-space LMs, full merge-and-serve tier (ISSUE 10):
+    the recurrence runs through ``kernels.ops.mamba_scan``, so merged ssm
+    serving exercises the Pallas kernel under every ``REPRO_KERNEL_MODE``.
+    The decode state is dense-adjacent — per-layer ``(h (di, n), conv
+    (d_conv-1, di))`` instead of a KV ring — and lives wholly in each
+    request's FIRST page slot of the state pool."""
+
+    name = "ssm"
+    family = "ssm"
+
+    def default_config(self):
+        return ssm.MambaConfig(
+            name="tiny-mamba", n_layers=2, d_model=32, d_inner=64, d_state=8,
+            d_conv=4, dt_rank=8, vocab_size=64, vocab_multiple=32,
+            tie_embeddings=False, scan_layers=False, chunk=16,
+        )
+
+    def init(self, cfg, key):
+        return ssm.init(cfg, key)
+
+    def forward(self, cfg, params, x):
+        return ssm.head(cfg, params, ssm.trunk(cfg, params, x))
+
+    def loss(self, cfg, params, batch):
+        return ssm.loss_fn(cfg, params, batch)
+
+    def layer_activations(self, cfg, params, batch: dict) -> dict:
+        return ssm.layer_activations(cfg, params, batch["tokens"])
+
+    def _build_split(self, cfg) -> PrefixSplit:
+        ep = self.eval_params(cfg)
+        paths = ssm.trunk_paths(ep)
+
+        def prefix(params, x, _cfg=cfg):
+            return ssm.trunk(_cfg, params, x)
+
+        def suffix(params, feats, _cfg=cfg):
+            return ssm.head(_cfg, params, feats)
+
+        if cfg.tie_embeddings:
+            return PrefixSplit(prefix, suffix, paths)
+
+        def bank_suffix(bank_params, feats, _cfg=cfg):
+            return ssm.bank_head(_cfg, bank_params, feats)
+
+        return PrefixSplit(prefix, suffix, paths,
+                           suffix_paths=ssm.head_paths(ep),
+                           bank_suffix=bank_suffix)
+
+    def _build_decode_split(self, cfg) -> DecodeSplit:
+        sp = self.split(cfg)
+
+        def trunk_step(params, pool, tables, lengths, tokens, _cfg=cfg):
+            return ssm.paged_trunk_step(
+                _cfg, params, pool, tables, lengths, tokens)
+
+        def head_fn(params, hidden, _cfg=cfg):
+            return ssm.head(_cfg, params, hidden)
+
+        def step(params, pool, tables, lengths, tokens, _cfg=cfg):
+            return ssm.paged_decode_step(
+                _cfg, params, pool, tables, lengths, tokens)
+
+        def step_unpaged(params, cache, tokens, _cfg=cfg):
+            return ssm.decode_step(_cfg, params, cache, tokens)
+
+        def init_pool(num_pages, page_size, _cfg=cfg):
+            return ssm.init_state_pool(_cfg, num_pages, page_size)
+
+        def init_cache(batch, max_len, _cfg=cfg):
+            return ssm.init_cache(_cfg, batch, max_len)
+
+        bank = None
+        if sp.bank_suffix is not None:
+            def bank(bank_params, hidden, _cfg=cfg):
+                return ssm.bank_head(_cfg, bank_params, hidden)
+
+        def prefill_chunk(params, pool, tables, lengths, tokens, _cfg=cfg):
+            return ssm.paged_prefill_chunk(
+                _cfg, params, pool, tables, lengths, tokens)
+
+        return DecodeSplit(trunk_step, head_fn, step, step_unpaged,
+                           init_pool, init_cache, sp.prefix_paths,
+                           head_paths=sp.suffix_paths,
+                           head_signature=sp.suffix_signature,
+                           bank_head=bank,
+                           prefill_chunk=prefill_chunk)
+
+
+class GriffinAdapter(_TokenLMAdapter):
+    """Griffin recurrent/local-attention hybrids, full merge-and-serve tier
+    (ISSUE 10): the RG-LRU runs through ``kernels.ops.rg_lru_scan`` and the
+    local attention through ``ops.flash_attention(window=...)``.  Streaming
+    decode carries a ring-buffer KV of ``window`` slots per attention layer
+    plus the recurrent ``(h, conv)`` state."""
+
+    name = "hybrid"
+    family = "hybrid"
+
+    def default_config(self):
+        return griffin.GriffinConfig(
+            name="tiny-griffin", n_layers=3, pattern=("rec", "rec", "attn"),
+            d_model=32, d_rnn=32, n_heads=2, n_kv_heads=1, head_dim=16,
+            d_ff=64, vocab_size=64, vocab_multiple=32, window=8,
+            tie_embeddings=False, scan_layers=False, chunk=16,
+        )
+
+    def init(self, cfg, key):
+        return griffin.init(cfg, key)
+
+    def forward(self, cfg, params, x):
+        return griffin.head(cfg, params, griffin.trunk(cfg, params, x))
+
+    def loss(self, cfg, params, batch):
+        return griffin.loss_fn(cfg, params, batch)
+
+    def layer_activations(self, cfg, params, batch: dict) -> dict:
+        return griffin.layer_activations(cfg, params, batch["tokens"])
+
+    def _build_split(self, cfg) -> PrefixSplit:
+        ep = self.eval_params(cfg)
+        paths = griffin.trunk_paths(ep)
+
+        def prefix(params, x, _cfg=cfg):
+            return griffin.trunk(_cfg, params, x)
+
+        def suffix(params, feats, _cfg=cfg):
+            return griffin.head(_cfg, params, feats)
+
+        if cfg.tie_embeddings:
+            return PrefixSplit(prefix, suffix, paths)
+
+        def bank_suffix(bank_params, feats, _cfg=cfg):
+            return griffin.bank_head(_cfg, bank_params, feats)
+
+        return PrefixSplit(prefix, suffix, paths,
+                           suffix_paths=griffin.head_paths(ep),
+                           bank_suffix=bank_suffix)
+
+    def _build_decode_split(self, cfg) -> DecodeSplit:
+        sp = self.split(cfg)
+
+        def trunk_step(params, pool, tables, lengths, tokens, _cfg=cfg):
+            return griffin.paged_trunk_step(
+                _cfg, params, pool, tables, lengths, tokens)
+
+        def head_fn(params, hidden, _cfg=cfg):
+            return griffin.head(_cfg, params, hidden)
+
+        def step(params, pool, tables, lengths, tokens, _cfg=cfg):
+            return griffin.paged_decode_step(
+                _cfg, params, pool, tables, lengths, tokens)
+
+        def step_unpaged(params, cache, tokens, _cfg=cfg):
+            return griffin.decode_step(_cfg, params, cache, tokens)
+
+        def init_pool(num_pages, page_size, _cfg=cfg):
+            return griffin.init_state_pool(_cfg, num_pages, page_size)
+
+        def init_cache(batch, max_len, _cfg=cfg):
+            # the paged pool rings exactly `window` KV slots per request, the
+            # unpaged cache min(window, max_len) — bitwise replay parity
+            # (serving.decode.verify_bitwise) therefore needs the full ring
+            if _cfg.window > max_len:
+                raise ValueError(
+                    f"hybrid: streaming decode needs window <= max_len "
+                    f"(window={_cfg.window}, max_len={max_len})")
+            return griffin.init_cache(_cfg, batch, max_len)
+
+        bank = None
+        if sp.bank_suffix is not None:
+            def bank(bank_params, hidden, _cfg=cfg):
+                return griffin.bank_head(_cfg, bank_params, hidden)
+
+        def prefill_chunk(params, pool, tables, lengths, tokens, _cfg=cfg):
+            return griffin.paged_prefill_chunk(
+                _cfg, params, pool, tables, lengths, tokens)
+
+        return DecodeSplit(trunk_step, head_fn, step, step_unpaged,
+                           init_pool, init_cache, sp.prefix_paths,
+                           head_paths=sp.suffix_paths,
+                           head_signature=sp.suffix_signature,
+                           bank_head=bank,
+                           prefill_chunk=prefill_chunk)
+
+
+class MoEAdapter(_TokenLMAdapter):
+    """Mixture-of-experts LMs, full merge-and-serve tier (ISSUE 10).  The
+    serving surfaces discard the router aux-loss (``forward`` here returns
+    logits only; ``loss`` recomputes the aux term through the family loss).
+    Streaming decode rebinds ``group_size=1`` so routing is per-token
+    independent — each token is its own capacity group and can never be
+    dropped, which is what makes paged and unpaged decode bitwise equal."""
+
+    name = "moe"
+    family = "moe"
+
+    def default_config(self):
+        return moe.MoELMConfig(
+            name="tiny-moe", n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+            head_dim=16, vocab_size=64, vocab_multiple=32, n_experts=4,
+            top_k=2, n_shared_experts=1, d_ff_expert=16, d_ff_dense=64,
+            first_dense_layers=0, group_size=1, tie_embeddings=False,
+            scan_layers=False,
+        )
+
+    def init(self, cfg, key):
+        return moe.init(cfg, key)
+
+    def forward(self, cfg, params, x):
+        return moe.head(cfg, params, moe.trunk(cfg, params, x))
+
+    def loss(self, cfg, params, batch):
+        return moe.loss_fn(cfg, params, batch)
+
+    def layer_activations(self, cfg, params, batch: dict) -> dict:
+        return moe.layer_activations(cfg, params, batch["tokens"])
+
+    def _build_split(self, cfg) -> PrefixSplit:
+        ep = self.eval_params(cfg)
+        paths = moe.trunk_paths(ep)
+
+        def prefix(params, x, _cfg=cfg):
+            return moe.trunk(_cfg, params, x)
+
+        def suffix(params, feats, _cfg=cfg):
+            return moe.head(_cfg, params, feats)
+
+        if cfg.tie_embeddings:
+            return PrefixSplit(prefix, suffix, paths)
+
+        def bank_suffix(bank_params, feats, _cfg=cfg):
+            return moe.bank_head(_cfg, bank_params, feats)
+
+        return PrefixSplit(prefix, suffix, paths,
+                           suffix_paths=moe.head_paths(ep),
+                           bank_suffix=bank_suffix)
+
+    def _build_decode_split(self, cfg) -> DecodeSplit:
+        sp = self.split(cfg)
+        # per-token-independent routing for decode (see class docstring)
+        dcfg = dataclasses.replace(cfg, group_size=1)
+
+        def trunk_step(params, pool, tables, lengths, tokens, _cfg=dcfg):
+            return moe.paged_trunk_step(
+                _cfg, params, pool, tables, lengths, tokens)
+
+        def head_fn(params, hidden, _cfg=dcfg):
+            return moe.head(_cfg, params, hidden)
+
+        def step(params, pool, tables, lengths, tokens, _cfg=dcfg):
+            return moe.paged_decode_step(
+                _cfg, params, pool, tables, lengths, tokens)
+
+        def step_unpaged(params, cache, tokens, _cfg=dcfg):
+            return moe.decode_step(_cfg, params, cache, tokens)
+
+        def init_pool(num_pages, page_size, _cfg=dcfg):
+            return moe.init_kv_pool(_cfg, num_pages, page_size)
+
+        def init_cache(batch, max_len, _cfg=dcfg):
+            return moe.init_cache(_cfg, batch, max_len)
+
+        bank = None
+        if sp.bank_suffix is not None:
+            def bank(bank_params, hidden, _cfg=dcfg):
+                return moe.bank_head(_cfg, bank_params, hidden)
+
+        def prefill_chunk(params, pool, tables, lengths, tokens, _cfg=dcfg):
+            return moe.paged_prefill_chunk(
+                _cfg, params, pool, tables, lengths, tokens)
+
+        return DecodeSplit(trunk_step, head_fn, step, step_unpaged,
+                           init_pool, init_cache, sp.prefix_paths,
+                           head_paths=sp.suffix_paths,
+                           head_signature=sp.suffix_signature,
+                           bank_head=bank,
+                           prefill_chunk=prefill_chunk)
+
+
 class FamilyAdapter(MergeableAdapter):
     """Records-only adapter over a :class:`ModelFamily`: any zoo family
     merges (shared records path over params or ``eval_shape`` trees);
@@ -526,6 +831,19 @@ class FamilyAdapter(MergeableAdapter):
 
     def loss(self, cfg, params, batch):
         return self.fam.loss(cfg, params, batch)
+
+    def forward_batch(self, cfg, params, batch: dict):
+        # family-specific batch layouts (module docstring) so the default
+        # accuracy tier covers the records-only families too
+        if self.name == "vlm":
+            logits = self.fam.forward(
+                cfg, params, batch["tokens"], batch["patch_embeds"])
+            return logits[:, batch["patch_embeds"].shape[1]:, :]
+        if self.name == "encdec":
+            return self.fam.forward(
+                cfg, params, batch["src_embeds"], batch["tokens"])
+        out = self.fam.forward(cfg, params, batch["tokens"])
+        return out[0] if isinstance(out, tuple) else out
 
 
 # ---------------------------------------------------------------------------
@@ -550,5 +868,8 @@ def adapter_names() -> list:
 
 register_adapter(SmallCNNAdapter())
 register_adapter(DenseLMAdapter())
-for _name in ("moe", "ssm", "hybrid", "vlm", "encdec"):
+register_adapter(MoEAdapter())
+register_adapter(SSMAdapter())
+register_adapter(GriffinAdapter())
+for _name in ("vlm", "encdec"):
     register_adapter(FamilyAdapter(FAMILIES[_name]))

@@ -20,7 +20,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.distributed.sharding import constrain
+from repro.kernels import ops as kops
 from repro.models import layers as L
+from repro.utils.tree import flatten_paths
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,16 +101,21 @@ def init(cfg: MambaConfig, key) -> dict:
 # ---------------------------------------------------------------------------
 
 
-def _ssm_coeffs(cfg: MambaConfig, p: dict, xc: jax.Array):
+def _ssm_coeffs(cfg: MambaConfig, p: dict, xc: jax.Array,
+                taps: Optional[dict] = None, tap_path: str = ""):
     """xc: (B, S, di) post-conv activations. Returns the *compact* coefficient
     set (dt, dtx, Bmat, Cmat, A); the (B,S,di,n) decay/input tensors are only
     ever formed per-chunk inside the fused scan to bound live memory."""
     r, n = cfg.dt_rank, cfg.d_state
     dbc = L.dense(xc, p["x_proj"]["w"])  # (B,S,r+2n)
+    if taps is not None:
+        taps[tap_path + "/x_proj"] = dbc
     dt_r, Bmat, Cmat = jnp.split(dbc, [r, r + n], axis=-1)
     dt = jax.nn.softplus(
         L.dense(dt_r, p["dt_proj"]["w"]).astype(jnp.float32) + p["dt_proj"]["b"].astype(jnp.float32)
     )  # (B,S,di)
+    if taps is not None:
+        taps[tap_path + "/dt_proj"] = dt
     A = -jnp.exp(p["A_log"])  # (di, n)
     dtx = dt * xc.astype(jnp.float32)  # (B,S,di)
     return dt, dtx, Bmat.astype(jnp.float32), Cmat.astype(jnp.float32), A
@@ -126,9 +133,18 @@ def _scan_fused(dt, dtx, Bmat, Cmat, A, h0, chunk: int, unroll: bool = False):
     B, S, di = dt.shape
     n = A.shape[1]
     chunk = min(chunk, S)
-    if S % chunk != 0:
-        chunk = S  # fall back to one chunk (small inputs)
-    nc = S // chunk
+    pad = (-S) % chunk
+    if pad:
+        # Zero-padded tail steps are EXACT identities for the recurrence
+        # (dt=0 -> decay exp(0*A)=1, dtx=0 -> no input injected), so ragged S
+        # keeps the documented O(chunk*d_inner*d_state) live-memory bound
+        # instead of degenerating to one whole-sequence chunk; h_last is
+        # exact because the padded steps carry the state through unchanged.
+        dt, dtx, Bmat, Cmat = (
+            jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+            for t in (dt, dtx, Bmat, Cmat))
+    Sp = S + pad
+    nc = Sp // chunk
 
     def to_chunks(x):
         return x.reshape(B, nc, chunk, *x.shape[2:]).swapaxes(0, 1)
@@ -157,8 +173,32 @@ def _scan_fused(dt, dtx, Bmat, Cmat, A, h0, chunk: int, unroll: bool = False):
         h_last, y_chunks = h, jnp.stack(ys)
     else:
         h_last, y_chunks = jax.lax.scan(body, h0, (dt_c, dtx_c, B_c, C_c))
-    y = y_chunks.swapaxes(0, 1).reshape(B, S, di)
+    y = y_chunks.swapaxes(0, 1).reshape(B, Sp, di)[:, :S]
     return y, h_last
+
+
+def _run_scan(cfg: MambaConfig, dt, dtx, Bmat, Cmat, A, h0):
+    """Route the selective scan through the ``kernels.ops`` dispatch seam so
+    ``REPRO_KERNEL_MODE`` governs this hot path (the Pallas kernel /
+    interpret body / jnp oracle all sit behind ``ops.mamba_scan``).  Ragged
+    sequence lengths zero-pad up to the next chunk multiple — exact identity
+    steps for the recurrence (see :func:`_scan_fused`) — and slice back.
+
+    The dry-run cost probe (``probe_unroll``) keeps the private python-loop
+    chunked scan: XLA's cost model counts ``while`` bodies once, so the probe
+    needs unrolled HLO, which the kernel entry point never emits."""
+    if cfg.probe_unroll:
+        # repro: allow[A103] dry-run cost probe needs python-unrolled chunk HLO
+        return _scan_fused(dt, dtx, Bmat, Cmat, A, h0, cfg.chunk, unroll=True)
+    B, S, di = dt.shape
+    chunk = min(cfg.chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        dt, dtx, Bmat, Cmat = (
+            jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+            for t in (dt, dtx, Bmat, Cmat))
+    y, h_last = kops.mamba_scan(dt, dtx, Bmat, Cmat, A, h0, chunk=chunk)
+    return y[:, :S], h_last
 
 
 def _conv1d(xz: jax.Array, w: jax.Array, b: jax.Array, history: Optional[jax.Array] = None):
@@ -176,32 +216,46 @@ def _conv1d(xz: jax.Array, w: jax.Array, b: jax.Array, history: Optional[jax.Arr
     return out.astype(xz.dtype), new_hist
 
 
-def _mixer(cfg: MambaConfig, p: dict, x: jax.Array, state: Optional[dict] = None):
+def _mixer(cfg: MambaConfig, p: dict, x: jax.Array, state: Optional[dict] = None,
+           taps: Optional[dict] = None, tap_path: str = ""):
     """x: (B,S,d). state: {"h": (B,di,n), "conv": (B,K-1,di)} or None.
     Returns (y (B,S,d), new_state)."""
     B, S, _ = x.shape
     di = cfg.d_inner
     xz = L.dense(x, p["in_proj"]["w"])  # (B,S,2di)
+    if taps is not None:
+        taps[tap_path + "/in_proj"] = xz
     x_ssm, z = jnp.split(xz, 2, axis=-1)
     x_ssm = constrain(x_ssm, "batch", "seq_act", "inner")
     conv_hist = state["conv"] if state is not None else None
     xc, new_conv = _conv1d(x_ssm, p["conv"]["w"], p["conv"]["b"], conv_hist)
     xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    if taps is not None:
+        taps[tap_path + "/conv"] = xc
 
-    dt, dtx, Bmat, Cmat, A = _ssm_coeffs(cfg, p, xc)
+    dt, dtx, Bmat, Cmat, A = _ssm_coeffs(cfg, p, xc, taps=taps, tap_path=tap_path)
     h0 = state["h"] if state is not None else jnp.zeros((B, di, cfg.d_state), jnp.float32)
-    y, h_last = _scan_fused(dt, dtx, Bmat, Cmat, A, h0, cfg.chunk,
-                            unroll=cfg.probe_unroll)
+    y, h_last = _run_scan(cfg, dt, dtx, Bmat, Cmat, A, h0)
     y = y + p["D"].astype(jnp.float32) * xc.astype(jnp.float32)
+    if taps is not None:
+        # keyed on the mixer prefix itself: the direct-leaf records (A_log, D)
+        # map here under core.policy.default_layer_key
+        taps[tap_path] = y
     y = y * jax.nn.silu(z.astype(jnp.float32))
     out = L.dense(y.astype(x.dtype), p["out_proj"]["w"])
+    if taps is not None:
+        taps[tap_path + "/out_proj"] = out
     new_state = {"h": h_last, "conv": new_conv}
     return out, new_state
 
 
-def _block(cfg: MambaConfig, p: dict, x: jax.Array, state: Optional[dict] = None):
+def _block(cfg: MambaConfig, p: dict, x: jax.Array, state: Optional[dict] = None,
+           taps: Optional[dict] = None, tap_path: str = ""):
     h = L.apply_norm(cfg.norm, x, p["ln"])
-    y, new_state = _mixer(cfg, p["mixer"], h, state)
+    if taps is not None:
+        taps[tap_path + "/ln"] = h
+    y, new_state = _mixer(cfg, p["mixer"], h, state, taps=taps,
+                          tap_path=tap_path + "/mixer")
     return x + y, new_state
 
 
@@ -215,11 +269,21 @@ def _maybe_remat(cfg: MambaConfig, fn):
     raise ValueError(cfg.remat_policy)
 
 
-def forward(cfg: MambaConfig, params: dict, tokens: jax.Array,
-            positions: Optional[jax.Array] = None) -> jax.Array:
-    B, S = tokens.shape
+def trunk(cfg: MambaConfig, params: dict, tokens: jax.Array,
+          positions: Optional[jax.Array] = None,
+          taps: Optional[dict] = None) -> jax.Array:
+    """Embedding + mamba blocks — the mergeable *prefix*.  Returns
+    pre-final-norm hidden states (B, S, d); ``head(trunk(x))`` is bitwise
+    :func:`forward` by construction (forward IS that composition).  ``taps``
+    (per-layer probes keyed by param-path prefix) need ``scan_layers=False``
+    — stacked leaves have no per-layer paths to key on."""
+    del positions  # recurrence is position-aware by construction; no rope
     x = L.embed(tokens, params["embed"]["table"])
     x = constrain(x, "batch", "seq_act", "embed")
+    if taps is not None:
+        if cfg.scan_layers:
+            raise ValueError("calibration taps need scan_layers=False")
+        taps["embed"] = x
     block = _maybe_remat(cfg, lambda p, h: _block(cfg, p, h)[0])
     if cfg.scan_layers:
         def body(h, p):
@@ -227,13 +291,87 @@ def forward(cfg: MambaConfig, params: dict, tokens: jax.Array,
         x, _ = jax.lax.scan(body, x, params["blocks"])
     else:
         for i in range(cfg.n_layers):
-            x = block(params["blocks"][str(i)], x)
+            if taps is None:
+                x = block(params["blocks"][str(i)], x)
+            else:
+                x, _ = _block(cfg, params["blocks"][str(i)], x,
+                              taps=taps, tap_path=f"blocks/{i}")
+    return x
+
+
+def head(cfg: MambaConfig, params: dict, x: jax.Array,
+         taps: Optional[dict] = None) -> jax.Array:
+    """Final norm + unembedding — the private *suffix* fan-out."""
     x = L.apply_norm(cfg.norm, x, params["final_norm"])
+    if taps is not None and params["final_norm"]:
+        taps["final_norm"] = x
     if cfg.tie_embeddings:
         logits = L.unembed(x, params["embed"]["table"], transpose=True)
     else:
         logits = L.unembed(x, params["lm_head"]["w"], transpose=False)
-    return constrain(logits, "batch", "seq_act", "vocab")
+    logits = constrain(logits, "batch", "seq_act", "vocab")
+    if taps is not None and not cfg.tie_embeddings:
+        taps["lm_head"] = logits
+    return logits
+
+
+def forward(cfg: MambaConfig, params: dict, tokens: jax.Array,
+            positions: Optional[jax.Array] = None) -> jax.Array:
+    return head(cfg, params, trunk(cfg, params, tokens, positions))
+
+
+def trunk_paths(params: dict) -> frozenset:
+    """Flat param paths read by :func:`trunk` (everything outside the
+    final-norm/lm-head suffix)."""
+    return frozenset(p for p in flatten_paths(params)
+                     if not p.startswith(("final_norm/", "lm_head/")))
+
+
+def head_paths(params: dict, tied: bool = False) -> frozenset:
+    """Flat param paths read by :func:`head`; tied-embedding configs read the
+    embedding table inside the head, so it joins the set."""
+    out = frozenset(p for p in flatten_paths(params)
+                    if p.startswith(("final_norm/", "lm_head/")))
+    if tied:
+        out = out | {"embed/table"}
+    return out
+
+
+def bank_head(cfg: MambaConfig, bank_params: dict, x: jax.Array,
+              mode: Optional[str] = None) -> jax.Array:
+    """Every private head of a merged mamba group in ONE dispatch
+    (DESIGN.md S2): banked final norm + one ``ops.bank_matmul`` grouped-GEMM
+    unembedding.  ``ref`` mode unrolls the per-member heads inside one trace
+    (bitwise identical to the per-member serving path — the oracle
+    contract).  Tied-embedding configs are not banked."""
+    n_bank = jax.tree_util.tree_leaves(bank_params)[0].shape[0]
+    mode = mode or kops.default_mode()
+    if mode == "ref":
+        members = [jax.tree_util.tree_map(lambda l: l[i], bank_params)
+                   for i in range(n_bank)]
+        return jnp.stack([head(cfg, m, x) for m in members])
+    if cfg.tie_embeddings:
+        raise ValueError("tied-embedding heads have no bank path")
+    fn = bank_params.get("final_norm") or {}
+    if fn:
+        xn = jax.vmap(lambda p: L.apply_norm(cfg.norm, x, p))(fn)
+    else:  # non-parametric norm: one shared normalisation, broadcast
+        xn = jnp.broadcast_to(L.apply_norm(cfg.norm, x, fn),
+                              (n_bank,) + x.shape)
+    B, S, d = x.shape
+    logits = kops.bank_matmul(xn.reshape(n_bank, B * S, d),
+                              bank_params["lm_head"]["w"], mode=mode)
+    return logits.reshape(n_bank, B, S, -1)
+
+
+def layer_activations(cfg: MambaConfig, params: dict,
+                      tokens: jax.Array) -> dict:
+    """Calibration-batch activations for every layer, keyed by param-path
+    prefix (``core.policy.default_layer_key``).  Non-scan configs only."""
+    taps: dict = {}
+    x = trunk(cfg, params, tokens, taps=taps)
+    head(cfg, params, x, taps=taps)
+    return {k: np.asarray(v) for k, v in taps.items()}
 
 
 def loss_fn(cfg: MambaConfig, params: dict, batch: dict) -> jax.Array:
@@ -292,3 +430,97 @@ def decode_step(cfg: MambaConfig, params: dict, cache: dict, tokens: jax.Array):
 def prefill(cfg: MambaConfig, params: dict, tokens: jax.Array, max_len: int = 0):
     cache = init_cache(cfg, tokens.shape[0])
     return decode_step(cfg, params, cache, tokens)
+
+
+# ---------------------------------------------------------------------------
+# Paged decode (DESIGN.md D1): O(1) recurrent state in the serving pool
+# ---------------------------------------------------------------------------
+
+
+def init_state_pool(cfg: MambaConfig, num_pages: int, page_size: int,
+                    dtype=None) -> dict:
+    """Pool of recurrent states for :class:`serving.decode.PagedKVPool`.
+
+    Mamba state is O(1) per request — independent of sequence length — so a
+    request's whole state lives in its FIRST page slot (``tables[:, 0]``);
+    ``page_size`` only shapes the admission ledger, not the state footprint.
+    Keys mirror the KV pools ("k" = scan state h, "v" = conv history) so the
+    decode loop's pool plumbing is family-agnostic."""
+    del page_size
+    return {
+        "k": jnp.zeros((cfg.n_layers, num_pages, cfg.d_inner, cfg.d_state),
+                       jnp.float32),
+        "v": jnp.zeros((cfg.n_layers, num_pages, cfg.d_conv - 1, cfg.d_inner),
+                       dtype or cfg.dtype),
+    }
+
+
+def paged_trunk_step(cfg: MambaConfig, params: dict, pool: dict,
+                     tables: jax.Array, lengths: jax.Array,
+                     tokens: jax.Array):
+    """One decode step over the paged state pool: gather each row's state
+    from its page-0 slot, run the SAME per-layer ops as :func:`decode_step`,
+    scatter the updated state back.  Rows with ``lengths == 0`` (fresh
+    admissions onto possibly-recycled pages) read exact zeros — and the
+    full-state write-back then clears the recycled slot, so every later step
+    matches the unpaged zero-initialised cache bitwise.
+
+    tokens (B,) int32 -> (hidden (B, 1, d), new_pool)."""
+    tables = tables.astype(jnp.int32)
+    lengths = lengths.astype(jnp.int32)
+    sid = tables[:, 0]
+    fresh = lengths == 0
+
+    def gather(a):
+        g = a[:, sid]  # (L, B, ...)
+        mask = fresh.reshape((1, -1) + (1,) * (g.ndim - 2))
+        return jnp.where(mask, jnp.zeros_like(g), g)
+
+    states = {"h": gather(pool["k"]), "conv": gather(pool["v"])}
+    x = L.embed(tokens[:, None], params["embed"]["table"])
+    if cfg.scan_layers:
+        def body(h, xs):
+            p, st = xs
+            h, new_st = _block(cfg, p, h, st)
+            return h, new_st
+        x, new_states = jax.lax.scan(body, x, (params["blocks"], states))
+    else:
+        hs, cs = [], []
+        for i in range(cfg.n_layers):
+            st = {"h": states["h"][i], "conv": states["conv"][i]}
+            x, nst = _block(cfg, params["blocks"][str(i)], x, st)
+            hs.append(nst["h"]); cs.append(nst["conv"])
+        new_states = {"h": jnp.stack(hs), "conv": jnp.stack(cs)}
+    # duplicate row ids (the decode loop pads partial groups by replicating
+    # the last real row) scatter identical values — deterministic
+    new_pool = {
+        "k": pool["k"].at[:, sid].set(new_states["h"]),
+        "v": pool["v"].at[:, sid].set(new_states["conv"].astype(pool["v"].dtype)),
+    }
+    return x, new_pool
+
+
+def paged_prefill_chunk(cfg: MambaConfig, params: dict, pool: dict,
+                        tables: jax.Array, lengths: jax.Array,
+                        tokens: jax.Array):
+    """Chunked prefill: C tokens per row in one call, python-unrolled over
+    :func:`paged_trunk_step` so it is bitwise the token-by-token path.
+
+    tokens (B, C) -> (hidden (B, C, d), new_pool)."""
+    C = tokens.shape[1]
+    lengths = lengths.astype(jnp.int32)
+    hs = []
+    for c in range(C):
+        h, pool = paged_trunk_step(cfg, params, pool, tables,
+                                   lengths + jnp.int32(c), tokens[:, c])
+        hs.append(h)
+    return jnp.concatenate(hs, axis=1), pool
+
+
+def paged_decode_step(cfg: MambaConfig, params: dict, pool: dict,
+                      tables: jax.Array, lengths: jax.Array,
+                      tokens: jax.Array):
+    """Full paged step for singleton (unmerged) programs: trunk + head."""
+    hidden, new_pool = paged_trunk_step(cfg, params, pool, tables, lengths,
+                                        tokens)
+    return head(cfg, params, hidden), new_pool

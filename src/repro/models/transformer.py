@@ -623,6 +623,8 @@ def _block_prefill(cfg: DenseLMConfig, p: dict, x: jax.Array,
     q = constrain(q, "batch", "seq", "heads", None)
     k = constrain(k, "batch", "seq", "kv_heads", None)
     v = constrain(v, "batch", "seq", "kv_heads", None)
+    # repro: allow[A103] prefill needs the blocked flash-analogue with its
+    # padded-KV emit layout; kernel routing lives in _block/_block_decode
     attn = L.blocked_causal_attention(
         q, k, v, positions, window=cfg.window,
         block_q=cfg.prefill_block_q, unroll=cfg.probe_unroll,

@@ -24,9 +24,10 @@ from repro.utils.tree import flatten_paths
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
 from benchmarks import lm_merging as LM  # noqa: E402
 
-ALL_FAMILIES = sorted(ADAPTERS)  # incl. records-only moe/ssm/hybrid/vlm/encdec
+ALL_FAMILIES = sorted(ADAPTERS)  # incl. records-only vlm/encdec
 SPLIT_FAMILIES = sorted(n for n, a in ADAPTERS.items() if a.can_split)
 CALIB_FAMILIES = sorted(n for n, a in ADAPTERS.items() if a.can_calibrate)
+DECODE_FAMILIES = sorted(n for n, a in ADAPTERS.items() if a.can_decode)
 
 
 def _payload(adapter, cfg, key):
@@ -124,6 +125,111 @@ def test_loss_accuracy_on_calibration_batch(family):
     batch = adapter.calibration_batch(cfg, jax.random.PRNGKey(1), 4)
     assert np.isfinite(float(adapter.loss(cfg, params, batch)))
     assert 0.0 <= float(adapter.accuracy(cfg, params, batch)) <= 1.0
+
+
+@pytest.mark.parametrize("family", SPLIT_FAMILIES)
+def test_bank_suffix_matches_per_member_heads_bitwise(family):
+    """Suffix-bank tier (DESIGN.md S2): stacking two members' private-head
+    leaves and fanning out through ``bank_suffix`` on a reconstructed shared
+    micro-batch must reproduce each member's ``suffix`` output bitwise (ref
+    kernel mode unrolls the per-member contraction)."""
+    from repro.utils.tree import unflatten_paths
+
+    adapter = get_adapter(family)
+    cfg = adapter.default_config()
+    sp = adapter.split(cfg)
+    if sp.bank_suffix is None:
+        pytest.skip(f"{family}: no bank tier for this cfg")
+    members = [adapter.init(cfg, jax.random.PRNGKey(i)) for i in range(2)]
+    x = _payload(adapter, cfg, jax.random.PRNGKey(7))
+    feats = sp.prefix(members[0], x)  # the shared trunk's micro-batch
+    flat = [flatten_paths(p) for p in members]
+    bank = unflatten_paths({
+        path: jnp.stack([f[path] for f in flat]) for path in sp.suffix_paths
+    })
+    banked = np.asarray(sp.bank_suffix(bank, feats))
+    for i, p in enumerate(members):
+        direct = np.asarray(sp.suffix(p, feats))
+        np.testing.assert_array_equal(banked[i], direct)
+
+
+@pytest.mark.parametrize("family", DECODE_FAMILIES)
+def test_decode_paged_matches_unpaged_bitwise(family):
+    """Streaming-decode tier: the paged pool path must be bitwise identical
+    to the family's contiguous-cache decode at every step — the replay
+    oracle ``serving.decode.verify_bitwise`` relies on (incl. the promoted
+    ssm (h, conv) state, the griffin ring-buffer KV, and moe per-token
+    routing)."""
+    adapter = get_adapter(family)
+    cfg = adapter.default_config()
+    ds = adapter.decode_split(cfg)
+    B, max_len, page = 2, 16, 4
+    maxp = max_len // page
+    cache = ds.init_cache(B, max_len)
+    pool = ds.init_pool(B * maxp, page)
+    tables = jnp.arange(B * maxp, dtype=jnp.int32).reshape(B, maxp)
+    lengths = jnp.zeros((B,), jnp.int32)
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, 9), 0, cfg.vocab_size)
+    params = adapter.init(cfg, jax.random.PRNGKey(0))
+    # chunked admission of a 4-token prompt, when the family supports it
+    start = 0
+    if ds.prefill_chunk is not None:
+        _, pool = ds.prefill_chunk(params, pool, tables, lengths, toks[:, :4])
+        for t in range(4):
+            _, cache = ds.step_unpaged(params, cache, toks[:, t][:, None])
+        lengths = lengths + 4
+        start = 4
+    for t in range(start, toks.shape[1]):
+        lu, cache = ds.step_unpaged(params, cache, toks[:, t][:, None])
+        lp, pool = ds.step(params, pool, tables, lengths, toks[:, t])
+        np.testing.assert_array_equal(np.asarray(lu), np.asarray(lp))
+        # trunk_step + head composes to the full step bitwise
+        lengths = lengths + 1
+    assert adapter.decode_split(cfg) is ds  # cached per cfg
+
+
+def _drift_batch(adapter, cfg, key):
+    """A labels-bearing batch in the family's layout (module docstring of
+    models.registry) for the DriftMonitor accuracy tier."""
+    if adapter.can_calibrate:
+        return adapter.calibration_batch(cfg, key, 4)
+    k1, k2, k3 = jax.random.split(key, 3)
+    toks = jax.random.randint(k1, (2, 9), 0, cfg.vocab_size)
+    batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    if adapter.name == "vlm":
+        batch["patch_embeds"] = jax.random.normal(
+            k2, (2, 4, cfg.d_model), cfg.dtype)
+    elif adapter.name == "encdec":
+        batch["src_embeds"] = jax.random.normal(
+            k3, (2, 6, cfg.d_model), cfg.dtype)
+    return batch
+
+
+@pytest.mark.parametrize("family", ALL_FAMILIES)
+def test_default_accuracy_works_for_every_family(family):
+    """ISSUE 10 satellite: ``accuracy`` must work on EVERY registered
+    adapter (argmax-vs-labels derived from forward), records-only families
+    included — DriftMonitor watches all of them."""
+    adapter = ADAPTERS[family]
+    cfg = adapter.default_config()
+    params = adapter.init(cfg, jax.random.PRNGKey(0))
+    batch = _drift_batch(adapter, cfg, jax.random.PRNGKey(1))
+    acc = float(adapter.accuracy(cfg, params, batch))
+    assert 0.0 <= acc <= 1.0
+
+
+def test_unsupported_tiers_raise_named_capability_errors():
+    """Records-only adapters fail the calibrate/split/decode tiers with the
+    capability-flagged `<name>: no ...` message, never a bare
+    NotImplementedError."""
+    adapter = get_adapter("vlm")
+    cfg = adapter.default_config()
+    with pytest.raises(NotImplementedError, match="vlm: no calibration"):
+        adapter.calibration_batch(cfg, jax.random.PRNGKey(0), 2)
+    with pytest.raises(NotImplementedError, match="vlm: no prefix/suffix"):
+        adapter.split(cfg)
+    with pytest.raises(NotImplementedError, match="vlm: no streaming decode"):
+        adapter.decode_split(cfg)
 
 
 def test_scorer_and_surrogate_from_adapters_match_plain_construction():

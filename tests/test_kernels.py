@@ -93,6 +93,97 @@ def test_mamba_scan_sweep(dtype, S, di, n, chunk, bdi, rng):
                                np.asarray(hlr, np.float32), **tol)
 
 
+# ---------------------------------------------------------------------------
+# Model-shaped scan sweeps through the ops dispatch seam (ISSUE 10): the
+# shapes the promoted ssm/griffin serving paths actually emit, including
+# ragged sequence lengths that exercise the identity-padded tail chunk
+# (dt=0 / a=1, b=0 pads are exact no-ops for the recurrences), in BOTH the
+# ref oracle and interpret mode.  In ref mode the padded-then-sliced result
+# must be bitwise the unpadded oracle — that is the serving contract
+# benchmarks/mixed_zoo.py gates on.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["ref", "interpret"])
+@pytest.mark.parametrize("B,S,di,n,chunk", [
+    (2, 13, 64, 8, 16),   # ssm adapter tiny config, ragged S
+    (1, 16, 64, 8, 16),   # exact chunk multiple
+    (2, 40, 128, 8, 32),  # two full chunks + ragged tail
+])
+def test_mamba_scan_model_shaped_modes(mode, B, S, di, n, chunk, rng):
+    ks = jax.random.split(rng, 5)
+    dt = jax.nn.softplus(jax.random.normal(ks[0], (B, S, di)))
+    dtx = jax.random.normal(ks[1], (B, S, di))
+    Bm = jax.random.normal(ks[2], (B, S, n))
+    Cm = jax.random.normal(ks[3], (B, S, n))
+    A = -jnp.exp(jax.random.normal(ks[4], (di, n)) * 0.5)
+    h0 = jnp.zeros((B, di, n))
+    # identity-pad exactly as ssm._run_scan does before dispatching
+    pad = (-S) % chunk
+    args = [dt, dtx, Bm, Cm]
+    if pad:
+        args = [jnp.pad(a, [(0, 0), (0, pad), (0, 0)]) for a in args]
+    y, hl = ops.mamba_scan(*args, A, h0, chunk=chunk,
+                           block_di=min(512, di), mode=mode)
+    y = y[:, :S]
+    yr, hlr = R.mamba_scan_ref(dt, dtx, Bm, Cm, A, h0)
+    if mode == "ref":
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+        np.testing.assert_array_equal(np.asarray(hl), np.asarray(hlr))
+    else:
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                                   rtol=1e-2, atol=1e-2)
+        np.testing.assert_allclose(np.asarray(hl), np.asarray(hlr),
+                                   rtol=1e-2, atol=1e-2)
+
+
+@pytest.mark.parametrize("mode", ["ref", "interpret"])
+@pytest.mark.parametrize("B,S,d,chunk", [
+    (2, 13, 32, 16),   # griffin adapter tiny config, ragged S
+    (1, 16, 32, 16),   # exact chunk multiple
+    (2, 40, 128, 32),  # two full chunks + ragged tail
+])
+def test_rg_lru_model_shaped_modes(mode, B, S, d, chunk, rng):
+    ks = jax.random.split(rng, 3)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (B, S, d)))
+    b = jax.random.normal(ks[1], (B, S, d))
+    h0 = jax.random.normal(ks[2], (B, d))
+    # identity-pad exactly as griffin._run_scan_diag does (a=1, b=0)
+    pad = (-S) % chunk
+    ap, bp = a, b
+    if pad:
+        ap = jnp.pad(a, [(0, 0), (0, pad), (0, 0)], constant_values=1.0)
+        bp = jnp.pad(b, [(0, 0), (0, pad), (0, 0)])
+    y, hl = ops.rg_lru_scan(ap, bp, h0, chunk=chunk,
+                            block_d=min(512, d), mode=mode)
+    y = y[:, :S]
+    yr, hlr = R.rg_lru_ref(a, b, h0)
+    if mode == "ref":
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+        np.testing.assert_array_equal(np.asarray(hl), np.asarray(hlr))
+    else:
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr), **TOL)
+        np.testing.assert_allclose(np.asarray(hl), np.asarray(hlr), **TOL)
+
+
+def test_dispatch_counters_track_trace_time_dispatches(rng):
+    """The dead-kernel observable: dispatch counts increment per traced op
+    (benchmarks/mixed_zoo.py gates mamba_scan/rg_lru_scan > 0 on it)."""
+    ops.reset_dispatch_counts()
+    assert ops.dispatch_counts() == {}
+    ks = jax.random.split(rng, 3)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (1, 16, 32)))
+    b = jax.random.normal(ks[1], (1, 16, 32))
+    h0 = jnp.zeros((1, 32))
+    ops.rg_lru_scan(a, b, h0, mode="ref")
+    ops.rg_lru_scan(a, b, h0, mode="ref")
+    counts = ops.dispatch_counts()
+    assert counts.get("rg_lru_scan") == 2
+    assert "mamba_scan" not in counts
+    ops.reset_dispatch_counts()
+    assert ops.dispatch_counts() == {}
+
+
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("N,M,K,F,bm,bk,bf", [
     (3, 8, 32, 64, 8, 32, 64),      # serving-head scale, single block
